@@ -1,0 +1,51 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+artifact. Also computes the roofline fraction (useful compute time /
+dominant term) used to pick hillclimb targets."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}u"
+    if x < 1:
+        return f"{x*1e3:.1f}m"
+    return f"{x:.2f}s"
+
+
+def render(path: str = "dryrun_results.json", mesh: str = "16x16"):
+    cells = [c for c in json.load(open(path)) if c["mesh"] == mesh]
+    lines = []
+    header = (
+        "| arch | shape | t_compute | t_memory | t_coll | dominant | "
+        "roofline frac | useful ratio | peak GB/dev |"
+    )
+    lines.append(header)
+    lines.append("|" + "---|" * 9)
+    rows = []
+    for c in cells:
+        rf = c["roofline"]
+        tc, tm, tx = (
+            rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"]
+        )
+        dom = max(tc, tm, tx)
+        frac = (tc / dom) if dom > 0 else 0.0
+        ur = c.get("model_vs_hlo")
+        rows.append((c["arch"], c["shape"], tc, tm, tx,
+                     rf["dominant"].replace("t_", "").replace("_s", ""),
+                     frac, ur, c["mem"]["peak_bytes"] / 2**30))
+    for r in sorted(rows):
+        lines.append(
+            f"| {r[0]} | {r[1]} | {fmt(r[2])} | {fmt(r[3])} | {fmt(r[4])} "
+            f"| {r[5]} | {r[6]:.2f} | "
+            f"{('%.2f' % r[7]) if r[7] else '-'} | {r[8]:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(render(*sys.argv[1:]))

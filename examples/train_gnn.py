@@ -1,0 +1,104 @@
+"""Train a GNN on a DYNAMIC graph with maintained core-number features.
+
+The paper's technique as a first-class feature: between training steps the
+graph receives edge bursts; core numbers are maintained (not recomputed)
+and fed to the model as structural node features. Checkpointed + resumable.
+
+    PYTHONPATH=src python examples/train_gnn.py --steps 60
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import CoreMaintainer
+from repro.graph.generators import erdos_renyi
+from repro.graph.stream import synthetic_stream
+from repro.models.gnn import GraphBatch, PNAConfig, pna_forward, pna_init
+from repro.train.loop import TrainConfig, run_training
+
+
+def make_batch(m: CoreMaintainer, feats, edge_cap: int) -> GraphBatch:
+    src = np.asarray(m.src)
+    dst = np.asarray(m.dst)
+    ok = np.asarray(m.valid)
+    cores = m.cores().astype(np.float32)
+    senders = np.zeros(edge_cap, dtype=np.int32)
+    receivers = np.zeros(edge_cap, dtype=np.int32)
+    emask = np.zeros(edge_cap, dtype=bool)
+    idx = np.nonzero(ok)[0][: edge_cap // 2]
+    k = len(idx)
+    senders[:k], receivers[:k] = src[idx], dst[idx]
+    senders[k:2 * k], receivers[k:2 * k] = dst[idx], src[idx]
+    emask[:2 * k] = True
+    node_feat = np.concatenate(
+        [feats, (cores / (cores.max() + 1e-6))[:, None]], axis=1
+    ).astype(np.float32)
+    n = feats.shape[0]
+    return GraphBatch(
+        node_feat=jnp.asarray(node_feat),
+        senders=jnp.asarray(senders),
+        receivers=jnp.asarray(receivers),
+        edge_mask=jnp.asarray(emask),
+        node_mask=jnp.ones(n, dtype=bool),
+        graph_id=jnp.zeros(n, dtype=jnp.int32),
+        n_graphs=1,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--n", type=int, default=1000)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    g = erdos_renyi(args.n, 4 * args.n, seed=0)
+    m = CoreMaintainer.from_graph(g, capacity=16 * args.n)
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(args.n, 8)).astype(np.float32)
+    # labels planted from (features + initial core structure) — learnable
+    labels = (
+        feats[:, 0] + 0.5 * (m.cores() > np.median(m.cores())) > 0.2
+    ).astype(np.int32)
+
+    cfg = PNAConfig(n_layers=2, d_hidden=32, d_in=9, n_classes=2)
+    params = pna_init(cfg, jax.random.PRNGKey(0))
+
+    stream = synthetic_stream(g, args.steps, 32, seed=7)
+    edge_cap = 16 * args.n
+    labels_j = jnp.asarray(labels)
+
+    def batches():
+        for ev in stream:
+            # maintain cores through the burst, then emit a training batch
+            if ev.kind == "insert":
+                m.insert_edges(ev.edges)
+            else:
+                m.remove_edges(ev.edges)
+            yield make_batch(m, feats, edge_cap), labels_j
+
+    def loss_fn(params, gb, labels):
+        logits = pna_forward(cfg, params, gb)  # [N, 2] node logits
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(nll)
+
+    tc = TrainConfig(lr=3e-3, warmup=5, total_steps=args.steps,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=20)
+    params, report = run_training(
+        params, loss_fn, batches(), tc,
+        on_step=lambda s, mx: print(
+            f"step {s:03d} loss={mx['loss']:.4f} "
+            f"max_core={m.cores().max()}"
+        ) if s % 10 == 0 else None,
+    )
+    hist = report["history"]
+    print(f"\nloss: first={hist[0]['loss']:.4f} last={hist[-1]['loss']:.4f}")
+    assert hist[-1]["loss"] < hist[0]["loss"], "training did not improve"
+    print("dynamic-graph GNN training improved the loss ✓")
+
+
+if __name__ == "__main__":
+    main()

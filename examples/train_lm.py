@@ -1,0 +1,76 @@
+"""Train a small LM end-to-end with the full substrate (data pipeline,
+AdamW, cosine schedule, microbatching, checkpoint/auto-resume).
+
+Default config is CPU-sized; ``--preset 100m`` selects a ~100M-param
+model for real hardware (same code path).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.lm import synthetic_lm_batches
+from repro.models.transformer import LMConfig, init_params, loss_fn
+from repro.train.loop import TrainConfig, run_training
+
+
+def preset(name: str) -> LMConfig:
+    if name == "tiny":
+        return LMConfig(
+            name="tiny", n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+            d_head=32, d_ff=384, vocab=512, dtype=jnp.float32,
+        )
+    if name == "100m":
+        return LMConfig(
+            name="lm-100m", n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=4, d_head=64, d_ff=2048, vocab=32768,
+        )
+    raise ValueError(name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--preset", default="tiny")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--micro-batches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = preset(args.preset)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"model {cfg.name}: {n_params/1e6:.1f}M params")
+
+    data = synthetic_lm_batches(cfg.vocab, args.batch, args.seq, seed=0)
+
+    def batches():
+        for toks, tgts in data:
+            yield jnp.asarray(toks), jnp.asarray(tgts)
+
+    def lf(params, tokens, targets):
+        return loss_fn(cfg, params, tokens, targets)
+
+    tc = TrainConfig(
+        lr=1e-3, warmup=20, total_steps=args.steps, clip_norm=1.0,
+        micro_batches=args.micro_batches,
+        ckpt_dir=args.ckpt_dir, ckpt_every=50,
+    )
+    params, report = run_training(
+        params, lf, batches(), tc,
+        on_step=lambda s, m: print(
+            f"step {s:04d} loss={m['loss']:.4f} lr={m['lr']:.2e}"
+        ) if s % 20 == 0 else None,
+    )
+    hist = report["history"]
+    print(f"\nloss: first={hist[0]['loss']:.4f} last={hist[-1]['loss']:.4f} "
+          f"(stragglers: {report['stragglers']})")
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    print("LM training improved the loss ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro — Parallel Order-Based Core Maintenance as a multi-pod JAX framework.
+
+x64 is enabled globally: the k-order labels are int64 (OM label space).
+All neural-model code uses explicit dtypes (bf16/f32/int32) so this does
+not change their numerics.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,16 @@
+"""Parallel Order-Based Core Maintenance — the paper's contribution.
+
+Layers:
+* ``oracle``        — sequential Simplified-Order / Traversal / BZ (numpy).
+* ``decomposition`` — data-parallel peeling + h-index fixpoint (JAX).
+* ``order``         — k-order label maintenance (OM adaptation, JAX).
+* ``insert``        — batch-parallel order-based insertion maintenance (JAX).
+* ``remove``        — batch-parallel mcd-cascade removal maintenance (JAX).
+* ``api``           — CoreMaintainer public interface (incl. sharded variant).
+"""
+from .oracle import (  # noqa: F401
+    OrderCoreMaintainer,
+    TraversalCoreMaintainer,
+    bz_core_decomposition,
+    bz_from_csr,
+)

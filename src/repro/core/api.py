@@ -1,0 +1,282 @@
+"""CoreMaintainer — the public interface to parallel order-based core
+maintenance.
+
+Host side keeps the edge -> slot dictionary (removals address slots) and
+handles capacity compaction; all per-batch work runs as two jitted
+fixpoint programs (`insert.insert_batch`, `remove.remove_batch`).
+
+Batches are padded to power-of-two sizes so the jit cache stays small.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.csr import CSRGraph, build_csr
+from .decomposition import peel_decomposition, rank_to_labels
+from .insert import InsertStats, insert_batch
+from .oracle import bz_core_decomposition
+from .order import needs_renumber, renumber
+from .remove import RemoveStats, remove_batch
+
+
+def _pad_pow2(x: np.ndarray, fill: int) -> np.ndarray:
+    b = max(1, len(x))
+    p = 1
+    while p < b:
+        p *= 2
+    out = np.full(p, fill, dtype=np.int32)
+    out[: len(x)] = x
+    return out
+
+
+@dataclasses.dataclass
+class CoreMaintainer:
+    """Dynamic-graph core maintenance with k-order labels (JAX)."""
+
+    n: int
+    capacity: int
+    src: jax.Array
+    dst: jax.Array
+    valid: jax.Array
+    n_edges: jax.Array
+    core: jax.Array
+    label: jax.Array
+    edge_slot: Dict[Tuple[int, int], int]
+    n_levels: int
+    last_insert_stats: Optional[InsertStats] = None
+    last_remove_stats: Optional[RemoveStats] = None
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_graph(
+        cls,
+        g: CSRGraph,
+        capacity: Optional[int] = None,
+        init: str = "host-bz",
+    ) -> "CoreMaintainer":
+        edges = g.edge_array()
+        m = edges.shape[0]
+        capacity = capacity or max(16, 2 * m)
+        if capacity <= m:
+            raise ValueError("capacity must exceed edge count")
+        src = np.zeros(capacity, dtype=np.int32)
+        dst = np.zeros(capacity, dtype=np.int32)
+        val = np.zeros(capacity, dtype=bool)
+        src[:m] = edges[:, 0]
+        dst[:m] = edges[:, 1]
+        val[:m] = True
+        edge_slot = {
+            (int(a), int(b)): i for i, (a, b) in enumerate(edges)
+        }
+        n_levels = g.n + 2
+        if init == "host-bz":
+            adj = [set(g.neighbors(v).tolist()) for v in range(g.n)]
+            core_np, order = bz_core_decomposition(g.n, adj)
+            rank = np.zeros(g.n, dtype=np.int32)
+            rank[np.asarray(order, dtype=np.int64)] = np.arange(
+                g.n, dtype=np.int32
+            )
+            core = jnp.asarray(core_np.astype(np.int32))
+            label = rank_to_labels(jnp.asarray(rank))
+        elif init == "jax-peel":
+            core, rank = peel_decomposition(
+                jnp.asarray(src), jnp.asarray(dst), jnp.asarray(val), g.n
+            )
+            label = rank_to_labels(rank)
+        else:
+            raise ValueError(init)
+        return cls(
+            n=g.n,
+            capacity=capacity,
+            src=jnp.asarray(src),
+            dst=jnp.asarray(dst),
+            valid=jnp.asarray(val),
+            n_edges=jnp.asarray(m, dtype=jnp.int32),
+            core=core,
+            label=label,
+            edge_slot=edge_slot,
+            n_levels=n_levels,
+        )
+
+    # -- queries -------------------------------------------------------------
+    def cores(self) -> np.ndarray:
+        return np.asarray(self.core)
+
+    def labels(self) -> np.ndarray:
+        return np.asarray(self.label)
+
+    def order_lt(self, u: int, v: int) -> bool:
+        cu, cv = int(self.core[u]), int(self.core[v])
+        if cu != cv:
+            return cu < cv
+        return int(self.label[u]) < int(self.label[v])
+
+    @property
+    def live_edges(self) -> int:
+        return len(self.edge_slot)
+
+    # -- edits ----------------------------------------------------------------
+    def insert_edges(self, edges: np.ndarray) -> InsertStats:
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        lo = np.minimum(edges[:, 0], edges[:, 1])
+        hi = np.maximum(edges[:, 0], edges[:, 1])
+        keep, seen = [], set()
+        for a, b in zip(lo.tolist(), hi.tolist()):
+            key = (a, b)
+            if a == b or key in seen or key in self.edge_slot:
+                continue
+            seen.add(key)
+            keep.append(key)
+        if not keep:
+            self.last_insert_stats = None
+            return InsertStats(jnp.int32(0), jnp.int32(0), jnp.int32(0))
+        arr = np.asarray(keep, dtype=np.int32)
+        if int(self.n_edges) + arr.shape[0] + 1 >= self.capacity:
+            self._compact()
+            if int(self.n_edges) + arr.shape[0] + 1 >= self.capacity:
+                self._grow(arr.shape[0])
+        base = int(self.n_edges)
+        for i, key in enumerate(keep):
+            self.edge_slot[key] = base + i
+        new_src = _pad_pow2(arr[:, 0], 0)
+        new_dst = _pad_pow2(arr[:, 1], 0)
+        new_ok = np.zeros(len(new_src), dtype=bool)
+        new_ok[: arr.shape[0]] = True
+        (
+            self.src,
+            self.dst,
+            self.valid,
+            self.n_edges,
+            self.core,
+            self.label,
+            stats,
+        ) = insert_batch(
+            self.src,
+            self.dst,
+            self.valid,
+            self.core,
+            self.label,
+            jnp.asarray(new_src),
+            jnp.asarray(new_dst),
+            jnp.asarray(new_ok),
+            self.n_edges,
+            self.n,
+            self.n_levels,
+        )
+        self._maybe_renumber()
+        self.last_insert_stats = stats
+        return stats
+
+    def remove_edges(self, edges: np.ndarray) -> RemoveStats:
+        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        slots = []
+        for a, b in edges:
+            key = (int(min(a, b)), int(max(a, b)))
+            slot = self.edge_slot.pop(key, None)
+            if slot is not None:
+                slots.append(slot)
+        if not slots:
+            self.last_remove_stats = None
+            return RemoveStats(jnp.int32(0), jnp.int32(0))
+        padded = _pad_pow2(np.asarray(slots, dtype=np.int32), -1)
+        self.valid, self.core, self.label, stats = remove_batch(
+            self.src,
+            self.dst,
+            self.valid,
+            self.core,
+            self.label,
+            jnp.asarray(padded),
+            self.n,
+            self.n_levels,
+        )
+        self._maybe_renumber()
+        self.last_remove_stats = stats
+        return stats
+
+    # -- maintenance -----------------------------------------------------------
+    def _maybe_renumber(self) -> None:
+        if bool(needs_renumber(self.label)):
+            self.label = renumber(self.core, self.label)
+
+    def _compact(self) -> None:
+        """Drop tombstoned slots; preserves core/label state."""
+        src = np.asarray(self.src)
+        dst = np.asarray(self.dst)
+        val = np.asarray(self.valid)
+        live = np.nonzero(val)[0]
+        m = live.shape[0]
+        new_src = np.zeros(self.capacity, dtype=np.int32)
+        new_dst = np.zeros(self.capacity, dtype=np.int32)
+        new_val = np.zeros(self.capacity, dtype=bool)
+        new_src[:m] = src[live]
+        new_dst[:m] = dst[live]
+        new_val[:m] = True
+        self.src = jnp.asarray(new_src)
+        self.dst = jnp.asarray(new_dst)
+        self.valid = jnp.asarray(new_val)
+        self.n_edges = jnp.asarray(m, dtype=jnp.int32)
+        self.edge_slot = {
+            (int(min(a, b)), int(max(a, b))): i
+            for i, (a, b) in enumerate(zip(new_src[:m], new_dst[:m]))
+        }
+
+    def _grow(self, need: int) -> None:
+        new_cap = max(self.capacity * 2, self.capacity + 2 * need + 16)
+        pad = new_cap - self.capacity
+
+        def ext(x, fill):
+            return jnp.concatenate(
+                [x, jnp.full((pad,), fill, dtype=x.dtype)]
+            )
+
+        self.src = ext(self.src, 0)
+        self.dst = ext(self.dst, 0)
+        self.valid = ext(self.valid, False)
+        self.capacity = new_cap
+
+    # -- persistence -------------------------------------------------------------
+    def save(self, path: str) -> None:
+        np.savez_compressed(
+            path,
+            n=self.n,
+            capacity=self.capacity,
+            src=np.asarray(self.src),
+            dst=np.asarray(self.dst),
+            valid=np.asarray(self.valid),
+            n_edges=np.asarray(self.n_edges),
+            core=np.asarray(self.core),
+            label=np.asarray(self.label),
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "CoreMaintainer":
+        z = np.load(path)
+        src = np.asarray(z["src"])
+        dst = np.asarray(z["dst"])
+        val = np.asarray(z["valid"])
+        edge_slot = {
+            (int(min(a, b)), int(max(a, b))): i
+            for i, (a, b, ok) in enumerate(zip(src, dst, val))
+            if ok
+        }
+        return cls(
+            n=int(z["n"]),
+            capacity=int(z["capacity"]),
+            src=jnp.asarray(src),
+            dst=jnp.asarray(dst),
+            valid=jnp.asarray(val),
+            n_edges=jnp.asarray(z["n_edges"]),
+            core=jnp.asarray(z["core"]),
+            label=jnp.asarray(z["label"]),
+            edge_slot=edge_slot,
+            n_levels=int(z["n"]) + 2,
+        )
+
+
+def maintainer_from_edges(n: int, edges: np.ndarray, **kw) -> CoreMaintainer:
+    return CoreMaintainer.from_graph(build_csr(n, edges), **kw)

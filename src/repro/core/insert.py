@@ -1,0 +1,209 @@
+"""Batch-parallel edge insertion maintenance (paper Algorithm 5, TPU form).
+
+Round structure (all levels of all inserted edges processed together — the
+bulk-synchronous analogue of one-lock-per-vertex worker concurrency):
+
+  1. SEED      — k-order roots of the pending edges (order-min endpoints),
+                 plus last round's promoted vertices (cross-round cascades),
+                 plus any vertex violating the certificate dout > core
+                 (self-healing seeds; see DESIGN.md §2).
+  2. FORWARD   — masked wave expansion along same-level k-order-increasing
+                 edges, gated by the optimistic candidate test
+                 ``hi + dout_same + din_reached > core`` (paper's Forward;
+                 the gating is provably reach-complete: every true candidate
+                 has a forward path from a seed through passing vertices).
+  3. EVICT     — exact candidate fixpoint on the reached set (paper's
+                 Backward collapsed into iterative pruning): evict v while
+                 ``hi(v) + |same-level candidate nbrs| <= core(v)``.
+  4. COMMIT    — survivors' core += 1; moved to the head of O_{K+1} in old
+                 label order (required to preserve the k-order certificate).
+
+Rounds repeat until no promotion happens (a batch can raise a core by more
+than one; each round applies the paper's +1-per-edge theorem to the whole
+batch).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import graph_ops as G
+from .order import place_block
+
+Array = jax.Array
+
+
+class InsertStats(NamedTuple):
+    rounds: Array       # outer promotion rounds
+    n_promoted: Array   # |V*| over the whole batch
+    v_plus: Array       # |V+| — vertices ever reached by FORWARD
+
+
+def _forward_reach(
+    src: Array,
+    dst: Array,
+    valid: Array,
+    core: Array,
+    label: Array,
+    seed: Array,
+    hi: Array,
+    dout_same: Array,
+    n: int,
+) -> Tuple[Array, Array]:
+    """Monotone fixpoint of gated forward expansion.
+
+    Returns (reach, passing) boolean masks. ``passing`` uses the optimistic
+    test with din counted over reached-and-passing predecessors only.
+    """
+
+    def cond(state):
+        _, _, changed = state
+        return changed
+
+    def body(state):
+        reach, passing, _ = state
+        rp = reach & passing
+        # one fused scatter per wave: din and frontier growth (C1)
+        din, grow = G.din_and_expand(src, dst, valid, core, label, rp, n)
+        new_passing = (hi + dout_same + din) > core
+        new_reach = reach | grow
+        changed = jnp.any(new_reach != reach) | jnp.any(new_passing != passing)
+        return new_reach, new_passing, changed
+
+    init_pass = (hi + dout_same) > core
+    reach, passing, _ = jax.lax.while_loop(
+        cond, body, (seed, init_pass, jnp.bool_(True))
+    )
+    return reach, passing
+
+
+def _evict_fixpoint(
+    src: Array,
+    dst: Array,
+    valid: Array,
+    core: Array,
+    cand: Array,
+    hi: Array,
+    n: int,
+) -> Tuple[Array, Array]:
+    """Greatest fixpoint of the candidate support test (sound + complete
+    for any starting superset of V*).
+
+    Returns (surviving candidates, eviction round per vertex). The round
+    numbers order the Backward tail placement (never-evicted keep 0).
+    """
+
+    def cond(state):
+        _, _, _, changed = state
+        return changed
+
+    def body(state):
+        cand, evict_round, rnd, _ = state
+        support = hi + G.count_same_level_in(src, dst, valid, core, cand, n)
+        new_cand = cand & (support > core)
+        newly_evicted = cand & ~new_cand
+        evict_round = jnp.where(newly_evicted, rnd, evict_round)
+        return new_cand, evict_round, rnd + 1, jnp.any(new_cand != cand)
+
+    cand, evict_round, _, _ = jax.lax.while_loop(
+        cond,
+        body,
+        (cand, jnp.zeros(n, dtype=jnp.int32), jnp.int32(1), jnp.bool_(True)),
+    )
+    return cand, evict_round
+
+
+@partial(jax.jit, static_argnames=("n", "n_levels"))
+def insert_batch(
+    src: Array,
+    dst: Array,
+    valid: Array,
+    core: Array,
+    label: Array,
+    new_src: Array,
+    new_dst: Array,
+    new_ok: Array,
+    n_edges: Array,
+    n: int,
+    n_levels: int,
+) -> Tuple[Array, Array, Array, Array, Array, Array, InsertStats]:
+    """Insert ``(new_src, new_dst)`` (masked by ``new_ok``) and restore core
+    numbers + k-order labels.
+
+    Returns (src, dst, valid, n_edges, core, label, stats).
+    """
+    b = new_src.shape[0]
+    slot = n_edges + jnp.cumsum(new_ok.astype(jnp.int32), dtype=jnp.int32) - 1
+    slot = jnp.where(new_ok, slot, src.shape[0] - 1)  # park padding writes
+    # padding writes go to the last slot but stay invalid unless real
+    src = src.at[slot].set(jnp.where(new_ok, new_src, src[slot]))
+    dst = dst.at[slot].set(jnp.where(new_ok, new_dst, dst[slot]))
+    valid = valid.at[slot].set(jnp.where(new_ok, True, valid[slot]))
+    n_edges = n_edges + jnp.sum(new_ok, dtype=jnp.int32)
+
+    core0 = core
+    v_plus0 = jnp.zeros(n, dtype=bool)
+
+    def round_cond(state):
+        return state[2]
+
+    def round_body(state):
+        core, label, _, promoted_prev, rounds, v_plus = state
+
+        # fused (hi, dout_same) — one scatter-add / one collective (C1)
+        hi, dout_same = G.hi_and_dout_same(src, dst, valid, core, label, n)
+
+        # SEED: roots of pending edges (order-min endpoint at current state)
+        e_src_lt = (core[new_src] < core[new_dst]) | (
+            (core[new_src] == core[new_dst]) & (label[new_src] < label[new_dst])
+        )
+        root = jnp.where(e_src_lt, new_src, new_dst)
+        seed = (
+            jnp.zeros(n, dtype=jnp.int32).at[root].add(new_ok.astype(jnp.int32))
+            > 0
+        )
+        # certificate violators are potential hidden roots
+        seed = seed | ((hi + dout_same) > core)
+        seed = seed | promoted_prev
+
+        reach, passing = _forward_reach(
+            src, dst, valid, core, label, seed, hi, dout_same, n
+        )
+        cand0 = reach & passing
+        cand, evict_round = _evict_fixpoint(
+            src, dst, valid, core, cand0, hi, n
+        )
+
+        new_core = core + cand.astype(jnp.int32)
+        # promoted -> head of O_{K+1} in old-label order
+        label = place_block(new_core, label, cand, at_head=True,
+                            n_levels=n_levels)
+        # Backward-evicted -> tail of O_K in (eviction round, old label)
+        # order; restores the dout <= core certificate (DESIGN.md §2)
+        evicted = cand0 & ~cand
+        label = place_block(new_core, label, evicted, at_head=False,
+                            n_levels=n_levels, round_key=evict_round)
+        return (
+            new_core,
+            label,
+            jnp.any(cand),
+            cand,
+            rounds + 1,
+            v_plus | reach,
+        )
+
+    core, label, _, _, rounds, v_plus = jax.lax.while_loop(
+        round_cond,
+        round_body,
+        (core, label, jnp.bool_(True), jnp.zeros(n, dtype=bool),
+         jnp.int32(0), v_plus0),
+    )
+    stats = InsertStats(
+        rounds=rounds,
+        n_promoted=jnp.sum(core != core0, dtype=jnp.int32),
+        v_plus=jnp.sum(v_plus, dtype=jnp.int32),
+    )
+    return src, dst, valid, n_edges, core, label, stats

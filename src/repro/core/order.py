@@ -1,0 +1,104 @@
+"""k-order label maintenance — the TPU adaptation of the parallel OM
+data structure (paper §3.2, ref [11]).
+
+Vertices carry ``(core, label)`` pairs; the k-order predicate is the
+lexicographic comparison ``(core[u], label[u]) < (core[v], label[v])`` —
+an O(1) ``Order(x, y)`` exactly like the OM list's two-label compare.
+
+Batch "Insert at head of O_{K+1}" / "append at tail of O_{K-1}" become
+vectorized label assignments below the level minimum / above the level
+maximum; the OM rebalance/split relabel collapses into a per-level (or
+global) renumber that is a single ``lexsort`` — amortized O(1) per edit
+with the LABEL_GAP spacing (2^20 inserts per gap before a renumber).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+LABEL_GAP = jnp.int64(1) << 20
+_NEG = jnp.int64(-(1 << 62))
+_POS = jnp.int64(1 << 62)
+
+
+def level_min_labels(core: Array, label: Array, exclude: Array, n_levels: int) -> Array:
+    """Min label per level over vertices not in ``exclude``; _POS if empty."""
+    vals = jnp.where(exclude, _POS, label)
+    return jax.ops.segment_min(vals, core, num_segments=n_levels)
+
+
+def level_max_labels(core: Array, label: Array, exclude: Array, n_levels: int) -> Array:
+    vals = jnp.where(exclude, _NEG, label)
+    return jax.ops.segment_max(vals, core, num_segments=n_levels)
+
+
+def place_block(
+    core_new: Array,
+    label: Array,
+    moving: Array,
+    at_head: bool,
+    n_levels: int,
+    round_key: Array | None = None,
+) -> Array:
+    """Assign fresh labels to ``moving`` vertices at the head (insertion,
+    O_{K+1}) or tail (removal / Backward eviction, O_{K-1} / O_K) of their
+    new level.
+
+    Within a level the moving block is ordered by ``(round_key, old label)``
+    — old-label order for promotions (required to preserve the k-order
+    certificate), eviction-round order for Backward-evicted vertices
+    (the batched analogue of the paper's insert-after-traversal-point;
+    proof in DESIGN.md §2), and any order is valid for removal drops.
+    """
+    n = core_new.shape[0]
+    base_min = level_min_labels(core_new, label, moving, n_levels)
+    base_max = level_max_labels(core_new, label, moving, n_levels)
+    base_min = jnp.where(base_min == _POS, jnp.int64(0), base_min)
+    base_max = jnp.where(base_max == _NEG, jnp.int64(0), base_max)
+
+    # order moving vertices by (new level, round_key, old label)
+    sort_level = jnp.where(moving, core_new, jnp.int32(n_levels))
+    if round_key is None:
+        perm = jnp.lexsort((label, sort_level))
+    else:
+        perm = jnp.lexsort((label, round_key, sort_level))
+    ranks = jnp.zeros(n, dtype=jnp.int32).at[perm].set(
+        jnp.arange(n, dtype=jnp.int32)
+    )
+    first_rank = jax.ops.segment_min(
+        jnp.where(moving, ranks, jnp.int32(2**30)), core_new,
+        num_segments=n_levels,
+    )
+    count = jax.ops.segment_sum(
+        moving.astype(jnp.int32), core_new, num_segments=n_levels
+    )
+    pos = ranks - first_rank[core_new]  # position within the moving block
+    if at_head:
+        newlab = base_min[core_new] - LABEL_GAP * (
+            count[core_new] - pos
+        ).astype(jnp.int64)
+    else:
+        newlab = base_max[core_new] + LABEL_GAP * (pos + 1).astype(jnp.int64)
+    return jnp.where(moving, newlab, label)
+
+
+@partial(jax.jit, static_argnames=())
+def renumber(core: Array, label: Array) -> Array:
+    """Global relabel: fresh LABEL_GAP-spaced labels in (core, label) order.
+    The vectorized analogue of the OM rebalance+split relabel."""
+    n = core.shape[0]
+    perm = jnp.lexsort((label, core))
+    ranks = jnp.zeros(n, dtype=jnp.int64).at[perm].set(
+        jnp.arange(n, dtype=jnp.int64)
+    )
+    return ranks * LABEL_GAP
+
+
+def needs_renumber(label: Array) -> Array:
+    """True when the label space is running out of headroom."""
+    lim = jnp.int64(1) << 61
+    return (jnp.min(label) < -lim) | (jnp.max(label) > lim)

@@ -1,0 +1,141 @@
+"""Multi-device core maintenance via shard_map (beyond-paper scaling).
+
+The paper targets one shared-memory node; here the edge slots are sharded
+across the mesh's ``data`` axis (vertex state is replicated — it is the
+small side: n << m for the paper's graphs and batches). Every neighborhood
+statistic becomes  local segment_sum over the device's edge shard + one
+``psum``. The fixpoint loops are unchanged — bulk-synchronous rounds are
+mesh-agnostic, which is exactly why the reformulation scales to pods.
+
+For 1000+-node deployments the vertex state would be range-sharded too
+(psum -> reduce_scatter over vertex ranges + all_gather of the frontier
+bitmask); that variant is exercised by the dry-run configs in
+launch/dryrun.py (arch `coremaint`).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+
+def _seg_psum(data: Array, ids: Array, n: int, axis: str) -> Array:
+    out = jax.ops.segment_sum(data, ids, num_segments=n)
+    return jax.lax.psum(out, axis)
+
+
+def _count_ge_sharded(src, dst, valid, vals, n, axis):
+    to_src = (valid & (vals[dst] >= vals[src])).astype(jnp.int32)
+    to_dst = (valid & (vals[src] >= vals[dst])).astype(jnp.int32)
+    return _seg_psum(to_src, src, n, axis) + _seg_psum(to_dst, dst, n, axis)
+
+
+def make_sharded_remove(mesh: Mesh, n: int, axis: str = "data"):
+    """Build a jitted sharded removal fixpoint over ``mesh``.
+
+    Edge arrays must be sharded along ``axis``; core is replicated.
+    Removal slots are pre-applied by the caller (valid already updated).
+    """
+
+    def _kernel(src, dst, valid, core):
+        def cond(state):
+            return state[1]
+
+        def body(state):
+            core, _ = state
+            mcd = _count_ge_sharded(src, dst, valid, core, n, axis)
+            drop = (mcd < core) & (core > 0)
+            return core - drop.astype(jnp.int32), jnp.any(drop)
+
+        core, _ = jax.lax.while_loop(cond, body, (core, jnp.bool_(True)))
+        return core
+
+    shardmapped = jax.shard_map(
+        _kernel,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return jax.jit(shardmapped)
+
+
+def make_sharded_insert_round(mesh: Mesh, n: int, axis: str = "data"):
+    """One promotion round (seed -> forward -> evict) as a sharded kernel.
+
+    The caller loops rounds until ``n_promoted == 0`` (host loop keeps the
+    per-round HLO small; each round is fully collective-parallel).
+    Returns (new_core, promoted_mask).
+    """
+
+    def _kernel(src, dst, valid, core, label, seed):
+        def count_gt(vals):
+            a = (valid & (vals[dst] > vals[src])).astype(jnp.int32)
+            b = (valid & (vals[src] > vals[dst])).astype(jnp.int32)
+            return _seg_psum(a, src, n, axis) + _seg_psum(b, dst, n, axis)
+
+        same = valid & (core[src] == core[dst])
+        hi = count_gt(core)
+        a = (same & (label[dst] > label[src])).astype(jnp.int32)
+        b = (same & (label[src] > label[dst])).astype(jnp.int32)
+        dout_same = _seg_psum(a, src, n, axis) + _seg_psum(b, dst, n, axis)
+
+        def fwd_cond(state):
+            return state[2]
+
+        def fwd_body(state):
+            reach, passing, _ = state
+            rp = reach & passing
+            a = (same & (label[dst] < label[src]) & rp[dst]).astype(jnp.int32)
+            b = (same & (label[src] < label[dst]) & rp[src]).astype(jnp.int32)
+            din = _seg_psum(a, src, n, axis) + _seg_psum(b, dst, n, axis)
+            new_passing = (hi + dout_same + din) > core
+            gd = (same & rp[src] & (label[src] < label[dst])).astype(jnp.int32)
+            gs = (same & rp[dst] & (label[dst] < label[src])).astype(jnp.int32)
+            grow = (_seg_psum(gd, dst, n, axis) + _seg_psum(gs, src, n, axis)) > 0
+            new_reach = reach | grow
+            changed = jnp.any(new_reach != reach) | jnp.any(
+                new_passing != passing
+            )
+            return new_reach, new_passing, changed
+
+        init_pass = (hi + dout_same) > core
+        reach, passing, _ = jax.lax.while_loop(
+            fwd_cond, fwd_body, (seed, init_pass, jnp.bool_(True))
+        )
+
+        def ev_cond(state):
+            return state[1]
+
+        def ev_body(state):
+            cand, _ = state
+            a = (same & cand[dst]).astype(jnp.int32)
+            b = (same & cand[src]).astype(jnp.int32)
+            sup = hi + _seg_psum(a, src, n, axis) + _seg_psum(b, dst, n, axis)
+            new_cand = cand & (sup > core)
+            return new_cand, jnp.any(new_cand != cand)
+
+        cand, _ = jax.lax.while_loop(
+            ev_cond, ev_body, (reach & passing, jnp.bool_(True))
+        )
+        return core + cand.astype(jnp.int32), cand
+
+    shardmapped = jax.shard_map(
+        _kernel,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(), P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(shardmapped)
+
+
+def shard_edges(mesh: Mesh, axis: str, *arrays) -> Tuple[Array, ...]:
+    """Place COO slot arrays with the edge dimension sharded on ``axis``."""
+    sharding = NamedSharding(mesh, P(axis))
+    return tuple(jax.device_put(a, sharding) for a in arrays)

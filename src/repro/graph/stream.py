@@ -1,0 +1,65 @@
+"""Temporal edge streams — the paper's dynamic-graph workload.
+
+Generates (or replays) timestamped edge events and yields fixed-size
+batches of insertions/removals, the input format of the streaming core
+maintenance service (examples/stream_maintenance.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from .csr import CSRGraph
+
+
+@dataclasses.dataclass
+class EdgeEvent:
+    edges: np.ndarray   # [b, 2]
+    kind: str           # "insert" | "remove"
+    t: int
+
+
+def synthetic_stream(
+    g: CSRGraph,
+    n_batches: int,
+    batch_size: int,
+    p_insert: float = 0.5,
+    seed: int = 0,
+) -> Iterator[EdgeEvent]:
+    """Random insert/remove batches against a live edge set (paper §5.2:
+    edges are first removed then inserted; here interleaved)."""
+    rng = np.random.default_rng(seed)
+    live = {tuple(e) for e in g.edge_array().tolist()}
+    n = g.n
+    for t in range(n_batches):
+        if rng.random() < p_insert or len(live) < batch_size:
+            batch = []
+            while len(batch) < batch_size:
+                u, v = rng.integers(0, n, size=2)
+                key = (int(min(u, v)), int(max(u, v)))
+                if u == v or key in live or key in batch:
+                    continue
+                batch.append(key)
+            live.update(batch)
+            yield EdgeEvent(np.asarray(batch, dtype=np.int64), "insert", t)
+        else:
+            lst = sorted(live)
+            take = rng.choice(len(lst), size=batch_size, replace=False)
+            batch = [lst[i] for i in take]
+            live.difference_update(batch)
+            yield EdgeEvent(np.asarray(batch, dtype=np.int64), "remove", t)
+
+
+def temporal_replay(
+    edges_with_time: np.ndarray, batch_size: int
+) -> Iterator[EdgeEvent]:
+    """Replay a [m, 3] (u, v, t) temporal edge list in timestamp order as
+    insertion batches (KONECT-style temporal graphs)."""
+    order = np.argsort(edges_with_time[:, 2], kind="stable")
+    ordered = edges_with_time[order]
+    for i in range(0, len(ordered), batch_size):
+        chunk = ordered[i : i + batch_size]
+        yield EdgeEvent(chunk[:, :2].astype(np.int64), "insert",
+                        int(chunk[-1, 2]))

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: blockwise (flash) attention forward, GQA-aware.
+
+Grid: (batch, q_heads, Sq/BQ); the KV loop runs inside the kernel with
+running max / normalizer (the standard streaming-softmax recurrence), so
+the [Sq, Sk] score matrix never materializes — VMEM holds
+BQ x D (q), BK x D (k, v) and BQ x BK (scores) tiles only.
+
+GQA: the kv head index is derived from the q head index in the BlockSpec
+index map (h // group) — no KV repetition in HBM.
+
+Block defaults 512x512 keep the score tile at 1 MB fp32 and both matmul
+operands MXU-aligned (D is 64/128 for all assigned archs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq_k: int,
+                  causal: bool, scale: float, block_q: int):
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # [BQ, D]
+    bq, d = q.shape
+    qi = pl.program_id(2)
+    n_kv = seq_k // block_k
+
+    acc = jnp.zeros((bq, d), jnp.float32)
+    m = jnp.full((bq, 1), _NEG_INF, jnp.float32)
+    l = jnp.zeros((bq, 1), jnp.float32)
+
+    def body(kv_i, carry):
+        acc, m, l = carry
+        k = k_ref[0, 0, pl.ds(kv_i * block_k, block_k)].astype(jnp.float32)
+        v = v_ref[0, 0, pl.ds(kv_i * block_k, block_k)].astype(jnp.float32)
+        s = q @ k.T  # [BQ, BK]
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, block_k), 0
+            )
+            k_pos = kv_i * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, block_k), 1
+            )
+            s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = alpha * acc + p @ v
+        return acc_new, m_new, l_new
+
+    if causal:
+        # only kv blocks with start <= q block end participate
+        upper = jnp.minimum(n_kv, (qi + 1) * block_q // block_k + 1)
+    else:
+        upper = n_kv
+    acc, m, l = jax.lax.fori_loop(0, upper, body, (acc, m, l))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """q [B, H, Sq, D]; k, v [B, Hkv, Sk, D] with H % Hkv == 0."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0
+    g = h // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, block_q, sk, block_k)
+    scale = scale if scale is not None else float(1.0 / (d ** 0.5))
+    grid = (b, h, sq // block_q)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            block_k=block_k,
+            seq_k=sk,
+            causal=causal,
+            scale=scale,
+            block_q=block_q,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h_, i: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, sk, d), lambda b_, h_, i: (b_, h_ // g, 0, 0)),
+            pl.BlockSpec((1, 1, sk, d), lambda b_, h_, i: (b_, h_ // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda b_, h_, i: (b_, h_, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,48 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU,
+so the same call sites work in both environments. Models take a
+``use_pallas`` config flag; the default XLA paths remain the reference.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .fm_interaction import fm_interaction
+from .flash_attention import flash_attention
+from .segment_ell import ell_aggregate, ell_stat
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("op", "interpret"))
+def ell_stat_op(nbrs, vals, self_vals, op="count_ge", interpret=None):
+    interpret = _on_cpu() if interpret is None else interpret
+    return ell_stat(nbrs, vals, self_vals, op=op, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("op", "interpret"))
+def ell_aggregate_op(nbrs, feats, op="sum", interpret=None):
+    interpret = _on_cpu() if interpret is None else interpret
+    return ell_aggregate(nbrs, feats, op=op, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "interpret", "block_q", "block_k"))
+def flash_attention_op(
+    q, k, v, causal=True, block_q=512, block_k=512, interpret=None
+):
+    interpret = _on_cpu() if interpret is None else interpret
+    return flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def fm_interaction_op(emb, interpret=None):
+    interpret = _on_cpu() if interpret is None else interpret
+    return fm_interaction(emb, interpret=interpret)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# -- segment_ell ------------------------------------------------------------
+def ell_stat_ref(nbrs, vals, self_vals, op="count_ge"):
+    n = nbrs.shape[0]
+    vals_ext = jnp.concatenate([vals, jnp.zeros((1,), vals.dtype)])
+    gathered = vals_ext[nbrs]  # [n, D]
+    mask = nbrs < n
+    if op == "count_ge":
+        return jnp.sum(
+            (mask & (gathered >= self_vals[:, None])).astype(vals.dtype), axis=1
+        )
+    if op == "count_gt":
+        return jnp.sum(
+            (mask & (gathered > self_vals[:, None])).astype(vals.dtype), axis=1
+        )
+    if op == "sum":
+        return jnp.sum(jnp.where(mask, gathered, 0), axis=1)
+    if op == "max":
+        neg = jnp.asarray(-(2**30), vals.dtype)
+        return jnp.max(jnp.where(mask, gathered, neg), axis=1)
+    raise ValueError(op)
+
+
+def ell_aggregate_ref(nbrs, feats, op="sum"):
+    n = nbrs.shape[0]
+    feats_ext = jnp.concatenate(
+        [feats, jnp.zeros((1, feats.shape[1]), feats.dtype)], axis=0
+    )
+    gathered = feats_ext[nbrs]  # [n, D, F]
+    mask = (nbrs < n)[..., None]
+    if op == "sum":
+        return jnp.sum(jnp.where(mask, gathered, 0.0), axis=1)
+    if op == "max":
+        return jnp.max(jnp.where(mask, gathered, -1e30), axis=1)
+    raise ValueError(op)
+
+
+# -- flash attention ----------------------------------------------------------
+def mha_ref(q, k, v, causal=True, scale=None):
+    """q [B,H,S,D], k/v [B,Hkv,S,D]; GQA via head broadcast."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    logits = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vv.astype(jnp.float32)).astype(
+        q.dtype
+    )
+
+
+# -- FM interaction -------------------------------------------------------------
+def fm_interaction_ref(emb):
+    """DeepFM 2nd-order term: emb [B, F, D] -> [B].
+    0.5 * sum_d ((sum_f v)^2 - sum_f v^2)."""
+    s = jnp.sum(emb, axis=1)  # [B, D]
+    s2 = jnp.sum(emb * emb, axis=1)  # [B, D]
+    return 0.5 * jnp.sum(s * s - s2, axis=-1)

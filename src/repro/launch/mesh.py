@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+HW = {
+    "name": "TPU v5e",
+    "peak_flops_bf16": 197e12,     # per chip
+    "hbm_bw": 819e9,               # bytes/s per chip
+    "ici_bw_per_link": 50e9,       # bytes/s per link (~)
+    "ici_links": 4,                # 2D torus: 4 links per chip
+    "hbm_bytes": 16 * 2**30,
+}

@@ -1,0 +1,75 @@
+"""Serving launcher: prefill + batched decode with the KV cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v2-lite-16b \
+      --smoke --batch 2 --prompt-len 32 --gen 16
+
+Demonstrates the serving substrate on CPU with a reduced config; the full
+configs are exercised via the dry-run (prefill_32k / decode_32k /
+long_500k cells).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import transformer as tf_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-lite-16b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    mod = get_arch(args.arch)
+    if mod.FAMILY != "lm":
+        raise SystemExit("launch.serve drives LM archs")
+    import dataclasses
+    cfg = mod.smoke() if args.smoke else mod.full()
+    cfg = dataclasses.replace(cfg, dtype=jnp.float32)
+    params = tf_mod.init_params(cfg, jax.random.PRNGKey(0))
+    max_seq = args.prompt_len + args.gen
+
+    prompt = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab
+    )
+    t0 = time.perf_counter()
+    logits, cache = tf_mod.prefill(cfg, params, prompt)
+    # widen the cache to generation capacity
+    for k in cache:
+        if k == "length":
+            continue
+        pad = max_seq - cache[k].shape[2]
+        widths = [(0, 0)] * cache[k].ndim
+        widths[2] = (0, pad)
+        cache[k] = jnp.pad(cache[k], widths)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    decode = jax.jit(
+        lambda p, c, t: tf_mod.decode_step(cfg, p, c, t)
+    )
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.perf_counter()
+    for _ in range(args.gen - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+    gen = jnp.stack(out, axis=1)
+    print(f"[serve] {cfg.name} batch={args.batch} "
+          f"prefill {args.prompt_len} tok in {t_prefill*1e3:.1f} ms; "
+          f"decoded {args.gen-1} steps in {t_decode*1e3:.1f} ms "
+          f"({(args.gen-1)*args.batch/max(t_decode,1e-9):.1f} tok/s)")
+    print("[serve] sample token ids:", gen[0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,551 @@
+"""Cell programs: (arch x shape) -> step function + inputs + shardings.
+
+Used by BOTH the per-arch smoke tests (concrete small inputs, 1 device)
+and the multi-pod dry-run (ShapeDtypeStruct inputs + PartitionSpecs,
+512 devices). One code path builds the function; only the input source
+differs — which is what makes the dry-run meaningful.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..configs import get_arch
+from ..configs.common import ShapeCell
+from ..models import gnn as gnn_mod
+from ..models import recsys as rec_mod
+from ..models import transformer as tf_mod
+from ..models.gnn import GraphBatch
+from ..optim.adamw import adamw_init, adamw_update, clip_by_global_norm
+from ..parallel import sharding as shard_rules
+
+Array = jax.Array
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class CellProgram:
+    """Everything needed to lower or run one (arch x shape) cell."""
+
+    name: str
+    fn: Callable[..., Any]
+    abstract_inputs: Tuple[Any, ...]
+    in_specs: Optional[Tuple[Any, ...]]      # PartitionSpecs (dry-run)
+    out_specs: Optional[Any]
+    concrete_inputs: Optional[Callable[[jax.Array], Tuple[Any, ...]]] = None
+    donate: Tuple[int, ...] = ()
+
+
+def _tree_sds(tree):
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)
+
+
+def _abstract_params(init_fn, key_shape=()):
+    """Shape-evaluate an init function without allocating."""
+    return jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+def _lm_train_step(cfg):
+    def loss(params, tokens, targets):
+        return tf_mod.loss_fn(cfg, params, tokens, targets)
+
+    def step(params, opt_state, tokens, targets):
+        l, grads = jax.value_and_grad(loss)(params, tokens, targets)
+        grads, gn = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adamw_update(
+            params, grads, opt_state, jnp.float32(1e-4)
+        )
+        return params, opt_state, {"loss": l, "grad_norm": gn}
+
+    return step
+
+
+def _lm_cell(arch_name: str, cfg, cell: ShapeCell, multi_pod: bool,
+             for_smoke: bool) -> CellProgram:
+    if not for_smoke and not os.environ.get("REPRO_NO_PIN"):
+        cfg = dataclasses.replace(
+            cfg,
+            batch_axes=("pod", "data") if multi_pod else "data",
+            tp_axis="model",
+            attn_chunk=2048,  # streaming-softmax KV chunking (D2)
+        )
+    init = functools.partial(tf_mod.init_params, cfg)
+    p_abs = _abstract_params(init)
+    p_spec = shard_rules.lm_param_specs(cfg, None)
+    batch_spec = shard_rules.lm_batch_spec(multi_pod)
+    opt_spec = {
+        "m": p_spec, "v": p_spec, "count": P(),
+    }
+    if cell.kind == "train":
+        b, s = cell.params["batch"], cell.params["seq"]
+        fn = _lm_train_step(cfg)
+        opt_abs = jax.eval_shape(adamw_init, p_abs)
+        abstract = (
+            p_abs, opt_abs,
+            SDS((b, s), jnp.int32), SDS((b, s), jnp.int32),
+        )
+        in_specs = (p_spec, opt_spec, batch_spec, batch_spec)
+        out_specs = (p_spec, opt_spec, {"loss": P(), "grad_norm": P()})
+        donate = (0, 1)
+
+        def concrete(key):
+            params = init(key)
+            toks = jax.random.randint(key, (b, s), 0, cfg.vocab, jnp.int32)
+            return params, adamw_init(params), toks, toks
+
+    elif cell.kind == "prefill":
+        b, s = cell.params["batch"], cell.params["seq"]
+
+        def fn(params, tokens):
+            return tf_mod.prefill(cfg, params, tokens)
+
+        abstract = (p_abs, SDS((b, s), jnp.int32))
+        in_specs = (p_spec, batch_spec)
+        cache_spec = shard_rules.lm_cache_specs(cfg, multi_pod, batch=b)
+        out_specs = (P(batch_spec[0], "model"), cache_spec)
+        donate = ()
+
+        def concrete(key):
+            return init(key), jax.random.randint(
+                key, (b, s), 0, cfg.vocab, jnp.int32
+            )
+
+    elif cell.kind == "decode":
+        b, t = cell.params["batch"], cell.params["cache"]
+        cache_abs = jax.eval_shape(
+            functools.partial(tf_mod.init_cache, cfg, b, t)
+        )
+
+        def fn(params, cache, token):
+            return tf_mod.decode_step(cfg, params, cache, token)
+
+        pods = 2 if multi_pod else 1
+        tok_spec = (
+            P(("pod", "data") if multi_pod else "data")
+            if b % (16 * pods) == 0 else P(None)
+        )
+        cache_spec = shard_rules.lm_cache_specs(cfg, multi_pod, batch=b)
+        abstract = (p_abs, cache_abs, SDS((b,), jnp.int32))
+        in_specs = (p_spec, cache_spec, tok_spec)
+        out_specs = (P(tok_spec[0], "model"), cache_spec)
+        donate = (1,)
+
+        def concrete(key):
+            params = init(key)
+            cache = tf_mod.init_cache(cfg, b, t)
+            cache["length"] = jnp.asarray(t // 2, jnp.int32)
+            tok = jax.random.randint(key, (b,), 0, cfg.vocab, jnp.int32)
+            return params, cache, tok
+
+    else:
+        raise ValueError(cell.kind)
+    return CellProgram(
+        name=f"{arch_name}:{cell.name}", fn=fn, abstract_inputs=abstract,
+        in_specs=in_specs, out_specs=out_specs,
+        concrete_inputs=concrete if for_smoke else None, donate=donate,
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+def _gnn_fwd_and_loss(arch_name: str, cfg):
+    if arch_name.startswith("pna"):
+        def loss(params, batch, labels):
+            logits = gnn_mod.pna_forward(cfg, params, batch)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+            return jnp.sum(nll * batch.node_mask) / jnp.maximum(
+                jnp.sum(batch.node_mask), 1.0
+            )
+        return gnn_mod.pna_init, loss, "node_labels"
+    if arch_name.startswith("gin"):
+        def loss(params, batch, labels):
+            logits = gnn_mod.gin_forward(cfg, params, batch)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            return -jnp.mean(
+                jnp.take_along_axis(logp, labels[:, None], axis=-1)
+            )
+        return gnn_mod.gin_init, loss, "graph_labels"
+    if arch_name.startswith("dimenet"):
+        def loss(params, batch_and_tri, energies):
+            batch, tkj, tji, tm = batch_and_tri
+            e = gnn_mod.dimenet_forward(cfg, params, batch, tkj, tji, tm)
+            return jnp.mean((e - energies) ** 2)
+        return gnn_mod.dimenet_init, loss, "energies"
+    if arch_name.startswith("nequip"):
+        def loss(params, batch, energies):
+            e = gnn_mod.nequip_energy(cfg, params, batch.positions, batch)
+            return jnp.mean((e - energies) ** 2)
+        return gnn_mod.nequip_init, loss, "energies"
+    raise ValueError(arch_name)
+
+
+def _pad512(x: int) -> int:
+    return -(-x // 512) * 512
+
+
+def _graph_shapes_for_cell(cell: ShapeCell) -> Tuple[int, int, int, int]:
+    """(n_nodes, n_edges_directed, d_feat, n_graphs) for a GNN cell.
+    Node/edge capacities are padded to multiples of 512 so every cell
+    shards over the full 512-chip mesh (pads are masked)."""
+    p = cell.params
+    if cell.kind == "full_graph":
+        return _pad512(p["n_nodes"]), _pad512(p["n_edges"]), p["d_feat"], 1
+    if cell.kind == "minibatch":
+        mult = 1
+        for f in p["fanout"]:
+            mult *= f + 1
+        n_cap = _pad512(p["batch_nodes"] * mult)
+        return n_cap, 2 * n_cap, p["d_feat"], 1
+    if cell.kind == "molecule":
+        return (
+            _pad512(p["n_nodes"] * p["batch"]),
+            _pad512(p["n_edges"] * p["batch"]),
+            1,
+            p["batch"],
+        )
+    raise ValueError(cell.kind)
+
+
+def _abstract_graph_batch(n, e, f, g, molecular: bool):
+    return GraphBatch(
+        node_feat=SDS((n, f), jnp.float32),
+        senders=SDS((e,), jnp.int32),
+        receivers=SDS((e,), jnp.int32),
+        edge_mask=SDS((e,), jnp.bool_),
+        node_mask=SDS((n,), jnp.bool_),
+        graph_id=SDS((n,), jnp.int32),
+        n_graphs=g,
+        positions=SDS((n, 3), jnp.float32) if molecular else None,
+        species=SDS((n,), jnp.int32) if molecular else None,
+    )
+
+
+def _concrete_graph_batch(key, n, e, f, g, molecular: bool, connected=True):
+    rng = np.random.default_rng(0)
+    senders = rng.integers(0, n, size=e).astype(np.int32)
+    receivers = rng.integers(0, n, size=e).astype(np.int32)
+    return GraphBatch(
+        node_feat=jnp.asarray(rng.normal(size=(n, f)), jnp.float32),
+        senders=jnp.asarray(senders),
+        receivers=jnp.asarray(receivers),
+        edge_mask=jnp.asarray(senders != receivers),
+        node_mask=jnp.ones((n,), bool),
+        graph_id=jnp.asarray(
+            np.minimum(np.arange(n) * g // max(n, 1), g - 1), jnp.int32
+        ),
+        n_graphs=g,
+        positions=(
+            jnp.asarray(rng.normal(size=(n, 3)) * 2, jnp.float32)
+            if molecular else None
+        ),
+        species=(
+            jnp.asarray(rng.integers(0, 8, size=n), jnp.int32)
+            if molecular else None
+        ),
+    )
+
+
+def _gnn_cell(arch_name: str, cfg, cell: ShapeCell, multi_pod: bool,
+              for_smoke: bool) -> CellProgram:
+    molecular = arch_name.startswith(("dimenet", "nequip"))
+    n, e, f, g = _graph_shapes_for_cell(cell)
+    if hasattr(cfg, "d_in") and cfg.d_in != f:
+        cfg = dataclasses.replace(cfg, d_in=f)  # shape dictates input width
+    flat_axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if (not for_smoke and not os.environ.get("REPRO_NO_PIN")
+            and hasattr(cfg, "shard_axes")):
+        upd = {"shard_axes": flat_axes}
+        if hasattr(cfg, "msg_dtype"):
+            upd["msg_dtype"] = jnp.bfloat16
+        cfg = dataclasses.replace(cfg, **upd)
+    init, loss, label_kind = _gnn_fwd_and_loss(arch_name, cfg)
+    p_abs = _abstract_params(functools.partial(init, cfg))
+    batch_abs = _abstract_graph_batch(n, e, f, g, molecular)
+    flat = ("pod", "data", "model") if multi_pod else ("data", "model")
+    gspec = GraphBatch(
+        node_feat=P(flat, None), senders=P(flat), receivers=P(flat),
+        edge_mask=P(flat), node_mask=P(flat), graph_id=P(flat),
+        n_graphs=g,
+        positions=P(flat, None) if molecular else None,
+        species=P(flat) if molecular else None,
+    )
+    p_spec = jax.tree.map(lambda _: P(), p_abs)
+    opt_spec = jax.tree.map(lambda _: P(), jax.eval_shape(adamw_init, p_abs))
+
+    if label_kind == "node_labels":
+        lab_abs, lab_spec = SDS((n,), jnp.int32), P(flat)
+    elif label_kind == "graph_labels":
+        lab_abs, lab_spec = SDS((g,), jnp.int32), P()
+    else:
+        lab_abs, lab_spec = SDS((g,), jnp.float32), P()
+
+    is_dimenet = arch_name.startswith("dimenet")
+    t_cap = 2 * e if is_dimenet else 0
+
+    def step(params, opt_state, batch, labels, *tri):
+        if is_dimenet:
+            arg = (batch,) + tri
+        else:
+            arg = batch
+        l, grads = jax.value_and_grad(loss)(params, arg, labels)
+        grads, gn = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adamw_update(
+            params, grads, opt_state, jnp.float32(1e-3)
+        )
+        return params, opt_state, {"loss": l, "grad_norm": gn}
+
+    abstract = [p_abs, jax.eval_shape(adamw_init, p_abs), batch_abs, lab_abs]
+    in_specs = [p_spec, opt_spec, gspec, lab_spec]
+    if is_dimenet:
+        abstract += [
+            SDS((t_cap,), jnp.int32), SDS((t_cap,), jnp.int32),
+            SDS((t_cap,), jnp.bool_),
+        ]
+        in_specs += [P(flat), P(flat), P(flat)]
+    out_specs = (p_spec, opt_spec, {"loss": P(), "grad_norm": P()})
+
+    def concrete(key):
+        params = init(cfg, key)
+        batch = _concrete_graph_batch(key, n, e, f, g, molecular)
+        if label_kind == "node_labels":
+            labels = jnp.asarray(
+                np.random.default_rng(1).integers(0, cfg.n_classes, size=n),
+                jnp.int32,
+            )
+        elif label_kind == "graph_labels":
+            labels = jnp.asarray(
+                np.random.default_rng(1).integers(0, cfg.n_classes, size=g),
+                jnp.int32,
+            )
+        else:
+            labels = jnp.asarray(
+                np.random.default_rng(1).normal(size=g), jnp.float32
+            )
+        out = [params, adamw_init(params), batch, labels]
+        if is_dimenet:
+            tkj, tji, tm = gnn_mod.build_triplets(
+                batch.senders, batch.receivers, batch.edge_mask, t_cap
+            )
+            out += [jnp.asarray(tkj), jnp.asarray(tji), jnp.asarray(tm)]
+        return tuple(out)
+
+    return CellProgram(
+        name=f"{arch_name}:{cell.name}", fn=step,
+        abstract_inputs=tuple(abstract), in_specs=tuple(in_specs),
+        out_specs=out_specs,
+        concrete_inputs=concrete if for_smoke else None, donate=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+def _recsys_cell(arch_name: str, cfg, cell: ShapeCell, multi_pod: bool,
+                 for_smoke: bool) -> CellProgram:
+    init = functools.partial(rec_mod.deepfm_init, cfg)
+    p_abs = _abstract_params(init)
+    flat = ("pod", "data", "model") if multi_pod else ("data", "model")
+    p_spec = {
+        "embed": P(flat, None),
+        "w1": P(flat),
+        "bias": P(),
+        "mlp": jax.tree.map(lambda _: P(), p_abs["mlp"]),
+    }
+    b = cell.params["batch"]
+    if cell.kind == "train":
+        opt_abs = jax.eval_shape(adamw_init, p_abs)
+        opt_spec = {
+            "m": p_spec, "v": p_spec, "count": P(),
+        }
+
+        def step(params, opt_state, sparse, labels):
+            def loss(p):
+                return rec_mod.deepfm_loss(cfg, p, sparse, labels)
+
+            l, grads = jax.value_and_grad(loss)(params)
+            grads, gn = clip_by_global_norm(grads, 1.0)
+            params, opt_state = adamw_update(
+                params, grads, opt_state, jnp.float32(1e-3)
+            )
+            return params, opt_state, {"loss": l, "grad_norm": gn}
+
+        abstract = (
+            p_abs, opt_abs,
+            SDS((b, cfg.n_sparse), jnp.int32), SDS((b,), jnp.float32),
+        )
+        in_specs = (p_spec, opt_spec, P(flat, None), P(flat))
+        out_specs = (p_spec, opt_spec, {"loss": P(), "grad_norm": P()})
+        donate = (0, 1)
+
+        def concrete(key):
+            params = init(key)
+            rng = np.random.default_rng(0)
+            ids = jnp.asarray(
+                rng.integers(0, cfg.rows_per_field, size=(b, cfg.n_sparse)),
+                jnp.int32,
+            )
+            lab = jnp.asarray(rng.integers(0, 2, size=b), jnp.float32)
+            return params, adamw_init(params), ids, lab
+
+    elif cell.kind == "serve":
+        def step(params, sparse):
+            return rec_mod.deepfm_forward(cfg, params, sparse)
+
+        abstract = (p_abs, SDS((b, cfg.n_sparse), jnp.int32))
+        in_specs = (p_spec, P(flat, None))
+        out_specs = P(flat)
+        donate = ()
+
+        def concrete(key):
+            rng = np.random.default_rng(0)
+            return init(key), jnp.asarray(
+                rng.integers(0, cfg.rows_per_field, size=(b, cfg.n_sparse)),
+                jnp.int32,
+            )
+
+    elif cell.kind == "retrieval":
+        nc = _pad512(cell.params["n_candidates"])
+
+        def step(params, sparse, cand):
+            return rec_mod.retrieval_score(cfg, params, sparse, cand)
+
+        abstract = (
+            p_abs, SDS((b, cfg.n_sparse), jnp.int32),
+            SDS((nc, cfg.embed_dim), jnp.float32),
+        )
+        in_specs = (p_spec, P(None, None), P(flat, None))
+        out_specs = P(None, flat)
+        donate = ()
+
+        def concrete(key):
+            rng = np.random.default_rng(0)
+            return (
+                init(key),
+                jnp.asarray(
+                    rng.integers(
+                        0, cfg.rows_per_field, size=(b, cfg.n_sparse)
+                    ), jnp.int32,
+                ),
+                jnp.asarray(
+                    rng.normal(size=(nc, cfg.embed_dim)), jnp.float32
+                ),
+            )
+    else:
+        raise ValueError(cell.kind)
+    return CellProgram(
+        name=f"{arch_name}:{cell.name}", fn=step,
+        abstract_inputs=abstract, in_specs=in_specs, out_specs=out_specs,
+        concrete_inputs=concrete if for_smoke else None, donate=donate,
+    )
+
+
+# ---------------------------------------------------------------------------
+# coremaint cells (the paper's own workload)
+# ---------------------------------------------------------------------------
+def _coremaint_cell(arch_name: str, cfg, cell: ShapeCell, multi_pod: bool,
+                    for_smoke: bool) -> CellProgram:
+    from ..core.insert import insert_batch
+    from ..core.remove import remove_batch
+
+    n = cfg.n_vertices
+    cap = _pad512(cfg.edge_capacity)
+    b = cell.params["batch_edges"]
+    flat = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n_levels = 512  # max core bound for label segments at this scale
+
+    if cell.kind == "coremaint_remove":
+        def step(src, dst, valid, core, label, slots):
+            return remove_batch(src, dst, valid, core, label, slots, n,
+                                n_levels)
+
+        abstract = (
+            SDS((cap,), jnp.int32), SDS((cap,), jnp.int32),
+            SDS((cap,), jnp.bool_), SDS((n,), jnp.int32),
+            SDS((n,), jnp.int64), SDS((b,), jnp.int32),
+        )
+        in_specs = (P(flat), P(flat), P(flat), P(), P(), P())
+        out_specs = None
+    else:
+        def step(src, dst, valid, core, label, ns, nd, ok, ne):
+            return insert_batch(src, dst, valid, core, label, ns, nd, ok,
+                                ne, n, n_levels)
+
+        abstract = (
+            SDS((cap,), jnp.int32), SDS((cap,), jnp.int32),
+            SDS((cap,), jnp.bool_), SDS((n,), jnp.int32),
+            SDS((n,), jnp.int64), SDS((b,), jnp.int32),
+            SDS((b,), jnp.int32), SDS((b,), jnp.bool_), SDS((), jnp.int32),
+        )
+        in_specs = (P(flat), P(flat), P(flat), P(), P(), P(), P(), P(), P())
+        out_specs = None
+
+    def concrete(key):
+        from ..graph.generators import erdos_renyi
+        from ..core.api import CoreMaintainer
+
+        g = erdos_renyi(n, min(cap // 4, 3 * n), seed=0)
+        m = CoreMaintainer.from_graph(g, capacity=cap)
+        if cell.kind == "coremaint_remove":
+            slots = np.full(b, -1, dtype=np.int32)
+            keys = list(m.edge_slot.values())[:b]
+            slots[: len(keys)] = keys
+            return (m.src, m.dst, m.valid, m.core, m.label,
+                    jnp.asarray(slots))
+        rng = np.random.default_rng(1)
+        ns = rng.integers(0, n, size=b).astype(np.int32)
+        nd = (ns + 1 + rng.integers(0, n - 1, size=b)).astype(np.int32) % n
+        ok = ns != nd
+        return (m.src, m.dst, m.valid, m.core, m.label,
+                jnp.asarray(ns), jnp.asarray(nd), jnp.asarray(ok),
+                m.n_edges)
+
+    return CellProgram(
+        name=f"{arch_name}:{cell.name}", fn=step,
+        abstract_inputs=abstract, in_specs=in_specs, out_specs=out_specs,
+        concrete_inputs=concrete if for_smoke else None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+def build_cell(
+    arch_name: str,
+    shape_name: str,
+    smoke: bool = False,
+    multi_pod: bool = False,
+    unroll: bool = False,
+) -> CellProgram:
+    mod = get_arch(arch_name)
+    cfg = mod.smoke() if smoke else mod.full()
+    if unroll and hasattr(cfg, "scan_unroll"):
+        cfg = dataclasses.replace(cfg, scan_unroll=cfg.n_layers)
+    shapes = mod.SHAPES_SMOKE if smoke else mod.SHAPES
+    cell = next(c for c in shapes if c.name == shape_name)
+    if mod.FAMILY == "lm":
+        return _lm_cell(arch_name, cfg, cell, multi_pod, smoke)
+    if mod.FAMILY == "gnn":
+        return _gnn_cell(arch_name, cfg, cell, multi_pod, smoke)
+    if mod.FAMILY == "recsys":
+        return _recsys_cell(arch_name, cfg, cell, multi_pod, smoke)
+    if mod.FAMILY == "coremaint":
+        return _coremaint_cell(arch_name, cfg, cell, multi_pod, smoke)
+    raise ValueError(mod.FAMILY)
+
+
+def cell_names(arch_name: str, smoke: bool = False):
+    mod = get_arch(arch_name)
+    shapes = mod.SHAPES_SMOKE if smoke else mod.SHAPES
+    return [c.name for c in shapes]

@@ -1,0 +1,1 @@
+from . import gnn, recsys, transformer  # noqa: F401

@@ -1,0 +1,683 @@
+"""Unified decoder-only LM covering every assigned transformer arch.
+
+One parametric implementation:
+  * attention: GQA (llama/yi/qwen) or MLA (DeepSeek-V2 latent KV compression)
+  * optional qk-norm (qwen3), optional QKV bias (qwen2)
+  * FFN: dense SwiGLU or DeepSeek-MoE (shared + routed experts, top-k,
+    sort-based capacity dispatch)
+  * layers stacked with lax.scan over a stacked param pytree (compile time
+    stays O(1) in depth — required for 60-layer dry-runs)
+  * KV-cache prefill/decode; MLA caches the 512+64-dim latent per token,
+    which is what makes the 500k-context decode cell cheap.
+
+Everything is explicit-dtype (bf16 activations/params, f32 logits+loss,
+f32 rngless init) — the package-level x64 flag does not affect numerics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_routed: int
+    n_shared: int
+    top_k: int
+    d_expert: int
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora: int = 512
+    q_lora: int = 0          # 0 = dense q projection
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    attention: str = "gqa"           # "gqa" | "mla"
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    remat: str = "none"              # "none" | "full"
+    scan_unroll: int = 1             # dry-run sets n_layers for true HLO cost
+    # activation-sharding constraints (mesh axis names); None = unconstrained.
+    # Pinning activations batch-sharded forces GSPMD to gather FSDP weights
+    # at use instead of resharding activations to full batch (§Perf A2).
+    batch_axes: Any = None           # e.g. "data" or ("pod", "data")
+    tp_axis: Any = None              # e.g. "model"
+    attn_chunk: int = 0              # >0: streaming-softmax KV chunking (D2)
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (embedding + layers)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        if self.attention == "mla":
+            m = self.mla or MLAConfig()
+            qk_head = m.nope_head_dim + m.rope_head_dim
+            q_in = m.q_lora if m.q_lora else d
+            attn = (
+                (d * m.q_lora if m.q_lora else 0)
+                + q_in * self.n_heads * qk_head
+                + d * (m.kv_lora + m.rope_head_dim)
+                + m.kv_lora * self.n_heads * (m.nope_head_dim + m.v_head_dim)
+                + self.n_heads * m.v_head_dim * d
+            )
+        else:
+            attn = (
+                d * self.n_heads * self.d_head
+                + 2 * d * self.n_kv_heads * self.d_head
+                + self.n_heads * self.d_head * d
+            )
+        if self.moe:
+            ffn = (
+                d * self.moe.n_routed  # router
+                + (self.moe.n_routed + self.moe.n_shared)
+                * 3 * d * self.moe.d_expert
+            )
+        else:
+            ffn = 3 * d * ff
+        per_layer = attn + ffn + 2 * d
+        return v * d * 2 + self.n_layers * per_layer + d
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if not self.moe:
+            return self.n_params
+        d = self.d_model
+        inactive = (
+            (self.moe.n_routed - self.moe.top_k)
+            * 3 * d * self.moe.d_expert
+        ) * self.n_layers
+        return self.n_params - inactive
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+def _pin(cfg, x, *rest):
+    """with_sharding_constraint(batch_axes, *rest) when configured."""
+    if cfg.batch_axes is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(cfg.batch_axes, *rest)
+    )
+
+
+def rms_norm(x: Array, scale: Array, eps: float) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x [..., S, H, D]; positions [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def _init(key, shape, fan_in, dtype):
+    scale = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(
+        dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameter init (stacked over layers)
+# ---------------------------------------------------------------------------
+def init_params(cfg: LMConfig, key: jax.Array) -> Dict[str, Any]:
+    keys = jax.random.split(key, 16)
+    d, dt = cfg.d_model, cfg.dtype
+    L = cfg.n_layers
+    p: Dict[str, Any] = {
+        "embed": _init(keys[0], (cfg.vocab, d), d, dt),
+        "unembed": _init(keys[1], (d, cfg.vocab), d, dt),
+        "final_norm": jnp.ones((d,), dt),
+    }
+    layer: Dict[str, Any] = {
+        "ln_attn": jnp.ones((L, d), dt),
+        "ln_ffn": jnp.ones((L, d), dt),
+    }
+    if cfg.attention == "mla":
+        m = cfg.mla or MLAConfig()
+        qk_head = m.nope_head_dim + m.rope_head_dim
+        q_in = m.q_lora if m.q_lora else d
+        if m.q_lora:
+            layer["w_dq"] = _init(keys[2], (L, d, m.q_lora), d, dt)
+            layer["q_ln"] = jnp.ones((L, m.q_lora), dt)
+        layer["w_uq"] = _init(keys[3], (L, q_in, cfg.n_heads, qk_head), q_in, dt)
+        layer["w_dkv"] = _init(
+            keys[4], (L, d, m.kv_lora + m.rope_head_dim), d, dt
+        )
+        layer["kv_ln"] = jnp.ones((L, m.kv_lora), dt)
+        layer["w_uk"] = _init(
+            keys[5], (L, m.kv_lora, cfg.n_heads, m.nope_head_dim), m.kv_lora, dt
+        )
+        layer["w_uv"] = _init(
+            keys[6], (L, m.kv_lora, cfg.n_heads, m.v_head_dim), m.kv_lora, dt
+        )
+        layer["w_o"] = _init(
+            keys[7], (L, cfg.n_heads, m.v_head_dim, d),
+            cfg.n_heads * m.v_head_dim, dt,
+        )
+    else:
+        layer["w_q"] = _init(
+            keys[2], (L, d, cfg.n_heads, cfg.d_head), d, dt
+        )
+        layer["w_k"] = _init(
+            keys[3], (L, d, cfg.n_kv_heads, cfg.d_head), d, dt
+        )
+        layer["w_v"] = _init(
+            keys[4], (L, d, cfg.n_kv_heads, cfg.d_head), d, dt
+        )
+        layer["w_o"] = _init(
+            keys[5], (L, cfg.n_heads, cfg.d_head, d),
+            cfg.n_heads * cfg.d_head, dt,
+        )
+        if cfg.qkv_bias:
+            layer["b_q"] = jnp.zeros((L, cfg.n_heads, cfg.d_head), dt)
+            layer["b_k"] = jnp.zeros((L, cfg.n_kv_heads, cfg.d_head), dt)
+            layer["b_v"] = jnp.zeros((L, cfg.n_kv_heads, cfg.d_head), dt)
+        if cfg.qk_norm:
+            layer["q_norm"] = jnp.ones((L, cfg.d_head), dt)
+            layer["k_norm"] = jnp.ones((L, cfg.d_head), dt)
+    if cfg.moe:
+        mo = cfg.moe
+        layer["router"] = _init(keys[8], (L, d, mo.n_routed), d, jnp.float32)
+        layer["w_gate"] = _init(
+            keys[9], (L, mo.n_routed, d, mo.d_expert), d, dt
+        )
+        layer["w_up"] = _init(
+            keys[10], (L, mo.n_routed, d, mo.d_expert), d, dt
+        )
+        layer["w_down"] = _init(
+            keys[11], (L, mo.n_routed, mo.d_expert, d), mo.d_expert, dt
+        )
+        if mo.n_shared:
+            sh_ff = mo.d_expert * mo.n_shared
+            layer["ws_gate"] = _init(keys[12], (L, d, sh_ff), d, dt)
+            layer["ws_up"] = _init(keys[13], (L, d, sh_ff), d, dt)
+            layer["ws_down"] = _init(keys[14], (L, sh_ff, d), sh_ff, dt)
+    else:
+        layer["w_gate"] = _init(keys[8], (L, d, cfg.d_ff), d, dt)
+        layer["w_up"] = _init(keys[9], (L, d, cfg.d_ff), d, dt)
+        layer["w_down"] = _init(keys[10], (L, cfg.d_ff, d), cfg.d_ff, dt)
+    p["layers"] = layer
+    return p
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def _attend_chunked(q: Array, k: Array, v: Array, causal: bool,
+                    chunk: int) -> Array:
+    """Streaming-softmax attention: lax.scan over KV chunks with running
+    max/normalizer — the flash-attention recurrence expressed at the XLA
+    level, so the [S, T] score matrix never materializes (peak activation
+    drops from O(S*T) to O(S*chunk); §Perf bonus iteration D2). The Pallas
+    kernel (kernels/flash_attention.py) is the TPU-native form; this path
+    keeps the dry-run/CPU graph structurally identical."""
+    b, s, h, dq = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    n_chunks = t // chunk
+    qg = (q.reshape(b, s, hkv, g, dq).astype(jnp.float32)
+          / math.sqrt(dq))
+    kc = k.reshape(b, n_chunks, chunk, hkv, -1).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hkv, -1).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(s)
+
+    def body(carry, xs):
+        acc, m, l = carry
+        k_i, v_i, idx = xs
+        logits = jnp.einsum(
+            "bshgd,bthd->bhgst", qg, k_i.astype(jnp.float32)
+        )
+        if causal:
+            k_pos = idx * chunk + jnp.arange(chunk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = alpha[..., None] * acc + jnp.einsum(
+            "bhgst,bthd->bhgsd", p, v_i.astype(jnp.float32)
+        )
+        return (acc_new, m_new, l_new), None
+
+    dv = v.shape[-1]
+    init = (
+        jnp.zeros((b, hkv, g, s, dv), jnp.float32),
+        jnp.full((b, hkv, g, s), -1e30, jnp.float32),
+        jnp.zeros((b, hkv, g, s), jnp.float32),
+    )
+    (acc, m, l), _ = jax.lax.scan(
+        body, init, (kc, vc, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, dv).astype(q.dtype)
+
+
+def _attend(q: Array, k: Array, v: Array, causal: bool,
+            q_offset: Array | int = 0) -> Array:
+    """q [B,S,H,Dq], k/v [B,T,Hkv,D*]; returns [B,S,H,Dv]. fp32 softmax."""
+    b, s, h, dq = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, dq)
+    logits = jnp.einsum(
+        "bshgd,bthd->bhgst", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(dq)
+    if causal:
+        q_pos = q_offset + jnp.arange(s)[:, None]
+        k_pos = jnp.arange(t)[None, :]
+        mask = q_pos >= k_pos
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, v.shape[-1]).astype(q.dtype)
+
+
+def _gqa_qkv(cfg, lp, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, lp["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, lp["w_v"])
+    if cfg.qkv_bias:
+        q = q + lp["b_q"]
+        k = k + lp["b_k"]
+        v = v + lp["b_v"]
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mla_q(cfg, lp, x, positions):
+    m = cfg.mla or MLAConfig()
+    if m.q_lora:
+        cq = rms_norm(
+            jnp.einsum("bsd,dr->bsr", x, lp["w_dq"]), lp["q_ln"], cfg.norm_eps
+        )
+    else:
+        cq = x
+    q = jnp.einsum("bsr,rhk->bshk", cq, lp["w_uq"])
+    q_nope = q[..., : m.nope_head_dim]
+    q_rope = rope(q[..., m.nope_head_dim :], positions, cfg.rope_theta)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _mla_latent(cfg, lp, x, positions):
+    """Returns the per-token latent cache entry: c_kv [B,S,R], k_rope [B,S,1,Dr]."""
+    m = cfg.mla or MLAConfig()
+    dkv = jnp.einsum("bsd,dr->bsr", x, lp["w_dkv"])
+    c_kv = rms_norm(dkv[..., : m.kv_lora], lp["kv_ln"], cfg.norm_eps)
+    k_rope = rope(
+        dkv[..., m.kv_lora :][:, :, None, :], positions, cfg.rope_theta
+    )
+    return c_kv, k_rope
+
+
+def _mla_attend(cfg, lp, q, c_kv, k_rope, causal, q_offset=0):
+    """MLA attention against the latent cache (absorbed form).
+
+    q [B,S,H,nope+rope]; c_kv [B,T,R]; k_rope [B,T,1,Dr].
+    k_nope[h] = c_kv @ w_uk[h]; score = q_nope.k_nope + q_rope.k_rope.
+    The nope part is computed in the latent space by absorbing w_uk into q
+    (q_lat = q_nope @ w_uk^T), so per-token decode work is O(R) not O(H*D).
+    """
+    m = cfg.mla or MLAConfig()
+    q_nope = q[..., : m.nope_head_dim]
+    q_rope = q[..., m.nope_head_dim :]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, lp["w_uk"])
+    logits = jnp.einsum(
+        "bshr,btr->bhst", q_lat.astype(jnp.float32), c_kv.astype(jnp.float32)
+    )
+    logits = logits + jnp.einsum(
+        "bshk,btk->bhst",
+        q_rope.astype(jnp.float32),
+        k_rope[:, :, 0].astype(jnp.float32),
+    )
+    logits = logits / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    s, t = q.shape[1], c_kv.shape[1]
+    if causal:
+        q_pos = q_offset + jnp.arange(s)[:, None]
+        k_pos = jnp.arange(t)[None, :]
+        logits = jnp.where((q_pos >= k_pos)[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # value in latent space, then up-project: o = (probs @ c_kv) @ w_uv
+    o_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bshr,rhk->bshk", o_lat.astype(q.dtype), lp["w_uv"])
+    return o
+
+
+# ---------------------------------------------------------------------------
+# FFN / MoE
+# ---------------------------------------------------------------------------
+def _dense_ffn(lp, x):
+    gate = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, lp["w_gate"]))
+    up = jnp.einsum("bsd,df->bsf", x, lp["w_up"])
+    return jnp.einsum("bsf,fd->bsd", gate * up, lp["w_down"])
+
+
+def _moe_ffn(cfg: LMConfig, lp, x):
+    """Sort-based capacity MoE (shared experts always-on)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), lp["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, mo.top_k)  # [t, k]
+    topw = (topw / jnp.sum(topw, axis=-1, keepdims=True)).astype(x.dtype)
+
+    # capacity dispatch: group assignments by expert
+    cap = int(mo.capacity_factor * mo.top_k * t / mo.n_routed) + 1
+    flat_e = topi.reshape(-1)  # [t*k]
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), mo.top_k)
+    flat_w = topw.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position of each assignment within its expert group
+    pos_in_e = jnp.arange(t * mo.top_k, dtype=jnp.int32) - jnp.searchsorted(
+        se, se, side="left"
+    ).astype(jnp.int32)
+    keep = pos_in_e < cap
+    # dropped assignments scatter out of bounds (mode="drop" discards them)
+    slot = jnp.where(keep, se * cap + pos_in_e, mo.n_routed * cap)
+    # gather tokens into [E, cap, d]
+    buf_tok = jnp.zeros((mo.n_routed * cap,), jnp.int32).at[slot].set(
+        st_, mode="drop"
+    )
+    buf_use = jnp.zeros((mo.n_routed * cap,), bool).at[slot].set(
+        keep, mode="drop"
+    )
+    buf_w = jnp.zeros((mo.n_routed * cap,), x.dtype).at[slot].set(
+        sw, mode="drop"
+    )
+    xe = xt[buf_tok].reshape(mo.n_routed, cap, d)
+    xe = xe * buf_use.reshape(mo.n_routed, cap, 1).astype(x.dtype)
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, lp["w_gate"]))
+    up = jnp.einsum("ecd,edf->ecf", xe, lp["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", gate * up, lp["w_down"])
+    ye = ye * buf_w.reshape(mo.n_routed, cap, 1)
+    out = jnp.zeros((t, d), x.dtype).at[buf_tok].add(
+        ye.reshape(mo.n_routed * cap, d)
+    )
+    # router aux loss (load balancing, GShard style)
+    me = jnp.mean(gates, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topi, mo.n_routed, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux = jnp.sum(me * ce) * mo.n_routed
+    if mo.n_shared:
+        sh_gate = jax.nn.silu(jnp.einsum("td,df->tf", xt, lp["ws_gate"]))
+        sh_up = jnp.einsum("td,df->tf", xt, lp["ws_up"])
+        out = out + jnp.einsum("tf,fd->td", sh_gate * sh_up, lp["ws_down"])
+    out = out.reshape(b, s, d)
+    return _pin(cfg, out, None, None), aux
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _layer_fwd(cfg: LMConfig, lp, x, positions):
+    x = _pin(cfg, x, None, None)
+    h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+    if cfg.attention == "mla":
+        q = _pin(cfg, _mla_q(cfg, lp, h, positions), None, cfg.tp_axis, None)
+        c_kv, k_rope = _mla_latent(cfg, lp, h, positions)
+        attn = _mla_attend(cfg, lp, q, c_kv, k_rope, causal=True)
+    else:
+        q, k, v = _gqa_qkv(cfg, lp, h, positions)
+        q = _pin(cfg, q, None, None, None)
+        if cfg.attn_chunk and q.shape[1] % cfg.attn_chunk == 0:
+            attn = _attend_chunked(q, k, v, causal=True,
+                                   chunk=cfg.attn_chunk)
+        else:
+            attn = _attend(q, k, v, causal=True)
+    attn = _pin(cfg, attn, None, None, None)
+    x = x + jnp.einsum("bshk,hkd->bsd", attn, lp["w_o"])
+    x = _pin(cfg, x, None, None)
+    h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+    if cfg.moe:
+        y, aux = _moe_ffn(cfg, lp, h)
+    else:
+        y, aux = _dense_ffn(lp, h), jnp.float32(0.0)
+    y = _pin(cfg, y, None, None)
+    return x + y, aux
+
+
+def forward(cfg: LMConfig, params, tokens: Array) -> Tuple[Array, Array]:
+    """tokens [B, S] -> (logits [B, S, vocab] f32, aux loss)."""
+    x = _pin(cfg, params["embed"][tokens], None, None)
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def body(carry, lp):
+        x, aux = carry
+        fn = _layer_fwd
+        if cfg.remat == "full":
+            fn = jax.checkpoint(
+                _layer_fwd, static_argnums=(0,),
+                policy=jax.checkpoint_policies.nothing_saveable,
+            )
+        x, a = fn(cfg, lp, x, positions)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["layers"],
+                               unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x.astype(jnp.float32),
+        params["unembed"].astype(jnp.float32),
+    )
+    logits = _pin(cfg, logits, None, cfg.tp_axis)
+    return logits, aux / cfg.n_layers
+
+
+def loss_fn(cfg: LMConfig, params, tokens, targets) -> Array:
+    logits, aux = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+def init_cache(cfg: LMConfig, batch: int, max_seq: int) -> Dict[str, Array]:
+    dt = cfg.dtype
+    if cfg.attention == "mla":
+        m = cfg.mla or MLAConfig()
+        return {
+            "c_kv": jnp.zeros((cfg.n_layers, batch, max_seq, m.kv_lora), dt),
+            "k_rope": jnp.zeros(
+                (cfg.n_layers, batch, max_seq, 1, m.rope_head_dim), dt
+            ),
+            "length": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros(
+            (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head), dt
+        ),
+        "v": jnp.zeros(
+            (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head), dt
+        ),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def _decode_layer(cfg, lp, x, layer_cache, pos):
+    """x [B, 1, d]; layer_cache holds this layer's K/V (or latent) slices."""
+    h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+    positions = pos[None, None]  # [1,1]
+    t = (
+        layer_cache["c_kv"].shape[1]
+        if cfg.attention == "mla"
+        else layer_cache["k"].shape[1]
+    )
+    kv_mask = (jnp.arange(t) <= pos)[None, :]
+    if cfg.attention == "mla":
+        q = _mla_q(cfg, lp, h, positions)
+        c_kv_new, k_rope_new = _mla_latent(cfg, lp, h, positions)
+        zero = jnp.zeros((), pos.dtype)
+        c_kv = jax.lax.dynamic_update_slice(
+            layer_cache["c_kv"], c_kv_new, (zero, pos, zero)
+        )
+        k_rope = jax.lax.dynamic_update_slice(
+            layer_cache["k_rope"], k_rope_new, (zero, pos, zero, zero)
+        )
+        m = cfg.mla or MLAConfig()
+        q_nope = q[..., : m.nope_head_dim]
+        q_rope = q[..., m.nope_head_dim :]
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, lp["w_uk"])
+        logits = jnp.einsum(
+            "bshr,btr->bhst", q_lat.astype(jnp.float32),
+            c_kv.astype(jnp.float32),
+        ) + jnp.einsum(
+            "bshk,btk->bhst", q_rope.astype(jnp.float32),
+            k_rope[:, :, 0].astype(jnp.float32),
+        )
+        logits = logits / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+        logits = jnp.where(kv_mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv.astype(jnp.float32))
+        attn = jnp.einsum(
+            "bshr,rhk->bshk", o_lat.astype(x.dtype), lp["w_uv"]
+        )
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    else:
+        q, k_new, v_new = _gqa_qkv(cfg, lp, h, positions)
+        zero = jnp.zeros((), pos.dtype)
+        k = jax.lax.dynamic_update_slice(
+            layer_cache["k"], k_new, (zero, pos, zero, zero)
+        )
+        v = jax.lax.dynamic_update_slice(
+            layer_cache["v"], v_new, (zero, pos, zero, zero)
+        )
+        b, s, hh, dq = q.shape
+        hkv = k.shape[2]
+        g = hh // hkv
+        qg = q.reshape(b, s, hkv, g, dq)
+        logits = jnp.einsum(
+            "bshgd,bthd->bhgst", qg.astype(jnp.float32), k.astype(jnp.float32)
+        ) / math.sqrt(dq)
+        logits = jnp.where(kv_mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum(
+            "bhgst,bthd->bshgd", probs, v.astype(jnp.float32)
+        ).reshape(b, s, hh, dq).astype(x.dtype)
+        new_cache = {"k": k, "v": v}
+    x = x + jnp.einsum("bshk,hkd->bsd", attn, lp["w_o"])
+    h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+    if cfg.moe:
+        y, _ = _moe_ffn(cfg, lp, h)
+    else:
+        y = _dense_ffn(lp, h)
+    return x + y, new_cache
+
+
+def decode_step(cfg: LMConfig, params, cache, token: Array):
+    """token [B] -> (logits [B, vocab], new cache). One decode position."""
+    x = params["embed"][token][:, None, :]  # [B,1,d]
+    pos = cache["length"]
+
+    def body(x, xs):
+        lp, layer_cache = xs
+        x, new_cache = _decode_layer(cfg, lp, x, layer_cache, pos)
+        return x, new_cache
+
+    cache_layers = {k: v for k, v in cache.items() if k != "length"}
+    x, new_layers = jax.lax.scan(
+        body, x, (params["layers"], cache_layers), unroll=cfg.scan_unroll
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x.astype(jnp.float32),
+        params["unembed"].astype(jnp.float32),
+    )[:, 0]
+    new_cache = dict(new_layers)
+    new_cache["length"] = pos + 1
+    return logits, new_cache
+
+
+def prefill(cfg: LMConfig, params, tokens: Array):
+    """tokens [B, S] -> (last logits [B, vocab], cache filled to S)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(s)[None, :]
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        if cfg.attention == "mla":
+            q = _mla_q(cfg, lp, h, positions)
+            c_kv, k_rope = _mla_latent(cfg, lp, h, positions)
+            attn = _mla_attend(cfg, lp, q, c_kv, k_rope, causal=True)
+            lc = {"c_kv": c_kv, "k_rope": k_rope}
+        else:
+            q, k, v = _gqa_qkv(cfg, lp, h, positions)
+            if cfg.attn_chunk and q.shape[1] % cfg.attn_chunk == 0:
+                attn = _attend_chunked(q, k, v, causal=True,
+                                       chunk=cfg.attn_chunk)
+            else:
+                attn = _attend(q, k, v, causal=True)
+            lc = {"k": k, "v": v}
+        x = x + jnp.einsum("bshk,hkd->bsd", attn, lp["w_o"])
+        h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+        if cfg.moe:
+            y, _ = _moe_ffn(cfg, lp, h)
+        else:
+            y = _dense_ffn(lp, h)
+        return x + y, lc
+
+    x, cache_layers = jax.lax.scan(body, x, params["layers"],
+                                   unroll=cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x[:, -1:].astype(jnp.float32),
+        params["unembed"].astype(jnp.float32),
+    )[:, 0]
+    cache = dict(cache_layers)
+    cache["length"] = jnp.asarray(s, jnp.int32)
+    return logits, cache

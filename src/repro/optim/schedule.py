@@ -1,0 +1,14 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(step, base_lr: float, warmup: int, total: int,
+                       min_ratio: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / max(1, warmup)
+    t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)

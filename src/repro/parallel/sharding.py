@@ -1,0 +1,171 @@
+"""Sharding rules: param/activation PartitionSpecs per architecture family.
+
+Logical layout (mesh axes: optional "pod", "data", "model"):
+  * LM params: FSDP over "data" on the d_model/ff dimension that is NOT
+    tensor-parallel; TP over "model" on heads/ff; embeddings sharded
+    (vocab on "model", d on "data"); MoE experts sharded over "model"
+    (expert parallelism).
+  * LM activations: batch over ("pod","data") — per-shape overrides below.
+  * GNN/recsys: see the per-family spec functions.
+
+"pod" is pure data parallelism: every param spec leaves it unsharded; the
+gradient all-reduce over pods is where optim/compression applies.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def lm_param_specs(cfg, mesh: Mesh = None, model_size: int = 16) -> Dict[str, Any]:
+    """Returns a pytree of PartitionSpec matching models.transformer params.
+
+    Head dimensions are tensor-parallel only when the head count divides the
+    model axis (qwen2: 28 q / 4 kv heads, yi: 56 heads do not divide 16 —
+    those fall back to FSDP-only attention; the §Perf iteration explores
+    better layouts for them)."""
+    fsdp = "data"
+    tp = "model"
+
+    def htp(n_heads):
+        return tp if n_heads % model_size == 0 else None
+
+    lay: Dict[str, Any] = {
+        "ln_attn": P(None, None),
+        "ln_ffn": P(None, None),
+    }
+    if cfg.attention == "mla":
+        m = cfg.mla
+        h = htp(cfg.n_heads)
+        if m and m.q_lora:
+            lay["w_dq"] = P(None, fsdp, tp)
+            lay["q_ln"] = P(None, None)
+        lay["w_uq"] = P(None, fsdp, h, None)
+        lay["w_dkv"] = P(None, fsdp, None)
+        lay["kv_ln"] = P(None, None)
+        lay["w_uk"] = P(None, None, h, None)
+        lay["w_uv"] = P(None, None, h, None)
+        lay["w_o"] = P(None, h, None, fsdp)
+    else:
+        hq = htp(cfg.n_heads)
+        hkv = htp(cfg.n_kv_heads)
+        lay["w_q"] = P(None, fsdp, hq, None)
+        lay["w_k"] = P(None, fsdp, hkv, None)
+        lay["w_v"] = P(None, fsdp, hkv, None)
+        lay["w_o"] = P(None, hq, None, fsdp)
+        if cfg.qkv_bias:
+            lay["b_q"] = P(None, hq, None)
+            lay["b_k"] = P(None, hkv, None)
+            lay["b_v"] = P(None, hkv, None)
+        if cfg.qk_norm:
+            lay["q_norm"] = P(None, None)
+            lay["k_norm"] = P(None, None)
+    if cfg.moe:
+        lay["router"] = P(None, fsdp, None)
+        lay["w_gate"] = P(None, tp, fsdp, None)   # experts over model axis
+        lay["w_up"] = P(None, tp, fsdp, None)
+        lay["w_down"] = P(None, tp, None, fsdp)
+        if cfg.moe.n_shared:
+            lay["ws_gate"] = P(None, fsdp, tp)
+            lay["ws_up"] = P(None, fsdp, tp)
+            lay["ws_down"] = P(None, tp, fsdp)
+    else:
+        lay["w_gate"] = P(None, fsdp, tp)
+        lay["w_up"] = P(None, fsdp, tp)
+        lay["w_down"] = P(None, tp, fsdp)
+    return {
+        "embed": P(tp, fsdp),
+        "unembed": P(fsdp, tp),
+        "final_norm": P(None),
+        "layers": lay,
+    }
+
+
+def lm_batch_spec(multi_pod: bool) -> P:
+    return P(("pod", "data") if multi_pod else "data", None)
+
+
+def lm_cache_specs(
+    cfg,
+    multi_pod: bool,
+    batch: int = 0,
+    data_size: int = 16,
+    model_size: int = 16,
+) -> Dict[str, Any]:
+    """KV cache layout. Two regimes:
+
+    * batch >= data axis: batch-sharded cache (decode_32k), heads/latent
+      over model where divisible.
+    * batch < data axis (long_500k, batch=1): SEQUENCE-sharded cache —
+      GSPMD lowers the masked softmax over the sharded length axis to
+      cheap all-reduces of the running max/sum (flash-decoding layout).
+    """
+    pods = 2 if multi_pod else 1
+    batch_ax = ("pod", "data") if multi_pod else "data"
+    seq_shard = batch % (data_size * pods) != 0
+    b_ax = None if seq_shard else batch_ax
+    s_ax = batch_ax if seq_shard else None
+    if cfg.attention == "mla":
+        m = cfg.mla
+        lat = "model" if (m and m.kv_lora % model_size == 0) else None
+        return {
+            "c_kv": P(None, b_ax, s_ax, lat),
+            "k_rope": P(None, b_ax, s_ax, None, None),
+            "length": P(),
+        }
+    if cfg.n_kv_heads % model_size == 0:
+        hkv, s2_ax = "model", s_ax
+    else:
+        # too few KV heads for TP (yi: 8, qwen2: 4): shard the cache
+        # LENGTH over "model" instead — the masked softmax over a sharded
+        # length axis costs only tiny running-max/sum all-reduces
+        # (flash-decoding layout; §Perf bonus iteration D1)
+        hkv = None
+        if s_ax:
+            base = s_ax if isinstance(s_ax, tuple) else (s_ax,)
+            s2_ax = base + ("model",)
+        else:
+            s2_ax = "model"
+    return {
+        "k": P(None, b_ax, s2_ax, hkv, None),
+        "v": P(None, b_ax, s2_ax, hkv, None),
+        "length": P(),
+    }
+
+
+def opt_state_specs(param_specs) -> Dict[str, Any]:
+    return {
+        "m": param_specs,
+        "v": param_specs,
+        "count": P(),
+    }
+
+
+def gnn_specs(multi_pod: bool):
+    """Full-graph GNN: nodes and edges 1D-sharded over the whole mesh."""
+    flat = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return {
+        "node_feat": P(flat, None),
+        "senders": P(flat),
+        "receivers": P(flat),
+        "edge_mask": P(flat),
+        "node_mask": P(flat),
+        "graph_id": P(flat),
+    }
+
+
+def recsys_specs(multi_pod: bool):
+    flat = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return {
+        "embed": P(flat, None),    # rows over the whole mesh
+        "w1": P(flat),
+        "batch": P(flat),
+    }
+
+
+def shard_params(params, specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda p, s: jax.device_put(p, NamedSharding(mesh, s)), params, specs
+    )

@@ -1,0 +1,2 @@
+from .loop import TrainConfig, make_train_step, run_training  # noqa: F401
+from . import checkpoint, fault  # noqa: F401

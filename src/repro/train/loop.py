@@ -1,0 +1,138 @@
+"""Generic training loop: grad accumulation (microbatching), clipping,
+schedule, AdamW, checkpoint/auto-resume, preemption + straggler hooks.
+
+``make_train_step`` returns a pure jittable function
+(params, opt_state, step, batch) -> (params, opt_state, metrics); the
+driver in launch/train.py pjits it with the arch's sharding specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..optim.adamw import adamw_init, adamw_update, clip_by_global_norm
+from ..optim.schedule import cosine_with_warmup
+from . import checkpoint as ckpt
+from .fault import PreemptionGuard, StragglerMonitor
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 1000
+    clip_norm: float = 1.0
+    weight_decay: float = 0.1
+    micro_batches: int = 1
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    keep_ckpts: int = 3
+
+
+def make_train_step(
+    loss_fn: Callable[..., jax.Array],
+    tc: TrainConfig,
+):
+    """loss_fn(params, *batch) -> scalar. Batch leaves' leading axis is split
+    into ``micro_batches`` chunks for gradient accumulation."""
+
+    def train_step(params, opt_state, step, *batch):
+        def lf(p, *mb):
+            return loss_fn(p, *mb)
+
+        if tc.micro_batches == 1:
+            loss, grads = jax.value_and_grad(lf)(params, *batch)
+        else:
+            def split(x):
+                return x.reshape(
+                    (tc.micro_batches, x.shape[0] // tc.micro_batches)
+                    + x.shape[1:]
+                )
+
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                acc_loss, acc_grads = carry
+                loss, grads = jax.value_and_grad(lf)(params, *mb)
+                return (
+                    acc_loss + loss,
+                    jax.tree.map(jnp.add, acc_grads, grads),
+                ), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), zero), micro
+            )
+            loss = loss / tc.micro_batches
+            grads = jax.tree.map(lambda g: g / tc.micro_batches, grads)
+
+        grads, gnorm = clip_by_global_norm(grads, tc.clip_norm)
+        lr = cosine_with_warmup(step, tc.lr, tc.warmup, tc.total_steps)
+        params, opt_state = adamw_update(
+            params, grads, opt_state, lr, weight_decay=tc.weight_decay
+        )
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def run_training(
+    params,
+    loss_fn,
+    batches,
+    tc: TrainConfig,
+    jit_kwargs: Optional[Dict[str, Any]] = None,
+    log_every: int = 10,
+    on_step: Optional[Callable[[int, Dict[str, Any]], None]] = None,
+) -> Tuple[Any, Dict[str, Any]]:
+    """Host driver: auto-resume, checkpoint cadence, preemption-safe."""
+    opt_state = adamw_init(params)
+    step0 = 0
+    if tc.ckpt_dir:
+        restored_step, (params, opt_state) = ckpt.restore_checkpoint(
+            tc.ckpt_dir, (params, opt_state)
+        )
+        if restored_step is not None:
+            step0 = restored_step + 1
+    train_step = jax.jit(
+        make_train_step(loss_fn, tc), donate_argnums=(0, 1),
+        **(jit_kwargs or {}),
+    )
+    guard = PreemptionGuard().install()
+    monitor = StragglerMonitor()
+    history = []
+    step = step0
+    try:
+        for step, batch in enumerate(batches, start=step0):
+            if step >= tc.total_steps:
+                break
+            monitor.step_start(step)
+            params, opt_state, metrics = train_step(
+                params, opt_state, jnp.asarray(step), *batch
+            )
+            metrics = {k: float(v) for k, v in metrics.items()}
+            monitor.step_end()
+            history.append(metrics)
+            if on_step:
+                on_step(step, metrics)
+            if tc.ckpt_dir and (
+                step % tc.ckpt_every == 0 or guard.requested
+            ):
+                ckpt.save_checkpoint(tc.ckpt_dir, step, (params, opt_state))
+                ckpt.prune_checkpoints(tc.ckpt_dir, tc.keep_ckpts)
+            if guard.requested:
+                break
+    finally:
+        guard.uninstall()
+    return params, {
+        "history": history,
+        "final_step": step,
+        "stragglers": monitor.straggler_steps,
+    }

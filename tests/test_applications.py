@@ -1,0 +1,56 @@
+"""Core-number applications: k-core sparsification correctness under
+dynamic edits, sampling priorities."""
+import numpy as np
+
+from repro.core.api import CoreMaintainer
+from repro.core.applications import (
+    core_sampling_weights,
+    densest_region_vertices,
+    kcore_subgraph,
+)
+from repro.core.oracle import bz_from_csr
+from repro.graph.csr import build_csr
+from repro.graph.generators import erdos_renyi
+
+
+def test_kcore_subgraph_is_the_kcore_after_edits():
+    g = erdos_renyi(300, 1500, seed=0)
+    m = CoreMaintainer.from_graph(g, capacity=8192)
+    rng = np.random.default_rng(0)
+    batch = []
+    while len(batch) < 40:
+        u, v = rng.integers(0, g.n, size=2)
+        key = (int(min(u, v)), int(max(u, v)))
+        if u != v and not g.has_edge(*key) and key not in batch:
+            batch.append(key)
+    m.insert_edges(np.asarray(batch))
+
+    for k in (2, 3, int(m.cores().max())):
+        nodes, edges = kcore_subgraph(m, k)
+        # every vertex of the extracted subgraph has degree >= k inside it
+        if nodes.size == 0:
+            continue
+        sub = build_csr(m.n, edges)
+        deg = sub.degrees()
+        assert (deg[nodes] >= k).all(), (k, deg[nodes].min())
+        # and the node set matches {v: core(v) >= k}
+        np.testing.assert_array_equal(
+            nodes, np.nonzero(m.cores() >= k)[0]
+        )
+
+
+def test_sampling_weights_bias_toward_dense_regions():
+    g = erdos_renyi(200, 900, seed=1)
+    m = CoreMaintainer.from_graph(g)
+    w = core_sampling_weights(m, alpha=2.0)
+    assert abs(w.sum() - 1.0) < 1e-5
+    c = m.cores()
+    assert w[c == c.max()].mean() > w[c == c.min()].mean()
+
+
+def test_densest_region_nonempty():
+    g = erdos_renyi(200, 900, seed=2)
+    m = CoreMaintainer.from_graph(g)
+    v = densest_region_vertices(m, top_frac=0.05)
+    assert v.size >= 1
+    assert (m.cores()[v] >= m.cores().max() - 1).any()

@@ -1,0 +1,213 @@
+"""JAX parallel core maintenance vs the sequential oracle.
+
+The defining property: after any sequence of batched insertions/removals,
+the JAX maintainer's core numbers equal BZ-from-scratch (and hence the
+Simplified-Order oracle's)."""
+import numpy as np
+import pytest
+
+from repro.core.api import CoreMaintainer
+from repro.core.decomposition import (
+    h_index_decomposition,
+    peel_decomposition,
+)
+from repro.core.oracle import bz_from_csr
+from repro.graph.csr import add_edges_csr, build_csr, remove_edges_csr
+from repro.graph.generators import barabasi_albert, erdos_renyi, rmat
+
+import jax.numpy as jnp
+
+
+def _bz(n, edges):
+    return bz_from_csr(build_csr(n, edges))
+
+
+# ---------------------------------------------------------------------------
+# decomposition
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(4))
+def test_peel_decomposition_matches_bz(seed):
+    g = erdos_renyi(120, 460, seed=seed)
+    m = CoreMaintainer.from_graph(g, init="jax-peel")
+    np.testing.assert_array_equal(m.cores(), bz_from_csr(g))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_h_index_matches_bz(seed):
+    g = rmat(7, 400, seed=seed)
+    m = CoreMaintainer.from_graph(g)
+    core = h_index_decomposition(m.src, m.dst, m.valid, m.n)
+    np.testing.assert_array_equal(np.asarray(core), bz_from_csr(g))
+
+
+def test_peel_rank_is_valid_korder():
+    """Certificate: dout(v) = |{w in N(v): (core,rank) greater}| <= core(v)."""
+    g = erdos_renyi(100, 420, seed=1)
+    m = CoreMaintainer.from_graph(g, init="jax-peel")
+    core, label = m.cores(), m.labels()
+    for v in range(g.n):
+        succ = sum(
+            1
+            for w in g.neighbors(v)
+            if (core[w], label[w]) > (core[v], label[v])
+        )
+        assert succ <= core[v], (v, succ, core[v])
+
+
+# ---------------------------------------------------------------------------
+# insertion
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(6))
+def test_insert_batches_match_bz(seed):
+    rng = np.random.default_rng(seed)
+    n = 90
+    g = erdos_renyi(n, 200, seed=seed)
+    m = CoreMaintainer.from_graph(g, capacity=4096)
+    cur = g
+    for bi in range(4):
+        batch = []
+        while len(batch) < 8:
+            u, v = rng.integers(0, n, size=2)
+            if u == v:
+                continue
+            key = (int(min(u, v)), int(max(u, v)))
+            if cur.has_edge(*key) or key in batch:
+                continue
+            batch.append(key)
+        arr = np.asarray(batch, dtype=np.int64)
+        m.insert_edges(arr)
+        cur = add_edges_csr(cur, arr)
+        np.testing.assert_array_equal(m.cores(), bz_from_csr(cur))
+
+
+def test_insert_dense_hotspot():
+    """Many edges incident to the same vertices in one batch — core numbers
+    can rise by more than one; exercises multi-round promotion."""
+    n = 30
+    base = [(i, (i + 1) % n) for i in range(n)]  # ring, core 1
+    g = build_csr(n, np.asarray(base))
+    m = CoreMaintainer.from_graph(g, capacity=4096)
+    # densify vertices 0..7 into a clique
+    batch = [
+        (i, j) for i in range(8) for j in range(i + 1, 8) if not g.has_edge(i, j)
+    ]
+    m.insert_edges(np.asarray(batch))
+    cur = add_edges_csr(g, np.asarray(batch))
+    np.testing.assert_array_equal(m.cores(), bz_from_csr(cur))
+    assert int(m.last_insert_stats.rounds) >= 2  # multi-round cascade
+
+
+def test_insert_uniform_core_graph():
+    """BA graphs: all vertices share one core number — the case where prior
+    parallel methods serialize but ours keeps full parallelism (paper §1)."""
+    g = barabasi_albert(120, deg=6, seed=0)
+    m = CoreMaintainer.from_graph(g, capacity=8192)
+    rng = np.random.default_rng(3)
+    batch = []
+    while len(batch) < 16:
+        u, v = rng.integers(0, g.n, size=2)
+        key = (int(min(u, v)), int(max(u, v)))
+        if u == v or g.has_edge(*key) or key in batch:
+            continue
+        batch.append(key)
+    arr = np.asarray(batch)
+    m.insert_edges(arr)
+    cur = add_edges_csr(g, arr)
+    np.testing.assert_array_equal(m.cores(), bz_from_csr(cur))
+
+
+# ---------------------------------------------------------------------------
+# removal
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(6))
+def test_remove_batches_match_bz(seed):
+    rng = np.random.default_rng(seed + 50)
+    n = 90
+    g = erdos_renyi(n, 340, seed=seed)
+    m = CoreMaintainer.from_graph(g)
+    cur = g
+    for bi in range(4):
+        edges = cur.edge_array()
+        take = rng.choice(edges.shape[0], size=10, replace=False)
+        batch = edges[take]
+        m.remove_edges(batch)
+        cur = remove_edges_csr(cur, batch)
+        np.testing.assert_array_equal(m.cores(), bz_from_csr(cur))
+
+
+def test_remove_whole_clique_cascade():
+    """Removing a clique edge triggers a multi-level cascade."""
+    n = 12
+    clique = [(i, j) for i in range(8) for j in range(i + 1, 8)]
+    tail = [(7 + i, 8 + i) for i in range(n - 8)]
+    g = build_csr(n, np.asarray(clique + tail))
+    m = CoreMaintainer.from_graph(g)
+    batch = np.asarray([(0, 1), (0, 2), (1, 2)])
+    m.remove_edges(batch)
+    cur = remove_edges_csr(g, batch)
+    np.testing.assert_array_equal(m.cores(), bz_from_csr(cur))
+
+
+# ---------------------------------------------------------------------------
+# mixed workloads + order certificate
+# ---------------------------------------------------------------------------
+def _order_certificate(m: CoreMaintainer):
+    """dout(v) <= core(v) for all v (valid k-order witness)."""
+    core, label = m.cores(), m.labels()
+    src = np.asarray(m.src)
+    dst = np.asarray(m.dst)
+    val = np.asarray(m.valid)
+    dout = np.zeros(m.n, dtype=np.int64)
+    for s, d, ok in zip(src, dst, val):
+        if not ok:
+            continue
+        if (core[d], label[d]) > (core[s], label[s]):
+            dout[s] += 1
+        else:
+            dout[d] += 1
+    bad = np.nonzero(dout > core)[0]
+    return bad
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_mixed_workload_and_certificate(seed):
+    rng = np.random.default_rng(seed + 9)
+    n = 70
+    g = erdos_renyi(n, 260, seed=seed)
+    m = CoreMaintainer.from_graph(g, capacity=8192)
+    cur = g
+    for step in range(8):
+        if rng.random() < 0.5:
+            batch = []
+            while len(batch) < 6:
+                u, v = rng.integers(0, n, size=2)
+                key = (int(min(u, v)), int(max(u, v)))
+                if u == v or cur.has_edge(*key) or key in batch:
+                    continue
+                batch.append(key)
+            arr = np.asarray(batch)
+            m.insert_edges(arr)
+            cur = add_edges_csr(cur, arr)
+        else:
+            edges = cur.edge_array()
+            take = rng.choice(
+                edges.shape[0], size=min(6, edges.shape[0]), replace=False
+            )
+            batch = edges[take]
+            m.remove_edges(batch)
+            cur = remove_edges_csr(cur, batch)
+        np.testing.assert_array_equal(m.cores(), bz_from_csr(cur))
+        bad = _order_certificate(m)
+        assert bad.size == 0, f"k-order certificate violated at {bad}"
+
+
+def test_save_load_roundtrip(tmp_path):
+    g = erdos_renyi(50, 150, seed=0)
+    m = CoreMaintainer.from_graph(g)
+    p = str(tmp_path / "state.npz")
+    m.save(p)
+    m2 = CoreMaintainer.load(p)
+    np.testing.assert_array_equal(m.cores(), m2.cores())
+    m.insert_edges(np.asarray([[0, 49]]))
+    m2.insert_edges(np.asarray([[0, 49]]))
+    np.testing.assert_array_equal(m.cores(), m2.cores())

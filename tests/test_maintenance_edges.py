@@ -1,0 +1,103 @@
+"""Edge-case coverage for maintenance machinery: OM label renumbering,
+capacity compaction and growth, decomposition init parity."""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.api import CoreMaintainer
+from repro.core.oracle import bz_from_csr
+from repro.core.order import LABEL_GAP, needs_renumber, renumber
+from repro.graph.csr import add_edges_csr, build_csr, remove_edges_csr
+from repro.graph.generators import erdos_renyi
+
+
+def test_global_renumber_preserves_order():
+    g = erdos_renyi(120, 500, seed=0)
+    m = CoreMaintainer.from_graph(g)
+    core, label = m.core, m.label
+    # order pairs before
+    order = np.lexsort((np.asarray(label), np.asarray(core)))
+    new_label = renumber(core, label)
+    order2 = np.lexsort((np.asarray(new_label), np.asarray(core)))
+    np.testing.assert_array_equal(order, order2)
+    # labels respaced to the standard gap
+    diffs = np.diff(np.sort(np.asarray(new_label)))
+    assert (diffs == int(LABEL_GAP)).all()
+
+
+def test_forced_renumber_keeps_maintenance_exact():
+    g = erdos_renyi(80, 300, seed=1)
+    m = CoreMaintainer.from_graph(g, capacity=4096)
+    # push labels to the renumber threshold artificially
+    m.label = m.label - (jnp.int64(1) << 61) - 1
+    assert bool(needs_renumber(m.label))
+    m._maybe_renumber()
+    assert not bool(needs_renumber(m.label))
+    # maintenance still exact afterwards
+    rng = np.random.default_rng(0)
+    batch = []
+    while len(batch) < 12:
+        u, v = rng.integers(0, g.n, size=2)
+        key = (int(min(u, v)), int(max(u, v)))
+        if u != v and not g.has_edge(*key) and key not in batch:
+            batch.append(key)
+    m.insert_edges(np.asarray(batch))
+    expect = bz_from_csr(add_edges_csr(g, np.asarray(batch)))
+    np.testing.assert_array_equal(m.cores(), expect)
+
+
+def test_capacity_compaction_and_growth():
+    g = erdos_renyi(50, 120, seed=2)
+    m = CoreMaintainer.from_graph(g, capacity=int(g.m * 1.4) + 8)
+    cur = g
+    rng = np.random.default_rng(3)
+    # churn: repeatedly remove and insert to exhaust slots -> forces
+    # _compact (tombstone reuse) and possibly _grow
+    for round_ in range(10):
+        edges = cur.edge_array()
+        take = rng.choice(edges.shape[0], size=10, replace=False)
+        rm = edges[take]
+        m.remove_edges(rm)
+        cur = remove_edges_csr(cur, rm)
+        ins = []
+        while len(ins) < 10:
+            u, v = rng.integers(0, cur.n, size=2)
+            key = (int(min(u, v)), int(max(u, v)))
+            if u != v and not cur.has_edge(*key) and key not in ins:
+                ins.append(key)
+        m.insert_edges(np.asarray(ins))
+        cur = add_edges_csr(cur, np.asarray(ins))
+        np.testing.assert_array_equal(m.cores(), bz_from_csr(cur))
+    assert m.live_edges == cur.m
+
+
+def test_jax_peel_init_equals_host_bz_init_behaviour():
+    g = erdos_renyi(90, 360, seed=4)
+    m1 = CoreMaintainer.from_graph(g, init="host-bz", capacity=2048)
+    m2 = CoreMaintainer.from_graph(g, init="jax-peel", capacity=2048)
+    np.testing.assert_array_equal(m1.cores(), m2.cores())
+    # same batch gives same cores through either init's k-order
+    rng = np.random.default_rng(5)
+    batch = []
+    while len(batch) < 10:
+        u, v = rng.integers(0, g.n, size=2)
+        key = (int(min(u, v)), int(max(u, v)))
+        if u != v and not g.has_edge(*key) and key not in batch:
+            batch.append(key)
+    m1.insert_edges(np.asarray(batch))
+    m2.insert_edges(np.asarray(batch))
+    np.testing.assert_array_equal(m1.cores(), m2.cores())
+
+
+def test_empty_and_duplicate_batches_are_noops():
+    g = erdos_renyi(40, 100, seed=6)
+    m = CoreMaintainer.from_graph(g)
+    before = m.cores().copy()
+    m.insert_edges(np.zeros((0, 2), dtype=np.int64))
+    # inserting existing edges / self loops is filtered
+    e = g.edge_array()[:5]
+    m.insert_edges(e)
+    m.insert_edges(np.asarray([[3, 3]]))
+    m.remove_edges(np.asarray([[0, 39]]) if not g.has_edge(0, 39)
+                   else np.zeros((0, 2), np.int64))
+    np.testing.assert_array_equal(m.cores(), before)

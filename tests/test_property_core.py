@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis): the system invariants.
+
+Invariant 1: after ANY batch edit sequence, the JAX maintainer's core
+numbers equal BZ recomputation from scratch.
+Invariant 2: the k-order certificate dout(v) <= core(v) holds after every
+batch (validity of the maintained order for future edits).
+Invariant 3: the sequential Simplified-Order oracle agrees edge-by-edge.
+"""
+import numpy as np
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.api import CoreMaintainer
+from repro.core.oracle import OrderCoreMaintainer, bz_from_csr
+from repro.graph.csr import add_edges_csr, build_csr, remove_edges_csr
+
+
+@st.composite
+def graph_and_edits(draw):
+    n = draw(st.integers(min_value=6, max_value=40))
+    max_edges = n * (n - 1) // 2
+    m0 = draw(st.integers(min_value=0, max_value=min(3 * n, max_edges)))
+    rng_seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(rng_seed)
+    # initial edges
+    pairs = [(i, j) for i in range(n) for j in range(i + 1, n)]
+    rng.shuffle(pairs)
+    init = pairs[:m0]
+    # edit script: list of ("ins"|"rem", batch_size)
+    n_steps = draw(st.integers(min_value=1, max_value=4))
+    steps = [
+        (draw(st.sampled_from(["ins", "rem"])),
+         draw(st.integers(min_value=1, max_value=6)))
+        for _ in range(n_steps)
+    ]
+    return n, init, steps, rng_seed
+
+
+@given(graph_and_edits())
+@settings(
+    max_examples=40,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+def test_core_numbers_and_certificate(data):
+    n, init, steps, rng_seed = data
+    rng = np.random.default_rng(rng_seed + 1)
+    g = build_csr(n, np.asarray(init, dtype=np.int64).reshape(-1, 2))
+    m = CoreMaintainer.from_graph(g, capacity=4 * n * n + 64)
+    cur = g
+    for kind, size in steps:
+        existing = {tuple(e) for e in cur.edge_array().tolist()}
+        if kind == "ins":
+            absent = [
+                (i, j)
+                for i in range(n)
+                for j in range(i + 1, n)
+                if (i, j) not in existing
+            ]
+            if not absent:
+                continue
+            take = rng.choice(len(absent), size=min(size, len(absent)),
+                              replace=False)
+            batch = np.asarray([absent[t] for t in take])
+            m.insert_edges(batch)
+            cur = add_edges_csr(cur, batch)
+        else:
+            if not existing:
+                continue
+            lst = sorted(existing)
+            take = rng.choice(len(lst), size=min(size, len(lst)),
+                              replace=False)
+            batch = np.asarray([lst[t] for t in take])
+            m.remove_edges(batch)
+            cur = remove_edges_csr(cur, batch)
+        # Invariant 1
+        np.testing.assert_array_equal(m.cores(), bz_from_csr(cur))
+        # Invariant 2: k-order certificate
+        core, label = m.cores(), m.labels()
+        src = np.asarray(m.src)
+        dst = np.asarray(m.dst)
+        val = np.asarray(m.valid)
+        dout = np.zeros(n, dtype=np.int64)
+        for s, d, ok in zip(src, dst, val):
+            if not ok:
+                continue
+            if (core[d], label[d]) > (core[s], label[s]):
+                dout[s] += 1
+            else:
+                dout[d] += 1
+        assert (dout <= core).all(), np.nonzero(dout > core)
+
+
+@given(graph_and_edits())
+@settings(
+    max_examples=15,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+def test_oracle_agrees_with_jax(data):
+    n, init, steps, rng_seed = data
+    rng = np.random.default_rng(rng_seed + 2)
+    g = build_csr(n, np.asarray(init, dtype=np.int64).reshape(-1, 2))
+    m = CoreMaintainer.from_graph(g, capacity=4 * n * n + 64)
+    oracle = OrderCoreMaintainer(n, g.edge_array())
+    cur = g
+    for kind, size in steps:
+        existing = {tuple(e) for e in cur.edge_array().tolist()}
+        if kind == "ins":
+            absent = [
+                (i, j)
+                for i in range(n)
+                for j in range(i + 1, n)
+                if (i, j) not in existing
+            ]
+            if not absent:
+                continue
+            take = rng.choice(len(absent), size=min(size, len(absent)),
+                              replace=False)
+            batch = np.asarray([absent[t] for t in take])
+            m.insert_edges(batch)
+            oracle.insert_batch(batch)
+            cur = add_edges_csr(cur, batch)
+        else:
+            if not existing:
+                continue
+            lst = sorted(existing)
+            take = rng.choice(len(lst), size=min(size, len(lst)),
+                              replace=False)
+            batch = np.asarray([lst[t] for t in take])
+            m.remove_edges(batch)
+            oracle.remove_batch(batch)
+            cur = remove_edges_csr(cur, batch)
+        np.testing.assert_array_equal(m.cores(), oracle.core)

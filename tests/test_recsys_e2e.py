@@ -1,0 +1,70 @@
+"""RecSys substrate end-to-end: DeepFM trains on planted CTR data; the
+embedding-bag primitive; retrieval scoring."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.recsys import synthetic_ctr_batches
+from repro.models.recsys import (
+    DeepFMConfig,
+    deepfm_forward,
+    deepfm_init,
+    deepfm_loss,
+    embedding_bag,
+    retrieval_score,
+)
+from repro.train.loop import TrainConfig, run_training
+
+
+def test_deepfm_learns_planted_ctr():
+    cfg = DeepFMConfig(n_sparse=8, embed_dim=8, mlp_dims=(32, 32),
+                       rows_per_field=1024)
+    params = deepfm_init(cfg, jax.random.PRNGKey(0))
+    data = synthetic_ctr_batches(cfg.n_sparse, cfg.rows_per_field,
+                                 batch=256, seed=0)
+
+    def batches():
+        for ids, labels in data:
+            yield jnp.asarray(ids), jnp.asarray(labels)
+
+    def lf(p, ids, labels):
+        return deepfm_loss(cfg, p, ids, labels)
+
+    tc = TrainConfig(lr=1e-2, warmup=5, total_steps=300, weight_decay=0.0)
+    params, report = run_training(params, lf, batches(), tc)
+    hist = report["history"]
+    first = np.mean([h["loss"] for h in hist[:10]])
+    last = np.mean([h["loss"] for h in hist[-10:]])
+    assert last < first - 0.005, (first, last)
+    # AUC sanity on a held-out batch from the SAME planted distribution
+    ids, labels = next(data)
+    scores = np.asarray(deepfm_forward(cfg, params, jnp.asarray(ids)))
+    pos = scores[labels > 0.5]
+    neg = scores[labels < 0.5]
+    auc = (pos[:, None] > neg[None, :]).mean()
+    assert auc > 0.6, auc
+
+
+def test_embedding_bag_multihot():
+    table = jnp.asarray(np.arange(20, dtype=np.float32).reshape(10, 2))
+    ids = jnp.asarray([0, 1, 5, 5], jnp.int32)
+    bags = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    out = embedding_bag(table, ids, bags, n_bags=2)
+    np.testing.assert_allclose(np.asarray(out[0]), [2.0, 4.0])
+    np.testing.assert_allclose(np.asarray(out[1]), [20.0, 22.0])
+    mean = embedding_bag(table, ids, bags, n_bags=2, combine="mean")
+    np.testing.assert_allclose(np.asarray(mean[0]), [1.0, 2.0])
+
+
+def test_retrieval_scores_batched_dot():
+    cfg = DeepFMConfig(n_sparse=4, embed_dim=8, mlp_dims=(16,),
+                       rows_per_field=128)
+    params = deepfm_init(cfg, jax.random.PRNGKey(0))
+    q = jnp.asarray(np.random.default_rng(0).integers(
+        0, 128, size=(1, 4)), jnp.int32)
+    cand = jnp.asarray(np.random.default_rng(1).normal(
+        size=(1000, 8)), jnp.float32)
+    s = retrieval_score(cfg, params, q, cand)
+    assert s.shape == (1, 1000)
+    assert bool(jnp.all(jnp.isfinite(s)))

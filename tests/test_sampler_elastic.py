@@ -1,0 +1,47 @@
+"""Neighbor sampler (fanout + core-priority), elastic mesh hooks."""
+import numpy as np
+
+from repro.core.api import CoreMaintainer
+from repro.core.applications import core_sampling_weights
+from repro.graph.generators import erdos_renyi
+from repro.graph.sampler import NeighborSampler
+from repro.train.fault import ElasticMesh
+
+
+def test_fanout_sampler_block_validity():
+    g = erdos_renyi(500, 3000, seed=0)
+    s = NeighborSampler(g, fanouts=(5, 3), seed=1)
+    batch = np.asarray([1, 2, 3, 10, 20])
+    blk = s.sample(batch)
+    n_live = int(blk.node_mask.sum())
+    assert n_live >= len(batch)
+    assert blk.seed_mask.sum() == len(batch)
+    # every live edge points between live local nodes
+    for snd, rcv, ok in zip(blk.senders, blk.receivers, blk.edge_mask):
+        if ok:
+            assert blk.node_mask[snd] and blk.node_mask[rcv]
+            # and corresponds to a real edge in the base graph
+            gs = blk.node_ids[snd]
+            gr = blk.node_ids[rcv]
+            assert g.has_edge(int(gs), int(gr))
+
+
+def test_core_priority_weights_integrate_with_sampler():
+    g = erdos_renyi(400, 2400, seed=1)
+    m = CoreMaintainer.from_graph(g)
+    w = core_sampling_weights(m, alpha=1.5)
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(g.n, size=64, replace=False, p=w)
+    core = m.cores()
+    assert core[seeds].mean() >= core.mean()  # biased toward dense regions
+
+
+def test_elastic_mesh_shrink_grow():
+    avail = {"n": 16}
+    em = ElasticMesh(desired=16, available_fn=lambda: avail["n"])
+    assert not em.needs_remesh(16)
+    avail["n"] = 9  # lost 7 hosts
+    assert em.needs_remesh(16)
+    assert em.next_shape() == 8  # largest power of two that fits
+    avail["n"] = 33
+    assert em.next_shape() == 32

@@ -1,0 +1,129 @@
+"""Sharded (multi-device) core maintenance — run in a subprocess with 8
+virtual CPU devices so the main test session keeps a single device."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    import repro  # enables x64
+    from repro.core.api import CoreMaintainer
+    from repro.core.oracle import bz_from_csr
+    from repro.core.sharded import (
+        make_sharded_insert_round,
+        make_sharded_remove,
+        shard_edges,
+    )
+    from repro.graph.csr import add_edges_csr, build_csr, remove_edges_csr
+    from repro.graph.generators import erdos_renyi
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = jax.make_mesh((8,), ("data",))
+
+    # ---- removal ----------------------------------------------------------
+    g = erdos_renyi(64, 256, seed=0)
+    m = CoreMaintainer.from_graph(g, capacity=512)
+    edges = g.edge_array()
+    rng = np.random.default_rng(0)
+    rm = edges[rng.choice(edges.shape[0], size=12, replace=False)]
+    # apply tombstones on host
+    slots = [m.edge_slot[(int(a), int(b))] for a, b in rm]
+    valid = np.asarray(m.valid).copy()
+    valid[slots] = False
+    src, dst, valid_s = shard_edges(
+        mesh, "data", np.asarray(m.src), np.asarray(m.dst), valid
+    )
+    fn = make_sharded_remove(mesh, m.n)
+    core = fn(src, dst, valid_s, m.core)
+    expect = bz_from_csr(remove_edges_csr(g, rm))
+    np.testing.assert_array_equal(np.asarray(core), expect)
+    print("sharded-remove OK")
+
+    # ---- insertion (single round graph: fresh edges not raising twice) ----
+    g2 = erdos_renyi(64, 200, seed=1)
+    m2 = CoreMaintainer.from_graph(g2, capacity=1024)
+    batch = []
+    rng = np.random.default_rng(1)
+    while len(batch) < 10:
+        u, v = rng.integers(0, 64, size=2)
+        key = (int(min(u, v)), int(max(u, v)))
+        if u == v or g2.has_edge(*key) or key in batch:
+            continue
+        batch.append(key)
+    arr = np.asarray(batch, dtype=np.int32)
+    src = np.asarray(m2.src).copy()
+    dst = np.asarray(m2.dst).copy()
+    val = np.asarray(m2.valid).copy()
+    ne = int(m2.n_edges)
+    src[ne : ne + len(arr)] = arr[:, 0]
+    dst[ne : ne + len(arr)] = arr[:, 1]
+    val[ne : ne + len(arr)] = True
+    ssrc, sdst, sval = shard_edges(mesh, "data", src, dst, val)
+    round_fn = make_sharded_insert_round(mesh, m2.n)
+    core = m2.core
+    label = m2.label
+    for _ in range(8):  # host round loop
+        ecore = np.asarray(core)
+        root = np.where(
+            (ecore[arr[:, 0]] < ecore[arr[:, 1]])
+            | (
+                (ecore[arr[:, 0]] == ecore[arr[:, 1]])
+                & (np.asarray(label)[arr[:, 0]] < np.asarray(label)[arr[:, 1]])
+            ),
+            arr[:, 0],
+            arr[:, 1],
+        )
+        seed = np.zeros(m2.n, dtype=bool)
+        seed[root] = True
+        new_core, promoted = round_fn(
+            ssrc, sdst, sval, core, label, jnp.asarray(seed)
+        )
+        if int(jnp.sum(promoted)) == 0:
+            break
+        core = new_core
+        # labels: promoted to head of new level (host-side, small batch)
+        lab = np.asarray(label).copy()
+        prom = np.asarray(promoted)
+        nc = np.asarray(new_core)
+        for lvl in np.unique(nc[prom]):
+            movers = np.nonzero(prom & (nc == lvl))[0]
+            others = np.nonzero((~prom) & (nc == lvl))[0]
+            base = lab[others].min() if others.size else 0
+            order = movers[np.argsort(lab[movers])]
+            for i, v in enumerate(order):
+                lab[v] = base - (len(order) - i) * (1 << 20)
+        label = jnp.asarray(lab)
+    expect = bz_from_csr(add_edges_csr(g2, arr))
+    np.testing.assert_array_equal(np.asarray(core), expect)
+    print("sharded-insert OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_core_8dev(tmp_path):
+    script = tmp_path / "sharded.py"
+    script.write_text(_SCRIPT)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    out = subprocess.run(
+        [sys.executable, str(script)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "sharded-remove OK" in out.stdout
+    assert "sharded-insert OK" in out.stdout

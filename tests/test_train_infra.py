@@ -1,0 +1,155 @@
+"""Training-infrastructure integration tests: checkpoint/kill/resume
+equivalence, gradient compression, schedules, straggler monitor."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.compression import compress_int8, decompress_int8
+from repro.optim.schedule import cosine_with_warmup
+from repro.train import checkpoint as ckpt
+from repro.train.fault import StragglerMonitor
+from repro.train.loop import TrainConfig, run_training
+
+
+def _toy_setup():
+    def loss_fn(params, x, y):
+        pred = x @ params["w"] + params["b"]
+        return jnp.mean((pred - y) ** 2)
+
+    rng = np.random.default_rng(0)
+    w_true = rng.normal(size=(4, 1)).astype(np.float32)
+
+    def batches(n, seed=0):
+        r = np.random.default_rng(seed)
+        for _ in range(n):
+            x = r.normal(size=(16, 4)).astype(np.float32)
+            y = x @ w_true + 0.01 * r.normal(size=(16, 1)).astype(np.float32)
+            yield jnp.asarray(x), jnp.asarray(y)
+
+    params = {
+        "w": jnp.zeros((4, 1), jnp.float32),
+        "b": jnp.zeros((1,), jnp.float32),
+    }
+    return loss_fn, batches, params
+
+
+def test_training_converges_and_checkpoints(tmp_path):
+    loss_fn, batches, params = _toy_setup()
+    tc = TrainConfig(lr=1e-1, warmup=2, total_steps=30,
+                     ckpt_dir=str(tmp_path), ckpt_every=10)
+    params, report = run_training(params, loss_fn, batches(40), tc)
+    hist = report["history"]
+    assert hist[-1]["loss"] < 0.05 * hist[0]["loss"]
+    assert ckpt.latest_step(str(tmp_path)) is not None
+
+
+def test_resume_reproduces_uninterrupted_run(tmp_path):
+    loss_fn, batches, params0 = _toy_setup()
+
+    def fresh():  # donation in the train loop consumes the buffers
+        return jax.tree.map(jnp.copy, params0)
+
+    # uninterrupted 20 steps
+    tc = TrainConfig(lr=1e-1, warmup=2, total_steps=20)
+    p_full, _ = run_training(fresh(), loss_fn, batches(30), tc)
+
+    # interrupted: 10 steps w/ checkpoint, then resume to 20.
+    # data stream is restarted identically at the right offset (the host
+    # restarts the deterministic pipeline at step k on resume).
+    dir1 = str(tmp_path / "ck")
+    # same schedule (total_steps=20); the interruption is the stream
+    # ending after 10 batches (preemption equivalent)
+    tc1 = TrainConfig(lr=1e-1, warmup=2, total_steps=20, ckpt_dir=dir1,
+                      ckpt_every=9)
+    p_half, rep = run_training(fresh(), loss_fn, batches(10), tc1)
+    last = ckpt.latest_step(dir1)
+    assert last == 9
+    tc2 = TrainConfig(lr=1e-1, warmup=2, total_steps=20, ckpt_dir=dir1,
+                      ckpt_every=100)
+    stream = batches(30)
+    for _ in range(last + 1):  # skip consumed batches
+        next(stream)
+    p_res, _ = run_training(fresh(), loss_fn, stream, tc2)
+    np.testing.assert_allclose(
+        np.asarray(p_res["w"]), np.asarray(p_full["w"]), rtol=1e-5,
+        atol=1e-6,
+    )
+
+
+def test_checkpoint_commit_markers_reject_corruption(tmp_path):
+    state = {"a": jnp.arange(8, dtype=jnp.float32)}
+    ckpt.save_checkpoint(str(tmp_path), 5, state)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    # corrupt the shard: the sha256 check must reject it
+    shard = os.path.join(str(tmp_path), "step_0000000005",
+                         "shard_00000.npz")
+    with open(shard, "r+b") as f:
+        f.seek(30)
+        f.write(b"\x00\x01\x02")
+    assert ckpt.latest_step(str(tmp_path)) is None
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    loss_fn, batches, params = _toy_setup()
+    from repro.train.loop import make_train_step
+
+    tc1 = TrainConfig(lr=1e-2, warmup=1, total_steps=10, micro_batches=1)
+    tc4 = TrainConfig(lr=1e-2, warmup=1, total_steps=10, micro_batches=4)
+    step1 = jax.jit(make_train_step(loss_fn, tc1))
+    step4 = jax.jit(make_train_step(loss_fn, tc4))
+    x, y = next(batches(1))
+    fresh = lambda: jax.tree.map(jnp.copy, params)
+    p1, _, m1 = step1(fresh(), adamw_init(params), jnp.int32(0), x, y)
+    p4, _, m4 = step4(fresh(), adamw_init(params), jnp.int32(0), x, y)
+    # same total batch; accumulated grads equal the full-batch mean
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p4["w"]),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_int8_compression_error_feedback_bounded():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    q, s = compress_int8(g)
+    deq = decompress_int8(q, s)
+    rel = float(jnp.linalg.norm(deq - g) / jnp.linalg.norm(g))
+    assert rel < 0.01  # int8 with per-tensor scale
+    # residual accumulation: repeated compression of g + residual loses
+    # no mass over rounds (EF property)
+    residual = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    for _ in range(10):
+        q, s = compress_int8(g + residual)
+        deq = decompress_int8(q, s)
+        residual = g + residual - deq
+        total = total + deq
+    np.testing.assert_allclose(
+        np.asarray(total / 10), np.asarray(g), rtol=0.02, atol=2e-3
+    )
+
+
+def test_schedule_shapes():
+    lr0 = cosine_with_warmup(jnp.int32(0), 1e-3, 10, 100)
+    lr_w = cosine_with_warmup(jnp.int32(10), 1e-3, 10, 100)
+    lr_end = cosine_with_warmup(jnp.int32(100), 1e-3, 10, 100)
+    assert float(lr0) == 0.0
+    assert abs(float(lr_w) - 1e-3) < 1e-9
+    assert float(lr_end) <= 0.11e-3 + 1e-9
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(deadline_factor=2.0, window=16)
+    import time as _t
+    for i in range(12):
+        mon.step_start(i)
+        mon.durations.append(0.01)  # synthetic fast steps
+    mon.step_start(99)
+    mon._t0 -= 1.0  # pretend the step took 1s
+    mon.step_end()
+    assert 99 in mon.straggler_steps
