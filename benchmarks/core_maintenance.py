@@ -18,6 +18,7 @@ depth of each batch.
 """
 from __future__ import annotations
 
+import json
 import time
 from typing import Dict, List
 
@@ -25,6 +26,8 @@ import numpy as np
 
 from repro.core.api import CoreMaintainer
 from repro.core.oracle import OrderCoreMaintainer, TraversalCoreMaintainer
+from repro.graph.generators import erdos_renyi
+from repro.graph.stream import mixed_stream
 
 from .workloads import paper_graphs, sample_insertions, sample_removals
 
@@ -167,6 +170,78 @@ def fig7_stability(n_batches: int = 8, batch: int = 128) -> List[Row]:
             "std_s": float(arr.std()), "cv": float(arr.std() / arr.mean()),
         })
     return rows
+
+
+def stream_bench(
+    n: int = 1500,
+    m: int = 6000,
+    n_batches: int = 30,
+    batch_size: int = 128,
+    warmup: int = 3,
+    out_json: str = "BENCH_stream.json",
+) -> Dict[str, object]:
+    """Mixed insert+remove stream: the unified one-call engine vs the seed
+    two-call path (host-dict dedup + separate insert/remove programs) on
+    the SAME event stream. Reports batches/sec and writes ``out_json``.
+
+    Note on jit-cache hygiene: the unified engine's ``active_cap`` is a
+    static pow2 bucket of the slot high-water mark. With the defaults
+    here (m=6000, ~64 inserts/batch, 33 batches) the whole stream stays
+    inside the 8192 bucket, so no recompile lands in the timed region;
+    if you change the parameters, keep ``m + n_batches * batch_size/2``
+    under the next power of two past ``m`` (or discount the first timed
+    batch after a bucket crossing).
+    """
+    g = erdos_renyi(n, m, seed=12)
+    events = list(
+        mixed_stream(g, n_batches + warmup, batch_size, seed=17)
+    )
+    per_engine: Dict[str, Dict[str, float]] = {}
+    finals = {}
+    for engine in ("host", "unified"):
+        mt = CoreMaintainer.from_graph(g, capacity=4 * m, engine=engine)
+
+        def step(ev):
+            if engine == "unified":
+                mt.apply_batch(insert_edges=ev.edges,
+                               remove_edges=ev.removals)
+            else:  # seed path: one program per edit kind
+                mt.remove_edges(ev.removals)
+                mt.insert_edges(ev.edges)
+
+        for ev in events[:warmup]:  # compile both programs
+            step(ev)
+        mt.core.block_until_ready()
+        t0 = time.perf_counter()
+        for ev in events[warmup:]:
+            step(ev)
+        mt.core.block_until_ready()
+        dt = time.perf_counter() - t0
+        per_engine[engine] = {
+            "seconds": dt,
+            "batches_per_s": n_batches / dt,
+            "edges_per_s": n_batches * batch_size / dt,
+        }
+        finals[engine] = mt.cores()
+    agree = bool((finals["host"] == finals["unified"]).all())
+    result = {
+        "graph": {"n": n, "m": m},
+        "n_batches": n_batches,
+        "batch_size": batch_size,
+        "host": per_engine["host"],
+        "unified": per_engine["unified"],
+        "speedup_unified_vs_host": (
+            per_engine["host"]["seconds"] / per_engine["unified"]["seconds"]
+        ),
+        "engines_agree": agree,
+    }
+    # write the artifact BEFORE asserting: on divergence the JSON (with
+    # engines_agree=false and both timings) is the debugging evidence
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(result, fh, indent=2)
+    assert agree, "unified and host engines diverged on the same stream"
+    return result
 
 
 def rounds_depth(batch: int = 512) -> List[Row]:

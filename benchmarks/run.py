@@ -22,6 +22,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--roofline-json", default="dryrun_results.json")
+    ap.add_argument("--stream-json", default="BENCH_stream.json")
     args = ap.parse_args()
 
     from . import core_maintenance as cm
@@ -81,6 +82,25 @@ def main() -> None:
             0.0,
             f"rounds={r['rounds']};V*={r['v_star']};V+={r['v_plus']}",
         )
+
+    # mixed-stream engine comparison (writes the BENCH_stream.json artifact)
+    sb = cm.stream_bench(
+        n_batches=10 if args.quick else 30,
+        batch_size=64 if args.quick else 128,
+        out_json=args.stream_json,
+    )
+    for eng in ("host", "unified"):
+        _emit(
+            f"stream/{eng}",
+            1e6 * sb[eng]["seconds"] / sb["n_batches"],
+            f"batches_per_s={sb[eng]['batches_per_s']:.2f}",
+        )
+    _emit(
+        "stream/speedup",
+        0.0,
+        f"unified_vs_host={sb['speedup_unified_vs_host']:.2f}x;"
+        f"agree={sb['engines_agree']}",
+    )
 
     # roofline table (from the dry-run artifact, if present)
     if os.path.exists(args.roofline_json):

@@ -17,7 +17,7 @@ from repro.core.api import CoreMaintainer
 from repro.core.oracle import bz_from_csr
 from repro.graph.csr import build_csr
 from repro.graph.generators import erdos_renyi
-from repro.graph.stream import synthetic_stream
+from repro.graph.stream import mixed_stream, synthetic_stream
 
 
 def main():
@@ -30,6 +30,10 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--simulate-crash", action="store_true")
     ap.add_argument("--verify", action="store_true")
+    ap.add_argument(
+        "--mixed", action="store_true",
+        help="mixed insert+remove batches, one compiled call per batch",
+    )
     args = ap.parse_args()
 
     g = erdos_renyi(args.n, args.m, seed=0)
@@ -45,23 +49,28 @@ def main():
     else:
         m = CoreMaintainer.from_graph(g, capacity=8 * args.m)
 
-    events = list(
-        synthetic_stream(g, args.batches, args.batch_size, seed=42)
-    )
+    stream = mixed_stream if args.mixed else synthetic_stream
+    events = list(stream(g, args.batches, args.batch_size, seed=42))
     t_all = time.perf_counter()
     edges_done = 0
     for i in range(start_batch, len(events)):
         ev = events[i]
         t0 = time.perf_counter()
-        if ev.kind == "insert":
+        if ev.kind == "mixed":
+            st = m.apply_batch(insert_edges=ev.edges,
+                               remove_edges=ev.removals)
+            extra = (f"+{int(st.n_inserted)}/-{int(st.n_removed)} "
+                     f"|V*|={int(st.n_promoted) + int(st.n_dropped)} "
+                     f"rounds={int(st.insert_rounds) + int(st.remove_rounds)}")
+        elif ev.kind == "insert":
             st = m.insert_edges(ev.edges)
             extra = f"|V*|={int(st.n_promoted)} rounds={int(st.rounds)}"
         else:
             st = m.remove_edges(ev.edges)
             extra = f"|V*|={int(st.n_dropped)} rounds={int(st.rounds)}"
         dt = time.perf_counter() - t0
-        edges_done += len(ev.edges)
-        print(f"[batch {i:03d}] {ev.kind:6s} {len(ev.edges)} edges "
+        edges_done += ev.n_edits
+        print(f"[batch {i:03d}] {ev.kind:6s} {ev.n_edits} edges "
               f"in {dt*1e3:7.1f} ms  {extra}")
         if i % args.ckpt_every == 0:
             tmp = state_path + ".tmp.npz"

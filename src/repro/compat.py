@@ -1,0 +1,66 @@
+"""Version compatibility shims for the JAX API surface we rely on.
+
+The codebase targets the modern spellings (``jax.shard_map`` with
+``check_vma``, ``jax.set_mesh``); older runtimes (e.g. JAX 0.4.x, where
+``shard_map`` still lives in ``jax.experimental`` and the kwarg is named
+``check_rep``) are bridged here so no call site needs a version check.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+_NEW_API = hasattr(jax, "shard_map")
+
+if not _NEW_API:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+
+def _context_mesh() -> Any:
+    """The mesh activated by ``with mesh:`` / ``set_mesh`` (old JAX only)."""
+    from jax._src import mesh as mesh_lib
+
+    mesh = mesh_lib.thread_resources.env.physical_mesh
+    if mesh.empty:
+        raise ValueError(
+            "shard_map called without a mesh: pass mesh= explicitly or "
+            "activate one with `with mesh:` / repro.compat.set_mesh(mesh)"
+        )
+    return mesh
+
+
+def shard_map(
+    f,
+    mesh: Optional[Any] = None,
+    in_specs: Any = None,
+    out_specs: Any = None,
+    check_vma: Optional[bool] = None,
+):
+    """``jax.shard_map`` across JAX versions.
+
+    * new JAX: forwards directly (mesh may come from the ambient context);
+    * old JAX: resolves ``jax.experimental.shard_map.shard_map``, fills in
+      the context mesh when ``mesh`` is omitted, and maps the ``check_vma``
+      kwarg onto its old name ``check_rep``.
+    """
+    if _NEW_API:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        if mesh is not None:
+            kw["mesh"] = mesh
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs, **kw)
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    if mesh is None:
+        mesh = _context_mesh()
+    return _legacy_shard_map(
+        f, mesh, in_specs=in_specs, out_specs=out_specs, **kw
+    )
+
+
+def set_mesh(mesh) -> Any:
+    """``jax.set_mesh`` across versions: on old JAX, enter the mesh context
+    globally (the ``with mesh:`` resource env) and return the mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    mesh.__enter__()
+    return mesh

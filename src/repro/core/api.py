@@ -1,15 +1,28 @@
 """CoreMaintainer — the public interface to parallel order-based core
 maintenance.
 
-Host side keeps the edge -> slot dictionary (removals address slots) and
-handles capacity compaction; all per-batch work runs as two jitted
-fixpoint programs (`insert.insert_batch`, `remove.remove_batch`).
+The default ``unified`` engine runs every batch (mixed insertions +
+removals) as ONE jitted device program (`engine.apply_batch`): dedup,
+slot lookup/allocation, both fixpoints, and the label-renumber gate all
+happen on device with donated buffers — the host stays off the critical
+path entirely (see docs/DESIGN.md §3 for the host-sync audit).
+
+The host keeps only
+  * a lazily-rebuilt ``edge -> slot`` mirror for queries (invalidated per
+    batch, materialized on first access), and
+  * ``n_edges_ub``, a monotone host-side upper bound on the device slot
+    high-water mark, used for capacity compaction/growth planning.
+
+The seed two-program path (host-dict dedup + `insert.insert_batch` /
+`remove.remove_batch`) is preserved under ``engine="host"`` as the
+benchmark baseline and fallback.
 
 Batches are padded to power-of-two sizes so the jit cache stays small.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -18,6 +31,7 @@ import numpy as np
 
 from ..graph.csr import CSRGraph, build_csr
 from .decomposition import peel_decomposition, rank_to_labels
+from .engine import BatchStats, apply_batch
 from .insert import InsertStats, insert_batch
 from .oracle import bz_core_decomposition
 from .order import needs_renumber, renumber
@@ -34,6 +48,12 @@ def _pad_pow2(x: np.ndarray, fill: int) -> np.ndarray:
     return out
 
 
+def _as_edge_array(edges) -> np.ndarray:
+    if edges is None:
+        return np.zeros((0, 2), dtype=np.int64)
+    return np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+
+
 @dataclasses.dataclass
 class CoreMaintainer:
     """Dynamic-graph core maintenance with k-order labels (JAX)."""
@@ -46,10 +66,18 @@ class CoreMaintainer:
     n_edges: jax.Array
     core: jax.Array
     label: jax.Array
-    edge_slot: Dict[Tuple[int, int], int]
     n_levels: int
+    engine: str = "unified"     # "unified" | "host" (seed two-call path)
     last_insert_stats: Optional[InsertStats] = None
     last_remove_stats: Optional[RemoveStats] = None
+    last_batch_stats: Optional[BatchStats] = None
+    slot_cache: Optional[Dict[Tuple[int, int], int]] = None
+    n_edges_ub: int = 0         # host upper bound on int(n_edges)
+    host_renumbered: bool = False  # last host-path call triggered a renumber
+
+    def __post_init__(self) -> None:
+        if self.engine not in ("unified", "host"):
+            raise ValueError(f"unknown engine {self.engine!r}")
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -58,6 +86,7 @@ class CoreMaintainer:
         g: CSRGraph,
         capacity: Optional[int] = None,
         init: str = "host-bz",
+        engine: str = "unified",
     ) -> "CoreMaintainer":
         edges = g.edge_array()
         m = edges.shape[0]
@@ -99,11 +128,31 @@ class CoreMaintainer:
             n_edges=jnp.asarray(m, dtype=jnp.int32),
             core=core,
             label=label,
-            edge_slot=edge_slot,
             n_levels=n_levels,
+            engine=engine,
+            slot_cache=edge_slot,
+            n_edges_ub=m,
         )
 
     # -- queries -------------------------------------------------------------
+    @property
+    def edge_slot(self) -> Dict[Tuple[int, int], int]:
+        """Host mirror of the live edge -> slot table.
+
+        The unified engine allocates slots on device and only invalidates
+        this dict; it is rebuilt here on first access (queries tolerate
+        the sync — the per-batch edit path never touches it).
+        """
+        if self.slot_cache is None:
+            src = np.asarray(self.src)
+            dst = np.asarray(self.dst)
+            live = np.nonzero(np.asarray(self.valid))[0]
+            self.slot_cache = {
+                (int(min(a, b)), int(max(a, b))): int(i)
+                for i, a, b in zip(live, src[live], dst[live])
+            }
+        return self.slot_cache
+
     def cores(self) -> np.ndarray:
         return np.asarray(self.core)
 
@@ -121,14 +170,129 @@ class CoreMaintainer:
         return len(self.edge_slot)
 
     # -- edits ----------------------------------------------------------------
+    def apply_batch(
+        self,
+        insert_edges=None,
+        remove_edges=None,
+    ) -> BatchStats:
+        """Apply one mixed batch (removals first, then insertions) in a
+        single compiled device program — no host dedup, no per-batch
+        device->host syncs. Under ``engine="host"`` the batch is served by
+        the seed two-call path instead (stats composed from both calls)."""
+        if self.engine == "host":
+            n_live0 = self.live_edges
+            rm_st = self._remove_edges_host(remove_edges)
+            n_live1 = self.live_edges
+            renumbered = self.host_renumbered
+            in_st = self._insert_edges_host(insert_edges)
+            renumbered = renumbered or self.host_renumbered
+            stats = BatchStats(
+                n_inserted=jnp.int32(self.live_edges - n_live1),
+                n_removed=jnp.int32(n_live0 - n_live1),
+                insert_rounds=in_st.rounds,
+                n_promoted=in_st.n_promoted,
+                v_plus=in_st.v_plus,
+                remove_rounds=rm_st.rounds,
+                n_dropped=rm_st.n_dropped,
+                renumbered=jnp.bool_(renumbered),
+            )
+            self.last_batch_stats = stats
+            return stats
+        ins = _as_edge_array(insert_edges)
+        rm = _as_edge_array(remove_edges)
+        b_ins = ins.shape[0]
+        if b_ins == 0 and rm.shape[0] == 0:
+            z = jnp.int32(0)
+            stats = BatchStats(z, z, z, z, z, z, z, jnp.bool_(False))
+            self.last_batch_stats = stats
+            return stats
+        if self.n_edges_ub + b_ins + 1 >= self.capacity:
+            self._compact()
+            if self.n_edges_ub + b_ins + 1 >= self.capacity:
+                self._grow(b_ins)
+        # static pow2 bound on the slot high-water mark incl. this batch:
+        # the engine runs every edge pass over this many slots only
+        need = max(16, self.n_edges_ub + b_ins + 1)
+        active_cap = 1
+        while active_cap < need:
+            active_cap *= 2
+        active_cap = min(active_cap, self.capacity)
+        iu = _pad_pow2(ins[:, 0], 0)
+        iv = _pad_pow2(ins[:, 1], 0)
+        iok = np.zeros(len(iu), dtype=bool)
+        iok[:b_ins] = True
+        ru = _pad_pow2(rm[:, 0], 0)
+        rv = _pad_pow2(rm[:, 1], 0)
+        rok = np.zeros(len(ru), dtype=bool)
+        rok[: rm.shape[0]] = True
+        with warnings.catch_warnings():
+            # donation is declared for accelerator backends; backends
+            # without buffer aliasing (CPU) warn and copy instead
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            (
+                self.src,
+                self.dst,
+                self.valid,
+                self.core,
+                self.label,
+                self.n_edges,
+                stats,
+            ) = apply_batch(
+                self.src,
+                self.dst,
+                self.valid,
+                self.core,
+                self.label,
+                self.n_edges,
+                jnp.asarray(iu),
+                jnp.asarray(iv),
+                jnp.asarray(iok),
+                jnp.asarray(ru),
+                jnp.asarray(rv),
+                jnp.asarray(rok),
+                self.n,
+                self.n_levels,
+                active_cap,
+            )
+        # monotone host bound: the device allocated at most b_ins new slots
+        self.n_edges_ub += b_ins
+        self.slot_cache = None
+        self.last_batch_stats = stats
+        return stats
+
     def insert_edges(self, edges: np.ndarray) -> InsertStats:
-        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+        if self.engine == "host":
+            return self._insert_edges_host(edges)
+        st = self.apply_batch(insert_edges=edges)
+        self.last_insert_stats = InsertStats(
+            rounds=st.insert_rounds,
+            n_promoted=st.n_promoted,
+            v_plus=st.v_plus,
+        )
+        return self.last_insert_stats
+
+    def remove_edges(self, edges: np.ndarray) -> RemoveStats:
+        if self.engine == "host":
+            return self._remove_edges_host(edges)
+        st = self.apply_batch(remove_edges=edges)
+        self.last_remove_stats = RemoveStats(
+            rounds=st.remove_rounds, n_dropped=st.n_dropped
+        )
+        return self.last_remove_stats
+
+    # -- seed two-program path (benchmark baseline; engine="host") -----------
+    def _insert_edges_host(self, edges: np.ndarray) -> InsertStats:
+        self.host_renumbered = False
+        edges = _as_edge_array(edges)
         lo = np.minimum(edges[:, 0], edges[:, 1])
         hi = np.maximum(edges[:, 0], edges[:, 1])
         keep, seen = [], set()
+        slot_table = self.edge_slot
         for a, b in zip(lo.tolist(), hi.tolist()):
             key = (a, b)
-            if a == b or key in seen or key in self.edge_slot:
+            if a == b or key in seen or key in slot_table:
                 continue
             seen.add(key)
             keep.append(key)
@@ -137,12 +301,13 @@ class CoreMaintainer:
             return InsertStats(jnp.int32(0), jnp.int32(0), jnp.int32(0))
         arr = np.asarray(keep, dtype=np.int32)
         if int(self.n_edges) + arr.shape[0] + 1 >= self.capacity:
-            self._compact()
+            self._compact()  # replaces slot_cache — re-read below
             if int(self.n_edges) + arr.shape[0] + 1 >= self.capacity:
                 self._grow(arr.shape[0])
         base = int(self.n_edges)
+        slot_table = self.edge_slot
         for i, key in enumerate(keep):
-            self.edge_slot[key] = base + i
+            slot_table[key] = base + i
         new_src = _pad_pow2(arr[:, 0], 0)
         new_dst = _pad_pow2(arr[:, 1], 0)
         new_ok = np.zeros(len(new_src), dtype=bool)
@@ -168,16 +333,19 @@ class CoreMaintainer:
             self.n,
             self.n_levels,
         )
-        self._maybe_renumber()
+        self.n_edges_ub = int(self.n_edges)
+        self.host_renumbered = self._maybe_renumber()
         self.last_insert_stats = stats
         return stats
 
-    def remove_edges(self, edges: np.ndarray) -> RemoveStats:
-        edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    def _remove_edges_host(self, edges: np.ndarray) -> RemoveStats:
+        self.host_renumbered = False
+        edges = _as_edge_array(edges)
         slots = []
+        slot_table = self.edge_slot
         for a, b in edges:
             key = (int(min(a, b)), int(max(a, b)))
-            slot = self.edge_slot.pop(key, None)
+            slot = slot_table.pop(key, None)
             if slot is not None:
                 slots.append(slot)
         if not slots:
@@ -194,17 +362,20 @@ class CoreMaintainer:
             self.n,
             self.n_levels,
         )
-        self._maybe_renumber()
+        self.host_renumbered = self._maybe_renumber()
         self.last_remove_stats = stats
         return stats
 
     # -- maintenance -----------------------------------------------------------
-    def _maybe_renumber(self) -> None:
+    def _maybe_renumber(self) -> bool:
         if bool(needs_renumber(self.label)):
             self.label = renumber(self.core, self.label)
+            return True
+        return False
 
     def _compact(self) -> None:
-        """Drop tombstoned slots; preserves core/label state."""
+        """Drop tombstoned slots; preserves core/label state. The one edit
+        path step that syncs — amortized over many batches."""
         src = np.asarray(self.src)
         dst = np.asarray(self.dst)
         val = np.asarray(self.valid)
@@ -220,10 +391,10 @@ class CoreMaintainer:
         self.dst = jnp.asarray(new_dst)
         self.valid = jnp.asarray(new_val)
         self.n_edges = jnp.asarray(m, dtype=jnp.int32)
-        self.edge_slot = {
-            (int(min(a, b)), int(max(a, b))): i
-            for i, (a, b) in enumerate(zip(new_src[:m], new_dst[:m]))
-        }
+        self.n_edges_ub = m
+        # the mirror is stale either way; let the edge_slot property
+        # rebuild it lazily (the unified engine never reads it)
+        self.slot_cache = None
 
     def _grow(self, need: int) -> None:
         new_cap = max(self.capacity * 2, self.capacity + 2 * need + 16)
@@ -254,27 +425,21 @@ class CoreMaintainer:
         )
 
     @classmethod
-    def load(cls, path: str) -> "CoreMaintainer":
+    def load(cls, path: str, engine: str = "unified") -> "CoreMaintainer":
         z = np.load(path)
-        src = np.asarray(z["src"])
-        dst = np.asarray(z["dst"])
-        val = np.asarray(z["valid"])
-        edge_slot = {
-            (int(min(a, b)), int(max(a, b))): i
-            for i, (a, b, ok) in enumerate(zip(src, dst, val))
-            if ok
-        }
         return cls(
             n=int(z["n"]),
             capacity=int(z["capacity"]),
-            src=jnp.asarray(src),
-            dst=jnp.asarray(dst),
-            valid=jnp.asarray(val),
+            src=jnp.asarray(z["src"]),
+            dst=jnp.asarray(z["dst"]),
+            valid=jnp.asarray(z["valid"]),
             n_edges=jnp.asarray(z["n_edges"]),
             core=jnp.asarray(z["core"]),
             label=jnp.asarray(z["label"]),
-            edge_slot=edge_slot,
             n_levels=int(z["n"]) + 2,
+            engine=engine,
+            slot_cache=None,  # lazily rebuilt from the live table
+            n_edges_ub=int(z["n_edges"]),
         )
 
 

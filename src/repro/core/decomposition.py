@@ -6,7 +6,7 @@ Two algorithms:
   adaptation of BZ, Algorithm 1): every wave removes ALL vertices whose
   current degree is <= k simultaneously. Produces core numbers AND a valid
   k-order (wave-major, vertex-id minor — any intra-wave order satisfies the
-  defining certificate ``dout(v) <= core(v)``, see DESIGN.md §2).
+  defining certificate ``dout(v) <= core(v)``, see docs/DESIGN.md §2).
 * ``h_index_decomposition`` — the decrease-only local fixpoint
   (Lü et al. convergence theorem): starting from any upper bound, iterating
   ``core[v] -= (|{u in N(v): core[u] >= core[v]}| < core[v])`` converges to
@@ -51,7 +51,7 @@ def peel_decomposition(
         frontier = alive & (d <= k)
         core = jnp.where(frontier, k, core)
         # intra-wave rank by vertex id (any intra-wave order is a valid
-        # BZ-certificate order; see DESIGN.md)
+        # BZ-certificate order; see docs/DESIGN.md)
         within = jnp.cumsum(frontier.astype(jnp.int32), dtype=jnp.int32) - 1
         rank = jnp.where(frontier, pos + within, rank)
         pos = pos + jnp.sum(frontier, dtype=jnp.int32)

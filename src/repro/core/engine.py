@@ -1,0 +1,206 @@
+"""Unified device-resident edit engine: one compiled program per mixed
+insert+remove batch.
+
+The seed implementation paid, per batch: a Python-dict dedup loop, an
+``int(n_edges)`` sync, a separate jit program per edit kind, a fresh O(m)
+statistics pass per phase, a ``bool(needs_renumber)`` sync, and O(capacity)
+buffer copies. ``apply_batch`` moves all of it on-device:
+
+  1. REMOVE  — vectorized slot lookup of the removal edges against the
+               live ``(src, dst, valid)`` table (no host dict on the
+               critical path), tombstoning, then the mcd removal fixpoint
+               (remove.removal_fixpoint).
+  2. DEDUP   — in-batch duplicate and self-loop masking plus a vectorized
+               membership test against the *post-removal* table, so an
+               edge removed and re-inserted in the same batch round-trips
+               correctly.
+  3. INSERT  — batch slot allocation via ``cumsum``, table writes, and the
+               promotion rounds (insert.promotion_fixpoint). The removal
+               fixpoint's terminating round already computed (hi,
+               dout_same) in its packed scatter; the new edges' O(batch)
+               delta is scattered on top, so the promotion phase starts
+               with exact statistics without another O(m) pass.
+  4. RELABEL — the ``needs_renumber`` gate runs as a ``lax.cond`` inside
+               the program (order.maybe_renumber): no dedicated
+               device->host sync, and the flag is reported in the stats.
+
+``src``/``dst``/``valid``/``core``/``label``/``n_edges`` are donated, so
+each batch updates the edge table in place instead of copying O(capacity)
+arrays (donation is a no-op on backends without buffer aliasing, e.g.
+CPU; the harmless warning is silenced below).
+
+The host keeps only a lazily-rebuilt edge->slot mirror for queries and an
+upper bound on ``n_edges`` for capacity planning — neither touches the
+per-batch critical path. See docs/DESIGN.md §3.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import graph_ops as G
+from .insert import promotion_fixpoint, write_edge_slots
+from .order import maybe_renumber
+from .remove import removal_fixpoint
+
+Array = jax.Array
+
+
+class BatchStats(NamedTuple):
+    """Per-batch statistics of the unified engine (all device scalars)."""
+
+    n_inserted: Array      # edges actually added (post dedup/membership)
+    n_removed: Array       # live slots tombstoned
+    insert_rounds: Array   # promotion rounds executed
+    n_promoted: Array      # |V*| of the insertion phase
+    v_plus: Array          # |V+| — vertices reached by FORWARD
+    remove_rounds: Array   # removal fixpoint rounds executed
+    n_dropped: Array       # |V*| of the removal phase
+    renumbered: Array      # True if the in-program label renumber fired
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n", "n_levels", "active_cap"),
+    donate_argnums=(0, 1, 2, 3, 4, 5),
+)
+def apply_batch(
+    src: Array,
+    dst: Array,
+    valid: Array,
+    core: Array,
+    label: Array,
+    n_edges: Array,
+    ins_u: Array,
+    ins_v: Array,
+    ins_ok: Array,
+    rm_u: Array,
+    rm_v: Array,
+    rm_ok: Array,
+    n: int,
+    n_levels: int,
+    active_cap: int,
+) -> Tuple[Array, Array, Array, Array, Array, Array, BatchStats]:
+    """Apply one mixed batch (removals first, then insertions) and restore
+    core numbers + k-order labels.
+
+    ``ins_*``/``rm_*`` are padded edge lists masked by their ``_ok``
+    flags; orientation is normalized on device. ``active_cap`` is the
+    host's (sync-free) power-of-two bound on the slot high-water mark
+    incl. this batch: every edge pass below runs over ``active_cap``
+    slots instead of the full over-provisioned capacity, so per-batch
+    device work scales with the live graph, not with headroom. Returns
+    ``(src, dst, valid, core, label, n_edges, stats)``.
+    """
+    full_src, full_dst, full_valid = src, dst, valid
+    src = src[:active_cap]
+    dst = dst[:active_cap]
+    valid = valid[:active_cap]
+    capacity = src.shape[0]
+    tlo = jnp.minimum(src, dst)
+    thi = jnp.maximum(src, dst)
+
+    # one sorted view of the live table serves BOTH the removal slot lookup
+    # and the insert membership test: O(C log C + B log C) instead of the
+    # naive O(B * C) broadcast compare
+    big = jnp.int64(1) << 62  # sentinel: tombstones sort past every real key
+    tkey = jnp.where(
+        valid, tlo.astype(jnp.int64) * jnp.int64(n) + thi.astype(jnp.int64),
+        big,
+    )
+    torder = jnp.argsort(tkey)
+    tsorted = tkey[torder]
+
+    def lookup(qkey):
+        """(found, slot) of each query key in the live table."""
+        pos = jnp.searchsorted(tsorted, qkey)
+        pos = jnp.minimum(pos, capacity - 1)
+        return tsorted[pos] == qkey, torder[pos]
+
+    # ---- 1. removals: vectorized slot lookup + tombstoning ---------------
+    rlo = jnp.minimum(rm_u, rm_v)
+    rhi = jnp.maximum(rm_u, rm_v)
+    rm_ok = rm_ok & (rlo != rhi)
+    rkey = rlo.astype(jnp.int64) * jnp.int64(n) + rhi.astype(jnp.int64)
+    rfound, rslot = lookup(rkey)
+    found = rfound & rm_ok
+    # commutative scatter-max: not-found rows are no-ops
+    rm_mask = jnp.zeros(capacity, dtype=bool).at[rslot].max(found)
+    valid = valid & ~rm_mask
+    n_removed = jnp.sum(rm_mask, dtype=jnp.int32)
+
+    core_pre_rm = core
+    core, label, rm_rounds, hi, dout_same = removal_fixpoint(
+        src, dst, valid, core, label, n, n_levels
+    )
+    n_dropped = jnp.sum(core != core_pre_rm, dtype=jnp.int32)
+
+    # ---- 2. insert dedup + membership against the post-removal table ----
+    ilo = jnp.minimum(ins_u, ins_v)
+    ihi = jnp.maximum(ins_u, ins_v)
+    iok = ins_ok & (ilo != ihi)
+    key = ilo.astype(jnp.int64) * jnp.int64(n) + ihi.astype(jnp.int64)
+    # in-batch dedup, O(B log B): sort the (masked) keys and keep one
+    # representative per run of equals — batch order is irrelevant since
+    # the whole batch commits simultaneously
+    ikey = jnp.where(iok, key, big)
+    iperm = jnp.argsort(ikey)
+    isorted = ikey[iperm]
+    first = jnp.concatenate(
+        [jnp.ones((1,), dtype=bool), isorted[1:] != isorted[:-1]]
+    )
+    keep = jnp.zeros_like(iok).at[iperm].set(first)
+    iok = iok & keep
+    # membership against the POST-removal table: the sorted view predates
+    # the tombstoning, so mask out slots removed in step 1 — this is what
+    # lets an edge removed and re-inserted in the same batch round-trip
+    ifound, islot_hit = lookup(key)
+    exists = ifound & ~rm_mask[islot_hit]
+    iok = iok & ~exists
+
+    # ---- 3. batch slot allocation via cumsum + table writes --------------
+    n_edges0 = n_edges
+    src, dst, valid, n_edges = write_edge_slots(
+        src, dst, valid, n_edges, ilo, ihi, iok
+    )
+    n_inserted = n_edges - n_edges0
+
+    # O(batch) delta keeps the shared (hi, dout_same) statistics exact for
+    # the table with the new edges — same per-edge predicate as the full
+    # passes (graph_ops.hi_dout_indicators)
+    hi_u, hi_v, do_u, do_v = G.hi_dout_indicators(core, label, ilo, ihi, iok)
+    hi = hi.at[ilo].add(hi_u.astype(jnp.int32))
+    hi = hi.at[ihi].add(hi_v.astype(jnp.int32))
+    dout_same = dout_same.at[ilo].add(do_u.astype(jnp.int32))
+    dout_same = dout_same.at[ihi].add(do_v.astype(jnp.int32))
+
+    core_pre_ins = core
+    core, label, ins_rounds, v_plus = promotion_fixpoint(
+        src, dst, valid, core, label, ilo, ihi, iok,
+        hi, dout_same, n, n_levels,
+    )
+    n_promoted = jnp.sum(core != core_pre_ins, dtype=jnp.int32)
+
+    # ---- 4. in-program renumber gate (no host sync) ----------------------
+    label, renumbered = maybe_renumber(core, label)
+
+    # splice the active region back into the full-capacity buffers (the
+    # inactive tail is untouched: all-invalid headroom)
+    src = jnp.concatenate([src, full_src[active_cap:]])
+    dst = jnp.concatenate([dst, full_dst[active_cap:]])
+    valid = jnp.concatenate([valid, full_valid[active_cap:]])
+
+    stats = BatchStats(
+        n_inserted=n_inserted,
+        n_removed=n_removed,
+        insert_rounds=ins_rounds,
+        n_promoted=n_promoted,
+        v_plus=jnp.sum(v_plus, dtype=jnp.int32),
+        remove_rounds=rm_rounds,
+        n_dropped=n_dropped,
+        renumbered=renumbered,
+    )
+    return src, dst, valid, core, label, n_edges, stats

@@ -48,24 +48,64 @@ def count_gt(src: Array, dst: Array, valid: Array, vals: Array, n: int) -> Array
     return _seg2(to_src, to_dst, src, dst, n)
 
 
+def hi_dout_indicators(
+    core: Array, label: Array, u: Array, v: Array, ok: Array
+):
+    """Per-edge indicator columns of the promotion statistics: for each
+    (u, v) edge masked by ``ok``, whether it contributes to hi(u), hi(v),
+    dout_same(u), dout_same(v). The single definition shared by the full
+    passes below and by the unified engine's O(batch) delta update —
+    keeping the statistic's tie-breaking in one place."""
+    same = ok & (core[u] == core[v])
+    hi_to_u = ok & (core[v] > core[u])
+    hi_to_v = ok & (core[u] > core[v])
+    dout_to_u = same & (label[v] > label[u])
+    dout_to_v = same & (label[u] > label[v])
+    return hi_to_u, hi_to_v, dout_to_u, dout_to_v
+
+
 def hi_and_dout_same(
     src: Array, dst: Array, valid: Array, core: Array, label: Array, n: int
 ):
     """Packed (hi, dout_same) for the insertion round: one [n, 2] result
     (single collective) carries both the higher-core neighbor count and
     the same-level k-order successor count (Defs 3.6/3.7 pieces)."""
-    same = valid & (core[src] == core[dst])
+    hi_s, hi_d, do_s, do_d = hi_dout_indicators(core, label, src, dst, valid)
+    to_src = jnp.stack(
+        [hi_s.astype(jnp.int32), do_s.astype(jnp.int32)], axis=-1
+    )
+    to_dst = jnp.stack(
+        [hi_d.astype(jnp.int32), do_d.astype(jnp.int32)], axis=-1
+    )
+    out = (
+        jax.ops.segment_sum(to_src, src, num_segments=n)
+        + jax.ops.segment_sum(to_dst, dst, num_segments=n)
+    )
+    return out[:, 0], out[:, 1]
+
+
+def mcd_hi_dout(
+    src: Array, dst: Array, valid: Array, core: Array, label: Array, n: int
+):
+    """Packed (mcd, hi, dout_same) — one [n, 3] scatter carries the removal
+    fixpoint's support count (Def 3.8) together with both promotion-seeding
+    statistics (Defs 3.6/3.7 pieces). The unified engine runs this once per
+    removal round; the terminating round's (hi, dout_same) columns are then
+    reused to seed the promotion phase without a fresh O(m) pass."""
+    hi_s, hi_d, do_s, do_d = hi_dout_indicators(core, label, src, dst, valid)
     to_src = jnp.stack(
         [
-            (valid & (core[dst] > core[src])).astype(jnp.int32),
-            (same & (label[dst] > label[src])).astype(jnp.int32),
+            (valid & (core[dst] >= core[src])).astype(jnp.int32),
+            hi_s.astype(jnp.int32),
+            do_s.astype(jnp.int32),
         ],
         axis=-1,
     )
     to_dst = jnp.stack(
         [
-            (valid & (core[src] > core[dst])).astype(jnp.int32),
-            (same & (label[src] > label[dst])).astype(jnp.int32),
+            (valid & (core[src] >= core[dst])).astype(jnp.int32),
+            hi_d.astype(jnp.int32),
+            do_d.astype(jnp.int32),
         ],
         axis=-1,
     )
@@ -73,7 +113,7 @@ def hi_and_dout_same(
         jax.ops.segment_sum(to_src, src, num_segments=n)
         + jax.ops.segment_sum(to_dst, dst, num_segments=n)
     )
-    return out[:, 0], out[:, 1]
+    return out[:, 0], out[:, 1], out[:, 2]
 
 
 def count_same_level_after(

@@ -6,7 +6,7 @@ bulk-synchronous analogue of one-lock-per-vertex worker concurrency):
   1. SEED      — k-order roots of the pending edges (order-min endpoints),
                  plus last round's promoted vertices (cross-round cascades),
                  plus any vertex violating the certificate dout > core
-                 (self-healing seeds; see DESIGN.md §2).
+                 (self-healing seeds; see docs/DESIGN.md §2).
   2. FORWARD   — masked wave expansion along same-level k-order-increasing
                  edges, gated by the optimistic candidate test
                  ``hi + dout_same + din_reached > core`` (paper's Forward;
@@ -40,6 +40,122 @@ class InsertStats(NamedTuple):
     rounds: Array       # outer promotion rounds
     n_promoted: Array   # |V*| over the whole batch
     v_plus: Array       # |V+| — vertices ever reached by FORWARD
+
+
+def write_edge_slots(
+    src: Array,
+    dst: Array,
+    valid: Array,
+    n_edges: Array,
+    new_src: Array,
+    new_dst: Array,
+    new_ok: Array,
+) -> Tuple[Array, Array, Array, Array]:
+    """Batch slot allocation via ``cumsum`` + masked table writes.
+
+    Padding lanes are parked on the LAST slot (they rewrite its current
+    values, a no-op); callers must guarantee that slot is never a real
+    allocation target (n_edges + batch + 1 <= table size).
+    Returns the updated ``(src, dst, valid, n_edges)``.
+    """
+    slot = n_edges + jnp.cumsum(new_ok.astype(jnp.int32), dtype=jnp.int32) - 1
+    slot = jnp.where(new_ok, slot, src.shape[0] - 1)
+    src = src.at[slot].set(jnp.where(new_ok, new_src, src[slot]))
+    dst = dst.at[slot].set(jnp.where(new_ok, new_dst, dst[slot]))
+    valid = valid.at[slot].set(jnp.where(new_ok, True, valid[slot]))
+    return src, dst, valid, n_edges + jnp.sum(new_ok, dtype=jnp.int32)
+
+
+def promotion_fixpoint(
+    src: Array,
+    dst: Array,
+    valid: Array,
+    core: Array,
+    label: Array,
+    new_src: Array,
+    new_dst: Array,
+    new_ok: Array,
+    hi: Array,
+    dout_same: Array,
+    n: int,
+    n_levels: int,
+) -> Tuple[Array, Array, Array, Array]:
+    """Promotion rounds for pending edges already written into the table.
+
+    ``hi``/``dout_same`` must describe the CURRENT (core, label, valid)
+    state including the pending edges; each round recomputes them after its
+    commit, so the caller-provided pair is consumed exactly once. This is
+    how the unified engine shares one statistics pass between the removal
+    fixpoint and the first promotion round.
+
+    Returns ``(core, label, rounds, v_plus_mask)``.
+    """
+
+    def round_cond(state):
+        return state[2]
+
+    def round_body(state):
+        core, label, _, promoted_prev, rounds, v_plus, hi, dout_same = state
+
+        # SEED: roots of pending edges (order-min endpoint at current state)
+        e_src_lt = (core[new_src] < core[new_dst]) | (
+            (core[new_src] == core[new_dst]) & (label[new_src] < label[new_dst])
+        )
+        root = jnp.where(e_src_lt, new_src, new_dst)
+        seed = (
+            jnp.zeros(n, dtype=jnp.int32).at[root].add(new_ok.astype(jnp.int32))
+            > 0
+        )
+        # certificate violators are potential hidden roots
+        seed = seed | ((hi + dout_same) > core)
+        seed = seed | promoted_prev
+
+        reach, passing = _forward_reach(
+            src, dst, valid, core, label, seed, hi, dout_same, n
+        )
+        cand0 = reach & passing
+        cand, evict_round = _evict_fixpoint(
+            src, dst, valid, core, cand0, hi, n
+        )
+
+        new_core = core + cand.astype(jnp.int32)
+        # promoted -> head of O_{K+1} in old-label order
+        label = place_block(new_core, label, cand, at_head=True,
+                            n_levels=n_levels)
+        # Backward-evicted -> tail of O_K in (eviction round, old label)
+        # order; restores the dout <= core certificate (docs/DESIGN.md §2)
+        evicted = cand0 & ~cand
+        label = place_block(new_core, label, evicted, at_head=False,
+                            n_levels=n_levels, round_key=evict_round)
+        # fused (hi, dout_same) for the NEXT round — one scatter-add (C1)
+        new_hi, new_dout = G.hi_and_dout_same(
+            src, dst, valid, new_core, label, n
+        )
+        # Continue only while the k-order certificate is violated somewhere:
+        # the passing-set fixpoint bootstraps from ``hi + dout_same > core``
+        # vertices, so with none of them the next round provably finds no
+        # candidates (docs/DESIGN.md §2.3) — this skips the seed
+        # implementation's trailing confirm round (a full forward + evict
+        # + stats pass) entirely.
+        changed = jnp.any((new_hi + new_dout) > new_core)
+        return (
+            new_core,
+            label,
+            changed,
+            cand,
+            rounds + 1,
+            v_plus | reach,
+            new_hi,
+            new_dout,
+        )
+
+    core, label, _, _, rounds, v_plus, _, _ = jax.lax.while_loop(
+        round_cond,
+        round_body,
+        (core, label, jnp.bool_(True), jnp.zeros(n, dtype=bool),
+         jnp.int32(0), jnp.zeros(n, dtype=bool), hi, dout_same),
+    )
+    return core, label, rounds, v_plus
 
 
 def _forward_reach(
@@ -135,71 +251,16 @@ def insert_batch(
 
     Returns (src, dst, valid, n_edges, core, label, stats).
     """
-    b = new_src.shape[0]
-    slot = n_edges + jnp.cumsum(new_ok.astype(jnp.int32), dtype=jnp.int32) - 1
-    slot = jnp.where(new_ok, slot, src.shape[0] - 1)  # park padding writes
-    # padding writes go to the last slot but stay invalid unless real
-    src = src.at[slot].set(jnp.where(new_ok, new_src, src[slot]))
-    dst = dst.at[slot].set(jnp.where(new_ok, new_dst, dst[slot]))
-    valid = valid.at[slot].set(jnp.where(new_ok, True, valid[slot]))
-    n_edges = n_edges + jnp.sum(new_ok, dtype=jnp.int32)
+    src, dst, valid, n_edges = write_edge_slots(
+        src, dst, valid, n_edges, new_src, new_dst, new_ok
+    )
 
     core0 = core
-    v_plus0 = jnp.zeros(n, dtype=bool)
-
-    def round_cond(state):
-        return state[2]
-
-    def round_body(state):
-        core, label, _, promoted_prev, rounds, v_plus = state
-
-        # fused (hi, dout_same) — one scatter-add / one collective (C1)
-        hi, dout_same = G.hi_and_dout_same(src, dst, valid, core, label, n)
-
-        # SEED: roots of pending edges (order-min endpoint at current state)
-        e_src_lt = (core[new_src] < core[new_dst]) | (
-            (core[new_src] == core[new_dst]) & (label[new_src] < label[new_dst])
-        )
-        root = jnp.where(e_src_lt, new_src, new_dst)
-        seed = (
-            jnp.zeros(n, dtype=jnp.int32).at[root].add(new_ok.astype(jnp.int32))
-            > 0
-        )
-        # certificate violators are potential hidden roots
-        seed = seed | ((hi + dout_same) > core)
-        seed = seed | promoted_prev
-
-        reach, passing = _forward_reach(
-            src, dst, valid, core, label, seed, hi, dout_same, n
-        )
-        cand0 = reach & passing
-        cand, evict_round = _evict_fixpoint(
-            src, dst, valid, core, cand0, hi, n
-        )
-
-        new_core = core + cand.astype(jnp.int32)
-        # promoted -> head of O_{K+1} in old-label order
-        label = place_block(new_core, label, cand, at_head=True,
-                            n_levels=n_levels)
-        # Backward-evicted -> tail of O_K in (eviction round, old label)
-        # order; restores the dout <= core certificate (DESIGN.md §2)
-        evicted = cand0 & ~cand
-        label = place_block(new_core, label, evicted, at_head=False,
-                            n_levels=n_levels, round_key=evict_round)
-        return (
-            new_core,
-            label,
-            jnp.any(cand),
-            cand,
-            rounds + 1,
-            v_plus | reach,
-        )
-
-    core, label, _, _, rounds, v_plus = jax.lax.while_loop(
-        round_cond,
-        round_body,
-        (core, label, jnp.bool_(True), jnp.zeros(n, dtype=bool),
-         jnp.int32(0), v_plus0),
+    # fused (hi, dout_same) — one scatter-add / one collective (C1)
+    hi, dout_same = G.hi_and_dout_same(src, dst, valid, core, label, n)
+    core, label, rounds, v_plus = promotion_fixpoint(
+        src, dst, valid, core, label, new_src, new_dst, new_ok,
+        hi, dout_same, n, n_levels,
     )
     stats = InsertStats(
         rounds=rounds,

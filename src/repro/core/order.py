@@ -52,7 +52,7 @@ def place_block(
     — old-label order for promotions (required to preserve the k-order
     certificate), eviction-round order for Backward-evicted vertices
     (the batched analogue of the paper's insert-after-traversal-point;
-    proof in DESIGN.md §2), and any order is valid for removal drops.
+    proof in docs/DESIGN.md §2.2), and any order is valid for removal drops.
     """
     n = core_new.shape[0]
     base_min = level_min_labels(core_new, label, moving, n_levels)
@@ -102,3 +102,18 @@ def needs_renumber(label: Array) -> Array:
     """True when the label space is running out of headroom."""
     lim = jnp.int64(1) << 61
     return (jnp.min(label) < -lim) | (jnp.max(label) > lim)
+
+
+def maybe_renumber(core: Array, label: Array) -> Tuple[Array, Array]:
+    """Device-side renumber gate: relabel iff the label space is out of
+    headroom. Returns ``(label, did_renumber)``.
+
+    Folding the gate into the edit program means the per-batch
+    ``needs_renumber`` check costs nothing on the host — no dedicated
+    device->host sync, and the relabel itself runs in the same compiled
+    program when (rarely) triggered."""
+    need = needs_renumber(label)
+    new_label = jax.lax.cond(
+        need, lambda c, l: renumber(c, l), lambda c, l: l, core, label
+    )
+    return new_label, need

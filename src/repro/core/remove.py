@@ -13,11 +13,16 @@ Every round handles ALL affected levels of ALL removed edges at once —
 the paper's conditional-lock concurrency collapses into simultaneity:
 because all of a round's droppers still count each other in mcd, any
 intra-round append order at the new level keeps the k-order certificate
-``dout(v) <= core(v)`` valid (proof in DESIGN.md §2).
+``dout(v) <= core(v)`` valid (proof in docs/DESIGN.md §2.1).
 
 The fixpoint provably converges to the exact core numbers of the edited
 graph from any state that upper-bounds them (Lü et al. style argument;
 tests/test_jax_core.py property-checks this against the oracle).
+
+``removal_fixpoint`` is the reusable building block: the unified
+mixed-batch engine (core/engine.py) runs it back-to-back with the
+promotion rounds in one compiled program, reusing the terminating round's
+packed (hi, dout_same) statistics to seed the promotion phase.
 """
 from __future__ import annotations
 
@@ -36,6 +41,53 @@ Array = jax.Array
 class RemoveStats(NamedTuple):
     rounds: Array       # number of fixpoint rounds executed
     n_dropped: Array    # |V*| — vertices whose core number decreased
+
+
+def removal_fixpoint(
+    src: Array,
+    dst: Array,
+    valid: Array,
+    core: Array,
+    label: Array,
+    n: int,
+    n_levels: int,
+    share_stats: bool = True,
+) -> Tuple[Array, Array, Array, Array, Array]:
+    """Run the decrease-only mcd fixpoint on an already-tombstoned table.
+
+    Returns ``(core, label, rounds, hi, dout_same)``. With ``share_stats``
+    the (hi, dout_same) statistics come from the same packed scatter as
+    the terminating mcd check, so they describe the FINAL state exactly
+    (the last round drops nothing and therefore leaves core/label
+    untouched) — the unified engine seeds its promotion phase from them
+    for free. Removal-only callers pass ``share_stats=False`` to scatter
+    just the 1-column mcd (the returned hi/dout_same stay zero).
+    """
+
+    def cond(state):
+        return state[2]
+
+    def body(state):
+        core, label, _, rounds, hi, dout_same = state
+        if share_stats:
+            mcd, hi, dout_same = G.mcd_hi_dout(
+                src, dst, valid, core, label, n
+            )
+        else:
+            mcd = G.count_ge(src, dst, valid, core, n)
+        drop = (mcd < core) & (core > 0)
+        new_core = core - drop.astype(jnp.int32)
+        # place this round's droppers at the tail of their new level
+        label = place_block(new_core, label, drop, at_head=False,
+                            n_levels=n_levels)
+        return new_core, label, jnp.any(drop), rounds + 1, hi, dout_same
+
+    z = jnp.zeros(n, dtype=jnp.int32)
+    # rounds counts body executions (the final one observes no drops)
+    core, label, _, rounds, hi, dout_same = jax.lax.while_loop(
+        cond, body, (core, label, jnp.bool_(True), jnp.int32(0), z, z)
+    )
+    return core, label, rounds, hi, dout_same
 
 
 @partial(jax.jit, static_argnames=("n", "n_levels"))
@@ -62,24 +114,8 @@ def remove_batch(
     valid = valid & ~rm
 
     core0 = core
-
-    def cond(state):
-        _, _, changed, _ = state
-        return changed
-
-    def body(state):
-        core, label, _, rounds = state
-        mcd = G.count_ge(src, dst, valid, core, n)
-        drop = (mcd < core) & (core > 0)
-        new_core = core - drop.astype(jnp.int32)
-        # place this round's droppers at the tail of their new level
-        label = place_block(new_core, label, drop, at_head=False,
-                            n_levels=n_levels)
-        return new_core, label, jnp.any(drop), rounds + 1
-
-    # rounds counts body executions (the final one observes no drops)
-    core, label, _, rounds = jax.lax.while_loop(
-        cond, body, (core, label, jnp.bool_(True), jnp.int32(0))
+    core, label, rounds, _, _ = removal_fixpoint(
+        src, dst, valid, core, label, n, n_levels, share_stats=False
     )
     stats = RemoveStats(
         rounds=rounds, n_dropped=jnp.sum(core != core0, dtype=jnp.int32)

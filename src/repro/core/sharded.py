@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
+
 Array = jax.Array
 
 
@@ -55,7 +57,7 @@ def make_sharded_remove(mesh: Mesh, n: int, axis: str = "data"):
         core, _ = jax.lax.while_loop(cond, body, (core, jnp.bool_(True)))
         return core
 
-    shardmapped = jax.shard_map(
+    shardmapped = shard_map(
         _kernel,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P()),
@@ -125,7 +127,7 @@ def make_sharded_insert_round(mesh: Mesh, n: int, axis: str = "data"):
         )
         return core + cand.astype(jnp.int32), cand
 
-    shardmapped = jax.shard_map(
+    shardmapped = shard_map(
         _kernel,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(), P(), P()),

@@ -16,9 +16,16 @@ from .csr import CSRGraph
 
 @dataclasses.dataclass
 class EdgeEvent:
-    edges: np.ndarray   # [b, 2]
-    kind: str           # "insert" | "remove"
+    edges: np.ndarray   # [b, 2] — insertions ("insert"/"mixed"), removals ("remove")
+    kind: str           # "insert" | "remove" | "mixed"
     t: int
+    removals: Optional[np.ndarray] = None  # [b', 2], only for kind="mixed"
+
+    @property
+    def n_edits(self) -> int:
+        return len(self.edges) + (
+            len(self.removals) if self.removals is not None else 0
+        )
 
 
 def synthetic_stream(
@@ -50,6 +57,53 @@ def synthetic_stream(
             batch = [lst[i] for i in take]
             live.difference_update(batch)
             yield EdgeEvent(np.asarray(batch, dtype=np.int64), "remove", t)
+
+
+def mixed_stream(
+    g: CSRGraph,
+    n_batches: int,
+    batch_size: int,
+    p_insert: float = 0.5,
+    seed: int = 0,
+) -> Iterator[EdgeEvent]:
+    """Mixed insert+remove batches — the paper's burst workload in the
+    format the unified engine consumes in ONE compiled call per batch.
+
+    Each event carries ~``p_insert * batch_size`` fresh insertions in
+    ``edges`` and the rest as removals of currently-live edges in
+    ``removals``. Removed edges return to the candidate pool, so an edge
+    removed at t may be re-inserted at a later t (the re-insertion path
+    the engine tests pin down)."""
+    rng = np.random.default_rng(seed)
+    live = {tuple(e) for e in g.edge_array().tolist()}
+    n = g.n
+    max_edges = n * (n - 1) // 2
+    for t in range(n_batches):
+        n_ins = int(round(batch_size * p_insert))
+        # clamp to what the graph can absorb: never sample more fresh
+        # edges than are absent (dense/small graphs would spin forever)
+        n_ins = min(n_ins, max_edges - len(live))
+        n_rm = min(batch_size - n_ins, len(live))
+        inserts: list = []
+        picked = set()
+        while len(inserts) < n_ins:
+            u, v = rng.integers(0, n, size=2)
+            key = (int(min(u, v)), int(max(u, v)))
+            if u == v or key in live or key in picked:
+                continue
+            picked.add(key)
+            inserts.append(key)
+        lst = sorted(live)
+        take = rng.choice(len(lst), size=n_rm, replace=False)
+        removals = [lst[i] for i in take]
+        live.difference_update(removals)
+        live.update(inserts)
+        yield EdgeEvent(
+            np.asarray(inserts, dtype=np.int64).reshape(-1, 2),
+            "mixed",
+            t,
+            removals=np.asarray(removals, dtype=np.int64).reshape(-1, 2),
+        )
 
 
 def temporal_replay(

@@ -16,7 +16,7 @@ working set at BN*BD + (n+1) elements. Block sizes default to the
 MXU/VPU-aligned 256x128.
 
 This is the paper's hardware adaptation: the lock-protected per-vertex
-loops become one dense tiled pass (DESIGN.md §2).
+loops become one dense tiled pass (docs/DESIGN.md §1).
 """
 from __future__ import annotations
 
@@ -46,11 +46,14 @@ def _kernel(nbrs_ref, vals_ref, self_ref, out_ref, *, op: str, n: int):
         contrib = jnp.where(mask, gathered, 0)
         partial = jnp.sum(contrib, axis=1)
     elif op == "max":
-        neg = jnp.asarray(-(2**30), dtype=vals.dtype)
+        neg = jnp.asarray(-(2**30), dtype=out_ref.dtype)
         contrib = jnp.where(mask, gathered, neg)
         partial = jnp.max(contrib, axis=1)
     else:
         raise ValueError(op)
+    # under x64, integer reductions accumulate in int64 while out_ref keeps
+    # the input dtype — cast back before the swap
+    partial = partial.astype(out_ref.dtype)
 
     @pl.when(j == 0)
     def _init():

@@ -22,6 +22,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import shard_map
+
 Array = jax.Array
 
 
@@ -39,7 +41,7 @@ def _sharded_gather(vals, idx, axes):
 
     in_specs = (P(axes, *([None] * (vals.ndim - 1))), P(axes))
     out_specs = P(axes, *([None] * (vals.ndim - 1)))
-    return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs)(vals, idx)
+    return shard_map(f, in_specs=in_specs, out_specs=out_specs)(vals, idx)
 
 
 def _pin(x, axes):
@@ -116,7 +118,7 @@ def _sharded_seg_sum(x, ids, n, axes):
 
     in_specs = (P(axes, *([None] * (x.ndim - 1))), P(axes))
     out_specs = P(axes, *([None] * (x.ndim - 1)))
-    return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs)(x, ids)
+    return shard_map(f, in_specs=in_specs, out_specs=out_specs)(x, ids)
 
 
 def _seg_max(x, ids, n):

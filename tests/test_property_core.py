@@ -7,6 +7,9 @@ batch (validity of the maintained order for future edits).
 Invariant 3: the sequential Simplified-Order oracle agrees edge-by-edge.
 """
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core.api import CoreMaintainer

@@ -1,0 +1,232 @@
+"""Unified mixed-batch engine: exactness against the oracle, device-side
+dedup semantics, same-batch remove+re-insert, slot-table mirror, and the
+in-program renumber gate."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.api import CoreMaintainer
+from repro.core.oracle import bz_from_csr
+from repro.core.order import LABEL_GAP, needs_renumber
+from repro.graph.csr import add_edges_csr, build_csr, remove_edges_csr
+from repro.graph.generators import erdos_renyi
+from repro.graph.stream import mixed_stream
+
+
+def _sample_absent(cur, rng, k):
+    batch = []
+    while len(batch) < k:
+        u, v = rng.integers(0, cur.n, size=2)
+        key = (int(min(u, v)), int(max(u, v)))
+        if u == v or cur.has_edge(*key) or key in batch:
+            continue
+        batch.append(key)
+    return np.asarray(batch, dtype=np.int64)
+
+
+def _certificate_violations(m: CoreMaintainer) -> np.ndarray:
+    core, label = m.cores(), m.labels()
+    src = np.asarray(m.src)
+    dst = np.asarray(m.dst)
+    val = np.asarray(m.valid)
+    dout = np.zeros(m.n, dtype=np.int64)
+    for s, d, ok in zip(src, dst, val):
+        if not ok:
+            continue
+        if (core[d], label[d]) > (core[s], label[s]):
+            dout[s] += 1
+        else:
+            dout[d] += 1
+    return np.nonzero(dout > core)[0]
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_mixed_batches_match_bz(seed):
+    """One apply_batch call per mixed insert+remove event == BZ from
+    scratch, with the k-order certificate intact after every batch."""
+    rng = np.random.default_rng(seed + 21)
+    n = 80
+    g = erdos_renyi(n, 300, seed=seed)
+    m = CoreMaintainer.from_graph(g, capacity=4096)
+    cur = g
+    for step in range(6):
+        ins = _sample_absent(cur, rng, 6)
+        edges = cur.edge_array()
+        take = rng.choice(edges.shape[0], size=6, replace=False)
+        rm = edges[take]
+        m.apply_batch(insert_edges=ins, remove_edges=rm)
+        cur = add_edges_csr(remove_edges_csr(cur, rm), ins)
+        np.testing.assert_array_equal(m.cores(), bz_from_csr(cur))
+        bad = _certificate_violations(m)
+        assert bad.size == 0, f"k-order certificate violated at {bad}"
+
+
+def test_remove_and_reinsert_same_batch():
+    """An edge listed in BOTH halves of one batch round-trips: removals
+    apply first, so it ends up present and cores are unchanged."""
+    g = erdos_renyi(50, 180, seed=3)
+    m = CoreMaintainer.from_graph(g, capacity=1024)
+    before = m.cores().copy()
+    e = g.edge_array()[:4]
+    st = m.apply_batch(insert_edges=e, remove_edges=e)
+    assert int(st.n_removed) == 4
+    assert int(st.n_inserted) == 4
+    np.testing.assert_array_equal(m.cores(), before)
+    for a, b in e:
+        assert (int(a), int(b)) in m.edge_slot
+
+
+def test_remove_then_reinsert_across_stream():
+    """mixed_stream recycles removed edges into the candidate pool; the
+    maintainer tracks BZ exactly across the whole stream."""
+    n = 60
+    g = erdos_renyi(n, 240, seed=5)
+    m = CoreMaintainer.from_graph(g, capacity=4096)
+    live = {tuple(e) for e in g.edge_array().tolist()}
+    removed_once = set()
+    reinserted = 0
+    for ev in mixed_stream(g, 10, 16, seed=9):
+        assert ev.kind == "mixed"
+        reinserted += sum(
+            1 for e in map(tuple, ev.edges.tolist()) if e in removed_once
+        )
+        removed_once.update(map(tuple, ev.removals.tolist()))
+        m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+        live.difference_update(map(tuple, ev.removals.tolist()))
+        live.update(map(tuple, ev.edges.tolist()))
+        cur = build_csr(n, np.asarray(sorted(live), dtype=np.int64))
+        np.testing.assert_array_equal(m.cores(), bz_from_csr(cur))
+    assert m.live_edges == len(live)
+
+
+def test_device_dedup_and_membership():
+    """Self-loops, in-batch duplicates, and already-present edges are all
+    filtered on device; the batch is a no-op."""
+    g = erdos_renyi(40, 120, seed=6)
+    m = CoreMaintainer.from_graph(g, capacity=1024)
+    before = m.cores().copy()
+    live_before = m.live_edges
+    e = g.edge_array()[:5]
+    batch = np.concatenate(
+        [e, np.asarray([[3, 3], [7, 9], [9, 7], [7, 9]])]
+    )
+    extra = 0 if g.has_edge(7, 9) else 1
+    st = m.apply_batch(insert_edges=batch)
+    assert int(st.n_inserted) == extra  # (7, 9) once, everything else dropped
+    np.testing.assert_array_equal(
+        m.cores(), bz_from_csr(add_edges_csr(g, np.asarray([[7, 9]])))
+        if extra else before,
+    )
+    assert m.live_edges == live_before + extra
+    # removing a non-existent edge is a no-op too
+    st = m.apply_batch(remove_edges=np.asarray([[0, 39], [39, 0]])
+                       if not g.has_edge(0, 39) else None)
+    assert int(st.n_removed) == 0
+
+
+def test_engines_agree_on_stream():
+    """The unified one-call engine and the seed two-call path produce
+    identical cores on the same mixed stream."""
+    g = erdos_renyi(70, 280, seed=8)
+    mu = CoreMaintainer.from_graph(g, capacity=2048, engine="unified")
+    mh = CoreMaintainer.from_graph(g, capacity=2048, engine="host")
+    for ev in mixed_stream(g, 6, 12, seed=4):
+        su = mu.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+        # apply_batch dispatches to the seed two-call path on engine="host"
+        sh = mh.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+        np.testing.assert_array_equal(mu.cores(), mh.cores())
+        assert int(su.n_inserted) == int(sh.n_inserted)
+        assert int(su.n_removed) == int(sh.n_removed)
+    assert mu.live_edges == mh.live_edges
+    with pytest.raises(ValueError):
+        CoreMaintainer.from_graph(g, engine="hosts")
+
+
+def test_save_load_rebuilds_slot_table(tmp_path):
+    """load() leaves the host mirror lazy; on first access it must match
+    the live edge set exactly, slot by slot."""
+    g = erdos_renyi(50, 150, seed=0)
+    m = CoreMaintainer.from_graph(g, capacity=1024)
+    ev = next(mixed_stream(g, 1, 20, seed=2))
+    m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+    p = str(tmp_path / "state.npz")
+    m.save(p)
+    m2 = CoreMaintainer.load(p)
+    assert m2.slot_cache is None  # mirror not built yet
+    assert m2.edge_slot == m.edge_slot
+    src = np.asarray(m2.src)
+    dst = np.asarray(m2.dst)
+    val = np.asarray(m2.valid)
+    for (a, b), slot in m2.edge_slot.items():
+        assert val[slot]
+        assert {int(src[slot]), int(dst[slot])} == {a, b}
+    # both continue identically after the round trip
+    ins = _sample_absent(build_csr(m.n, np.asarray(sorted(m.edge_slot))),
+                         np.random.default_rng(1), 5)
+    m.apply_batch(insert_edges=ins)
+    m2.apply_batch(insert_edges=ins)
+    np.testing.assert_array_equal(m.cores(), m2.cores())
+
+
+def test_in_program_renumber_gate():
+    """The label renumber runs inside the compiled program when headroom
+    is exhausted, and reports via stats.renumbered."""
+    g = erdos_renyi(40, 160, seed=7)
+    m = CoreMaintainer.from_graph(g, capacity=1024)
+    st = m.apply_batch(insert_edges=_sample_absent(
+        g, np.random.default_rng(3), 4))
+    assert not bool(st.renumbered)
+    m.label = m.label - (jnp.int64(1) << 61) - 1
+    assert bool(needs_renumber(m.label))
+    st = m.apply_batch(insert_edges=_sample_absent(
+        build_csr(m.n, np.asarray(sorted(m.edge_slot))),
+        np.random.default_rng(4), 4))
+    assert bool(st.renumbered)
+    assert not bool(needs_renumber(m.label))
+    diffs = np.diff(np.sort(m.labels()))
+    assert (diffs == int(LABEL_GAP)).all()
+
+
+def test_host_engine_slot_table_survives_midbatch_compaction():
+    """Regression: when _compact fires inside _insert_edges_host, the new
+    edges must land in the POST-compaction slot mirror (a stale pre-compact
+    dict would make the batch invisible to later removals/dedup)."""
+    g = erdos_renyi(40, 100, seed=13)
+    m = CoreMaintainer.from_graph(g, capacity=g.m + 10, engine="host")
+    rng = np.random.default_rng(7)
+    edges = g.edge_array()
+    rm = edges[rng.choice(edges.shape[0], size=15, replace=False)]
+    m.remove_edges(rm)  # tombstones eat the headroom
+    cur = remove_edges_csr(g, rm)
+    ins = _sample_absent(cur, rng, 18)  # forces _compact mid-insert
+    m.insert_edges(ins)
+    cur = add_edges_csr(cur, ins)
+    for a, b in ins:
+        assert (int(a), int(b)) in m.edge_slot
+    # removal of a just-inserted edge must actually remove it
+    st = m.remove_edges(ins[:3])
+    assert int(st.rounds) > 0
+    cur = remove_edges_csr(cur, ins[:3])
+    np.testing.assert_array_equal(m.cores(), bz_from_csr(cur))
+    assert m.live_edges == cur.m
+
+
+def test_capacity_growth_under_unified_stream():
+    """Churn through compaction/growth with the sync-free capacity bound."""
+    g = erdos_renyi(40, 100, seed=2)
+    m = CoreMaintainer.from_graph(g, capacity=int(g.m * 1.4) + 8)
+    live = {tuple(e) for e in g.edge_array().tolist()}
+    rng = np.random.default_rng(11)
+    for _ in range(8):
+        lst = sorted(live)
+        take = rng.choice(len(lst), size=8, replace=False)
+        rm = np.asarray([lst[i] for i in take], dtype=np.int64)
+        cur = build_csr(m.n, np.asarray(lst, dtype=np.int64))
+        ins = _sample_absent(cur, rng, 8)
+        m.apply_batch(insert_edges=ins, remove_edges=rm)
+        live.difference_update(map(tuple, rm.tolist()))
+        live.update(map(tuple, ins.tolist()))
+        cur = build_csr(m.n, np.asarray(sorted(live), dtype=np.int64))
+        np.testing.assert_array_equal(m.cores(), bz_from_csr(cur))
+    assert m.live_edges == len(live)
