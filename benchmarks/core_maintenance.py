@@ -19,8 +19,11 @@ depth of each batch.
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Sequence
 
 import numpy as np
 
@@ -172,6 +175,9 @@ def fig7_stability(n_batches: int = 8, batch: int = 128) -> List[Row]:
     return rows
 
 
+STREAM_ENGINES = ("host", "unified", "sharded")
+
+
 def stream_bench(
     n: int = 1500,
     m: int = 6000,
@@ -179,10 +185,16 @@ def stream_bench(
     batch_size: int = 128,
     warmup: int = 3,
     out_json: str = "BENCH_stream.json",
+    engines: Sequence[str] = STREAM_ENGINES,
+    scaling_device_counts: Sequence[int] = (),
 ) -> Dict[str, object]:
-    """Mixed insert+remove stream: the unified one-call engine vs the seed
-    two-call path (host-dict dedup + separate insert/remove programs) on
-    the SAME event stream. Reports batches/sec and writes ``out_json``.
+    """Mixed insert+remove stream on the SAME events: the unified one-call
+    engine and the mesh-sharded engine vs the seed two-call path
+    (host-dict dedup + separate insert/remove programs). Reports
+    batches/sec per engine and writes ``out_json``. With
+    ``scaling_device_counts`` the sharded engine is re-timed in
+    subprocesses with that many forced host devices (the paper's
+    time-vs-workers scaling axis; see ``sharded_device_scaling``).
 
     Note on jit-cache hygiene: the unified engine's ``active_cap`` is a
     static pow2 bucket of the slot high-water mark. With the defaults
@@ -190,7 +202,8 @@ def stream_bench(
     inside the 8192 bucket, so no recompile lands in the timed region;
     if you change the parameters, keep ``m + n_batches * batch_size/2``
     under the next power of two past ``m`` (or discount the first timed
-    batch after a bucket crossing).
+    batch after a bucket crossing). The sharded engine always runs full
+    capacity passes, so it never recompiles mid-stream.
     """
     g = erdos_renyi(n, m, seed=12)
     events = list(
@@ -198,16 +211,16 @@ def stream_bench(
     )
     per_engine: Dict[str, Dict[str, float]] = {}
     finals = {}
-    for engine in ("host", "unified"):
+    for engine in engines:
         mt = CoreMaintainer.from_graph(g, capacity=4 * m, engine=engine)
 
         def step(ev):
-            if engine == "unified":
-                mt.apply_batch(insert_edges=ev.edges,
-                               remove_edges=ev.removals)
-            else:  # seed path: one program per edit kind
+            if engine == "host":  # seed path: one program per edit kind
                 mt.remove_edges(ev.removals)
                 mt.insert_edges(ev.edges)
+            else:
+                mt.apply_batch(insert_edges=ev.edges,
+                               remove_edges=ev.removals)
 
         for ev in events[:warmup]:  # compile both programs
             step(ev)
@@ -223,25 +236,114 @@ def stream_bench(
             "edges_per_s": n_batches * batch_size / dt,
         }
         finals[engine] = mt.cores()
-    agree = bool((finals["host"] == finals["unified"]).all())
+    agree = all(
+        bool((finals[e] == finals[engines[0]]).all()) for e in engines
+    )
     result = {
         "graph": {"n": n, "m": m},
         "n_batches": n_batches,
         "batch_size": batch_size,
-        "host": per_engine["host"],
-        "unified": per_engine["unified"],
-        "speedup_unified_vs_host": (
-            per_engine["host"]["seconds"] / per_engine["unified"]["seconds"]
-        ),
         "engines_agree": agree,
     }
-    # write the artifact BEFORE asserting: on divergence the JSON (with
-    # engines_agree=false and both timings) is the debugging evidence
-    if out_json:
-        with open(out_json, "w") as fh:
-            json.dump(result, fh, indent=2)
-    assert agree, "unified and host engines diverged on the same stream"
+    result.update(per_engine)
+    if "host" in per_engine:
+        for engine in engines:
+            if engine != "host":
+                result[f"speedup_{engine}_vs_host"] = (
+                    per_engine["host"]["seconds"]
+                    / per_engine[engine]["seconds"]
+                )
+    # write the artifact BEFORE the scaling subprocesses and BEFORE
+    # asserting: on a divergence or a failed/timed-out scaling run the
+    # JSON (with engines_agree and all per-engine timings) survives as
+    # the debugging evidence
+    def _write():
+        if out_json:
+            with open(out_json, "w") as fh:
+                json.dump(result, fh, indent=2)
+
+    _write()
+    if scaling_device_counts:
+        result["sharded_scaling"] = sharded_device_scaling(
+            scaling_device_counts, n=n, m=m,
+            n_batches=min(n_batches, 10), batch_size=batch_size,
+        )
+        _write()
+    assert agree, "engines diverged on the same stream"
     return result
+
+
+_SCALING_SCRIPT = """
+import json, sys, time
+import repro
+import jax
+from repro.core.api import CoreMaintainer
+from repro.graph.generators import erdos_renyi
+from repro.graph.stream import mixed_stream
+
+n, m, n_batches, batch_size, warmup = map(int, sys.argv[1:6])
+g = erdos_renyi(n, m, seed=12)
+events = list(mixed_stream(g, n_batches + warmup, batch_size, seed=17))
+mt = CoreMaintainer.from_graph(g, capacity=4 * m, engine="sharded")
+for ev in events[:warmup]:
+    mt.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+mt.core.block_until_ready()
+t0 = time.perf_counter()
+for ev in events[warmup:]:
+    mt.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+mt.core.block_until_ready()
+dt = time.perf_counter() - t0
+print(json.dumps({
+    "n_devices": len(jax.devices()),
+    "n_batches": n_batches,
+    "seconds": dt,
+    "batches_per_s": n_batches / dt,
+}))
+"""
+
+
+def sharded_device_scaling(
+    device_counts: Sequence[int] = (1, 2, 4),
+    n: int = 1500,
+    m: int = 6000,
+    n_batches: int = 10,
+    batch_size: int = 128,
+    warmup: int = 3,
+) -> List[Dict[str, float]]:
+    """Time the sharded engine under forced host device counts (one
+    subprocess per count — XLA fixes the device count at init). On a
+    single-core CPU container the host devices share one core, so this
+    measures collective overhead rather than speedup; on real multi-core
+    or multi-chip hardware the same harness reports the paper's
+    time-vs-workers curve."""
+    src_path = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    rows: List[Dict[str, float]] = []
+    for ndev in device_counts:
+        env = dict(os.environ)
+        # append, don't clobber: the child must run under the same XLA
+        # settings as the parent's timings, plus the forced device count
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={ndev}"
+        ).strip()
+        env["PYTHONPATH"] = src_path + os.pathsep + env.get("PYTHONPATH", "")
+        out = subprocess.run(
+            [sys.executable, "-c", _SCALING_SCRIPT,
+             str(n), str(m), str(n_batches), str(batch_size), str(warmup)],
+            capture_output=True,
+            text=True,
+            env=env,
+            timeout=900,
+        )
+        if out.returncode != 0:
+            raise RuntimeError(
+                f"scaling run with {ndev} devices failed:\n"
+                f"{out.stdout}\n{out.stderr}"
+            )
+        rows.append(json.loads(out.stdout.strip().splitlines()[-1]))
+    return rows
 
 
 def rounds_depth(batch: int = 512) -> List[Row]:

@@ -88,8 +88,9 @@ def main() -> None:
         n_batches=10 if args.quick else 30,
         batch_size=64 if args.quick else 128,
         out_json=args.stream_json,
+        scaling_device_counts=() if args.quick else (1, 2, 4),
     )
-    for eng in ("host", "unified"):
+    for eng in cm.STREAM_ENGINES:
         _emit(
             f"stream/{eng}",
             1e6 * sb[eng]["seconds"] / sb["n_batches"],
@@ -99,8 +100,15 @@ def main() -> None:
         "stream/speedup",
         0.0,
         f"unified_vs_host={sb['speedup_unified_vs_host']:.2f}x;"
+        f"sharded_vs_host={sb['speedup_sharded_vs_host']:.2f}x;"
         f"agree={sb['engines_agree']}",
     )
+    for row in sb.get("sharded_scaling", ()):
+        _emit(
+            f"stream/sharded_scaling/dev{row['n_devices']}",
+            1e6 * row["seconds"] / row["n_batches"],
+            f"batches_per_s={row['batches_per_s']:.2f}",
+        )
 
     # roofline table (from the dry-run artifact, if present)
     if os.path.exists(args.roofline_json):

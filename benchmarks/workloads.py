@@ -8,7 +8,7 @@ families (ER / BA / RMAT power-law) and its protocol.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -51,13 +51,29 @@ def sample_insertions(g: CSRGraph, k: int, seed: int = 0) -> np.ndarray:
     return np.asarray(out, dtype=np.int64)
 
 
-def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall seconds of fn(*args)."""
+def timed(
+    fn: Callable,
+    *args,
+    warmup: int = 1,
+    iters: int = 3,
+    sync: Optional[Callable] = None,
+) -> float:
+    """Median wall seconds of fn(*args).
+
+    JAX dispatch is asynchronous: without blocking on the result the
+    timer reads enqueue time, not execution time. ``sync`` is called on
+    fn's return value before each timer read; the default blocks on every
+    JAX array in the result (a no-op for plain Python/numpy results).
+    """
+    if sync is None:
+        import jax
+
+        sync = jax.block_until_ready
     for _ in range(warmup):
-        fn(*args)
+        sync(fn(*args))
     ts = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        fn(*args)
+        sync(fn(*args))
         ts.append(time.perf_counter() - t0)
     return sorted(ts)[len(ts) // 2]

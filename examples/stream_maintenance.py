@@ -34,6 +34,13 @@ def main():
         "--mixed", action="store_true",
         help="mixed insert+remove batches, one compiled call per batch",
     )
+    ap.add_argument(
+        "--engine", default="unified",
+        choices=("unified", "host", "sharded"),
+        help="sharded = slot table sharded over all local devices "
+             "(XLA_FLAGS=--xla_force_host_platform_device_count=8 to try "
+             "multi-device on CPU)",
+    )
     args = ap.parse_args()
 
     g = erdos_renyi(args.n, args.m, seed=0)
@@ -42,12 +49,18 @@ def main():
 
     start_batch = 0
     if os.path.exists(state_path) and os.path.exists(meta_path):
-        m = CoreMaintainer.load(state_path)
+        m = CoreMaintainer.load(state_path, engine=args.engine)
         start_batch = int(open(meta_path).read().strip()) + 1
         print(f"[resume] restored checkpoint, continuing at batch "
               f"{start_batch}")
     else:
-        m = CoreMaintainer.from_graph(g, capacity=8 * args.m)
+        m = CoreMaintainer.from_graph(
+            g, capacity=8 * args.m, engine=args.engine
+        )
+    if args.engine == "sharded":
+        import jax
+        print(f"[mesh] edge slots sharded over {len(jax.devices())} "
+              f"device(s)")
 
     stream = mixed_stream if args.mixed else synthetic_stream
     events = list(stream(g, args.batches, args.batch_size, seed=42))

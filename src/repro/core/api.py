@@ -17,13 +17,24 @@ The seed two-program path (host-dict dedup + `insert.insert_batch` /
 `remove.remove_batch`) is preserved under ``engine="host"`` as the
 benchmark baseline and fallback.
 
+``engine="sharded"`` runs the SAME one-program-per-batch semantics with
+the edge-slot table sharded across a mesh's ``data`` axis
+(core/sharded.py, docs/DESIGN.md §4): per-device work scales as
+capacity / n_devices, vertex state is replicated, and each statistic
+costs one psum.
+
 Batches are padded to power-of-two sizes so the jit cache stays small.
+
+Edge endpoints are validated on every edit path: out-of-range vertices
+raise ``ValueError`` by default, or are masked out (dropped) under
+``validate=False`` — an invalid edge can never reach the slot table or
+the per-vertex stat scatters (which would clamp it onto vertex n-1).
 """
 from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +47,11 @@ from .insert import InsertStats, insert_batch
 from .oracle import bz_core_decomposition
 from .order import needs_renumber, renumber
 from .remove import RemoveStats, remove_batch
+from .sharded import make_sharded_apply
+
+EDGE_AXIS = "data"  # mesh axis the sharded engine shards edge slots over
+
+_ENGINES = ("unified", "host", "sharded")
 
 
 def _pad_pow2(x: np.ndarray, fill: int) -> np.ndarray:
@@ -54,6 +70,26 @@ def _as_edge_array(edges) -> np.ndarray:
     return np.asarray(edges, dtype=np.int64).reshape(-1, 2)
 
 
+def _require_x64() -> None:
+    """The k-order labels are int64 and the engines pack edge keys against
+    an int64 sentinel (1 << 62): with x64 disabled both silently truncate
+    to int32 and corrupt state. ``import repro`` enables x64; fail loudly
+    if a user (or another library) turned it off afterwards."""
+    if not jax.config.jax_enable_x64:
+        raise RuntimeError(
+            "CoreMaintainer needs jax_enable_x64 (int64 k-order labels and "
+            "1<<62 edge-key sentinels corrupt silently under x32). "
+            "Re-enable it with jax.config.update('jax_enable_x64', True) "
+            "— `import repro` does this at import time."
+        )
+
+
+def _default_edge_mesh():
+    from ..launch.mesh import make_edge_mesh
+
+    return make_edge_mesh(axis=EDGE_AXIS)
+
+
 @dataclasses.dataclass
 class CoreMaintainer:
     """Dynamic-graph core maintenance with k-order labels (JAX)."""
@@ -67,17 +103,64 @@ class CoreMaintainer:
     core: jax.Array
     label: jax.Array
     n_levels: int
-    engine: str = "unified"     # "unified" | "host" (seed two-call path)
+    engine: str = "unified"     # "unified" | "host" | "sharded"
+    mesh: Optional[Any] = None  # sharded engine only; needs a "data" axis
+    validate: bool = True       # raise on out-of-range endpoints (else mask)
     last_insert_stats: Optional[InsertStats] = None
     last_remove_stats: Optional[RemoveStats] = None
     last_batch_stats: Optional[BatchStats] = None
     slot_cache: Optional[Dict[Tuple[int, int], int]] = None
     n_edges_ub: int = 0         # host upper bound on int(n_edges)
     host_renumbered: bool = False  # last host-path call triggered a renumber
+    _sharded_fn: Optional[Callable] = dataclasses.field(
+        default=None, repr=False
+    )
 
     def __post_init__(self) -> None:
-        if self.engine not in ("unified", "host"):
+        if self.engine not in _ENGINES:
             raise ValueError(f"unknown engine {self.engine!r}")
+        _require_x64()
+        if self.engine == "sharded":
+            if self.mesh is None:
+                self.mesh = _default_edge_mesh()
+            if EDGE_AXIS not in dict(self.mesh.shape):
+                raise ValueError(
+                    f"sharded engine needs a {EDGE_AXIS!r} mesh axis; got "
+                    f"axes {tuple(self.mesh.axis_names)}"
+                )
+            # pad the slot table up to an even shard split (all-invalid
+            # headroom); save()d states keep working on any device count.
+            # _grow_to places the grown buffers itself, so only place here
+            # when no padding was needed
+            cap0 = self.capacity
+            self._grow_to(self.capacity)
+            if self.capacity == cap0:
+                self._place_sharded()
+
+    # -- sharded placement ---------------------------------------------------
+    def _place_sharded(self) -> None:
+        """Commit the slot table sharded over the mesh's data axis and the
+        vertex state replicated, so the jitted shard_map program never
+        reshards its inputs."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        esh = NamedSharding(self.mesh, P(EDGE_AXIS))
+        rep = NamedSharding(self.mesh, P())
+        self.src = jax.device_put(jnp.asarray(self.src), esh)
+        self.dst = jax.device_put(jnp.asarray(self.dst), esh)
+        self.valid = jax.device_put(jnp.asarray(self.valid), esh)
+        self.core = jax.device_put(jnp.asarray(self.core), rep)
+        self.label = jax.device_put(jnp.asarray(self.label), rep)
+        self.n_edges = jax.device_put(
+            jnp.asarray(self.n_edges, dtype=jnp.int32), rep
+        )
+
+    def _get_sharded_fn(self) -> Callable:
+        if self._sharded_fn is None:
+            self._sharded_fn = make_sharded_apply(
+                self.mesh, self.n, self.n_levels, axis=EDGE_AXIS
+            )
+        return self._sharded_fn
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -87,7 +170,10 @@ class CoreMaintainer:
         capacity: Optional[int] = None,
         init: str = "host-bz",
         engine: str = "unified",
+        mesh: Optional[Any] = None,
+        validate: bool = True,
     ) -> "CoreMaintainer":
+        _require_x64()  # before any label math that would truncate quietly
         edges = g.edge_array()
         m = edges.shape[0]
         capacity = capacity or max(16, 2 * m)
@@ -130,6 +216,8 @@ class CoreMaintainer:
             label=label,
             n_levels=n_levels,
             engine=engine,
+            mesh=mesh,
+            validate=validate,
             slot_cache=edge_slot,
             n_edges_ub=m,
         )
@@ -169,6 +257,27 @@ class CoreMaintainer:
     def live_edges(self) -> int:
         return len(self.edge_slot)
 
+    # -- validation ----------------------------------------------------------
+    def _validated(self, edges, what: str) -> np.ndarray:
+        """Normalize an edge batch and enforce endpoint bounds.
+
+        With ``validate`` (the default) an out-of-range endpoint raises;
+        otherwise the offending rows are masked out before they can reach
+        the slot table or the stat scatters (whose index clamping would
+        silently alias them onto vertex n-1)."""
+        edges = _as_edge_array(edges)
+        if edges.size:
+            bad = ((edges < 0) | (edges >= self.n)).any(axis=1)
+            if bad.any():
+                if self.validate:
+                    row = edges[bad][0]
+                    raise ValueError(
+                        f"{what} edge {row.tolist()} out of range for "
+                        f"n={self.n} (pass validate=False to mask instead)"
+                    )
+                edges = edges[~bad]
+        return edges
+
     # -- edits ----------------------------------------------------------------
     def apply_batch(
         self,
@@ -178,13 +287,22 @@ class CoreMaintainer:
         """Apply one mixed batch (removals first, then insertions) in a
         single compiled device program — no host dedup, no per-batch
         device->host syncs. Under ``engine="host"`` the batch is served by
-        the seed two-call path instead (stats composed from both calls)."""
+        the seed two-call path instead (stats composed from both calls);
+        ``engine="sharded"`` runs the same program with the slot table
+        sharded across the mesh."""
+        _require_x64()
+        # validate BOTH lists before any engine touches state, so a
+        # rejected batch is rejected atomically (the host path applies
+        # removals first and must not commit them before the insert list
+        # has passed validation)
+        ins = self._validated(insert_edges, "insert")
+        rm = self._validated(remove_edges, "remove")
         if self.engine == "host":
             n_live0 = self.live_edges
-            rm_st = self._remove_edges_host(remove_edges)
+            rm_st = self._remove_edges_host(rm)
             n_live1 = self.live_edges
             renumbered = self.host_renumbered
-            in_st = self._insert_edges_host(insert_edges)
+            in_st = self._insert_edges_host(ins)
             renumbered = renumbered or self.host_renumbered
             stats = BatchStats(
                 n_inserted=jnp.int32(self.live_edges - n_live1),
@@ -198,8 +316,6 @@ class CoreMaintainer:
             )
             self.last_batch_stats = stats
             return stats
-        ins = _as_edge_array(insert_edges)
-        rm = _as_edge_array(remove_edges)
         b_ins = ins.shape[0]
         if b_ins == 0 and rm.shape[0] == 0:
             z = jnp.int32(0)
@@ -210,13 +326,6 @@ class CoreMaintainer:
             self._compact()
             if self.n_edges_ub + b_ins + 1 >= self.capacity:
                 self._grow(b_ins)
-        # static pow2 bound on the slot high-water mark incl. this batch:
-        # the engine runs every edge pass over this many slots only
-        need = max(16, self.n_edges_ub + b_ins + 1)
-        active_cap = 1
-        while active_cap < need:
-            active_cap *= 2
-        active_cap = min(active_cap, self.capacity)
         iu = _pad_pow2(ins[:, 0], 0)
         iv = _pad_pow2(ins[:, 1], 0)
         iok = np.zeros(len(iu), dtype=bool)
@@ -225,37 +334,48 @@ class CoreMaintainer:
         rv = _pad_pow2(rm[:, 1], 0)
         rok = np.zeros(len(ru), dtype=bool)
         rok[: rm.shape[0]] = True
+        args = (
+            self.src,
+            self.dst,
+            self.valid,
+            self.core,
+            self.label,
+            self.n_edges,
+            jnp.asarray(iu),
+            jnp.asarray(iv),
+            jnp.asarray(iok),
+            jnp.asarray(ru),
+            jnp.asarray(rv),
+            jnp.asarray(rok),
+        )
         with warnings.catch_warnings():
             # donation is declared for accelerator backends; backends
             # without buffer aliasing (CPU) warn and copy instead
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable"
             )
-            (
-                self.src,
-                self.dst,
-                self.valid,
-                self.core,
-                self.label,
-                self.n_edges,
-                stats,
-            ) = apply_batch(
-                self.src,
-                self.dst,
-                self.valid,
-                self.core,
-                self.label,
-                self.n_edges,
-                jnp.asarray(iu),
-                jnp.asarray(iv),
-                jnp.asarray(iok),
-                jnp.asarray(ru),
-                jnp.asarray(rv),
-                jnp.asarray(rok),
-                self.n,
-                self.n_levels,
-                active_cap,
-            )
+            if self.engine == "sharded":
+                # every edge pass runs over capacity / n_devices slots per
+                # device; no active_cap prefix (slicing would reshard)
+                out = self._get_sharded_fn()(*args)
+            else:
+                # static pow2 bound on the slot high-water mark incl. this
+                # batch: every edge pass runs over this slot prefix only
+                need = max(16, self.n_edges_ub + b_ins + 1)
+                active_cap = 1
+                while active_cap < need:
+                    active_cap *= 2
+                active_cap = min(active_cap, self.capacity)
+                out = apply_batch(*args, self.n, self.n_levels, active_cap)
+        (
+            self.src,
+            self.dst,
+            self.valid,
+            self.core,
+            self.label,
+            self.n_edges,
+            stats,
+        ) = out
         # monotone host bound: the device allocated at most b_ins new slots
         self.n_edges_ub += b_ins
         self.slot_cache = None
@@ -284,8 +404,9 @@ class CoreMaintainer:
 
     # -- seed two-program path (benchmark baseline; engine="host") -----------
     def _insert_edges_host(self, edges: np.ndarray) -> InsertStats:
+        _require_x64()
         self.host_renumbered = False
-        edges = _as_edge_array(edges)
+        edges = self._validated(edges, "insert")
         lo = np.minimum(edges[:, 0], edges[:, 1])
         hi = np.maximum(edges[:, 0], edges[:, 1])
         keep, seen = [], set()
@@ -339,8 +460,9 @@ class CoreMaintainer:
         return stats
 
     def _remove_edges_host(self, edges: np.ndarray) -> RemoveStats:
+        _require_x64()
         self.host_renumbered = False
-        edges = _as_edge_array(edges)
+        edges = self._validated(edges, "remove")
         slots = []
         slot_table = self.edge_slot
         for a, b in edges:
@@ -395,12 +517,23 @@ class CoreMaintainer:
         # the mirror is stale either way; let the edge_slot property
         # rebuild it lazily (the unified engine never reads it)
         self.slot_cache = None
+        if self.engine == "sharded":
+            self._place_sharded()
 
     def _grow(self, need: int) -> None:
-        new_cap = max(self.capacity * 2, self.capacity + 2 * need + 16)
+        self._grow_to(max(self.capacity * 2, self.capacity + 2 * need + 16))
+
+    def _grow_to(self, new_cap: int) -> None:
+        if self.engine == "sharded":
+            # keep the slot table evenly divisible across the mesh
+            ndev = dict(self.mesh.shape)[EDGE_AXIS]
+            new_cap += (-new_cap) % ndev
         pad = new_cap - self.capacity
+        if pad <= 0:
+            return
 
         def ext(x, fill):
+            x = jnp.asarray(x)
             return jnp.concatenate(
                 [x, jnp.full((pad,), fill, dtype=x.dtype)]
             )
@@ -409,6 +542,8 @@ class CoreMaintainer:
         self.dst = ext(self.dst, 0)
         self.valid = ext(self.valid, False)
         self.capacity = new_cap
+        if self.engine == "sharded":
+            self._place_sharded()
 
     # -- persistence -------------------------------------------------------------
     def save(self, path: str) -> None:
@@ -425,7 +560,13 @@ class CoreMaintainer:
         )
 
     @classmethod
-    def load(cls, path: str, engine: str = "unified") -> "CoreMaintainer":
+    def load(
+        cls,
+        path: str,
+        engine: str = "unified",
+        mesh: Optional[Any] = None,
+        validate: bool = True,
+    ) -> "CoreMaintainer":
         z = np.load(path)
         return cls(
             n=int(z["n"]),
@@ -438,6 +579,8 @@ class CoreMaintainer:
             label=jnp.asarray(z["label"]),
             n_levels=int(z["n"]) + 2,
             engine=engine,
+            mesh=mesh,
+            validate=validate,
             slot_cache=None,  # lazily rebuilt from the live table
             n_edges_ub=int(z["n_edges"]),
         )

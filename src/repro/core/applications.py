@@ -1,5 +1,5 @@
-"""Applications of maintained core numbers inside the framework
-(DESIGN §4): k-core sparsification for full-batch GNN training and
+"""Applications of maintained core numbers inside the framework:
+k-core sparsification for full-batch GNN training and
 core-ordered neighbor-sampling priorities for minibatch training.
 
 Both consume the LIVE maintained state (no recomputation) — the point of

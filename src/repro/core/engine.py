@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from . import graph_ops as G
-from .insert import promotion_fixpoint, write_edge_slots
+from .insert import promotion_fixpoint
 from .order import maybe_renumber
 from .remove import removal_fixpoint
 
@@ -60,6 +60,178 @@ class BatchStats(NamedTuple):
     remove_rounds: Array   # removal fixpoint rounds executed
     n_dropped: Array       # |V*| of the removal phase
     renumbered: Array      # True if the in-program label renumber fired
+
+
+def edge_key(lo: Array, hi: Array, n: int) -> Array:
+    """Canonical int64 key of a normalized (lo <= hi) undirected edge."""
+    return lo.astype(jnp.int64) * jnp.int64(n) + hi.astype(jnp.int64)
+
+
+def table_lookup(src: Array, dst: Array, valid: Array, n: int):
+    """One sorted int64-key view of a slot table, shared by removal slot
+    lookup and insert membership: O(C log C) to build, O(B log C) per
+    query batch instead of the naive O(B * C) broadcast compare.
+
+    Returns ``lookup(qkey) -> (found, slot)`` over the given table arrays
+    (global slots for the unified engine; shard-local slots when called on
+    a shard_map-local shard). Tombstones carry a sentinel key that sorts
+    past every real key, so they can never be found.
+    """
+    capacity = src.shape[0]
+    big = jnp.int64(1) << 62  # sentinel: tombstones sort past every real key
+    tlo = jnp.minimum(src, dst)
+    thi = jnp.maximum(src, dst)
+    tkey = jnp.where(valid, edge_key(tlo, thi, n), big)
+    torder = jnp.argsort(tkey)
+    tsorted = tkey[torder]
+
+    def lookup(qkey):
+        pos = jnp.searchsorted(tsorted, qkey)
+        pos = jnp.minimum(pos, capacity - 1)
+        return tsorted[pos] == qkey, torder[pos]
+
+    return lookup
+
+
+def batch_dedup(ins_u: Array, ins_v: Array, ins_ok: Array, n: int):
+    """Normalize orientation, drop self-loops and in-batch duplicates.
+
+    O(B log B): sort the masked keys and keep one representative per run
+    of equals — batch order is irrelevant since the whole batch commits
+    simultaneously. Returns ``(ilo, ihi, iok, key)``; the key column is
+    reused by the caller's membership test.
+    """
+    big = jnp.int64(1) << 62
+    ilo = jnp.minimum(ins_u, ins_v)
+    ihi = jnp.maximum(ins_u, ins_v)
+    iok = ins_ok & (ilo != ihi)
+    key = edge_key(ilo, ihi, n)
+    ikey = jnp.where(iok, key, big)
+    iperm = jnp.argsort(ikey)
+    isorted = ikey[iperm]
+    first = jnp.concatenate(
+        [jnp.ones((1,), dtype=bool), isorted[1:] != isorted[:-1]]
+    )
+    keep = jnp.zeros_like(iok).at[iperm].set(first)
+    return ilo, ihi, iok & keep, key
+
+
+def batch_program(
+    src: Array,
+    dst: Array,
+    valid: Array,
+    core: Array,
+    label: Array,
+    n_edges: Array,
+    ins_u: Array,
+    ins_v: Array,
+    ins_ok: Array,
+    rm_u: Array,
+    rm_v: Array,
+    rm_ok: Array,
+    n: int,
+    n_levels: int,
+    axis: str | None = None,
+) -> Tuple[Array, Array, Array, Array, Array, Array, BatchStats]:
+    """The ONE mixed-batch program body, shared verbatim by the unified
+    engine (``axis=None``: the table arrays are the global slot table)
+    and the sharded engine (``axis`` = mesh axis: the table arrays are
+    this device's shard_map-local shard, per-vertex state replicated).
+    Sharing the body is what guarantees the engines cannot drift.
+
+    The axis parameter changes exactly three things:
+
+    * ``offset`` — this shard's base in the GLOBAL slot id space (0 when
+      unsharded), used to localize the cumsum-allocated slot ids;
+    * reductions over found-flags / removal masks are completed by a
+      psum (an edge lives in exactly one shard, so the psum of the local
+      verdicts IS the global verdict — no global sort is materialized);
+    * every fixpoint statistic is psum-completed via the fixpoints' own
+      ``axis`` parameter.
+    """
+    capacity = src.shape[0]  # local shard length under shard_map
+    if axis is None:
+        offset = jnp.int32(0)
+    else:
+        offset = jax.lax.axis_index(axis).astype(jnp.int32) * capacity
+
+    def allsum(x):
+        return x if axis is None else jax.lax.psum(x, axis)
+
+    # one sorted view of the (local) table serves BOTH the removal slot
+    # lookup and the insert membership test
+    lookup = table_lookup(src, dst, valid, n)
+
+    # ---- 1. removals: vectorized slot lookup + tombstoning ---------------
+    rlo = jnp.minimum(rm_u, rm_v)
+    rhi = jnp.maximum(rm_u, rm_v)
+    rm_ok = rm_ok & (rlo != rhi)
+    rfound, rslot = lookup(edge_key(rlo, rhi, n))
+    found = rfound & rm_ok
+    # commutative scatter-max: not-found rows are no-ops; each device
+    # tombstones only its own slots
+    rm_mask = jnp.zeros(capacity, dtype=bool).at[rslot].max(found)
+    valid = valid & ~rm_mask
+    n_removed = allsum(jnp.sum(rm_mask, dtype=jnp.int32))
+
+    core_pre_rm = core
+    core, label, rm_rounds, hi, dout_same = removal_fixpoint(
+        src, dst, valid, core, label, n, n_levels, axis=axis
+    )
+    n_dropped = jnp.sum(core != core_pre_rm, dtype=jnp.int32)
+
+    # ---- 2. insert dedup + membership against the post-removal table ----
+    ilo, ihi, iok, key = batch_dedup(ins_u, ins_v, ins_ok, n)
+    # membership against the POST-removal table: the sorted view predates
+    # the tombstoning, so mask out slots removed in step 1 — this is what
+    # lets an edge removed and re-inserted in the same batch round-trip
+    ifound, islot_hit = lookup(key)
+    exists = allsum((ifound & ~rm_mask[islot_hit]).astype(jnp.int32)) > 0
+    iok = iok & ~exists
+
+    # ---- 3. batch slot allocation: the cumsum assigns GLOBAL slot ids;
+    # each device writes the ids landing in its shard range and drops the
+    # rest (masked lanes included) via out-of-bounds scatter semantics
+    gslot = n_edges + jnp.cumsum(iok.astype(jnp.int32), dtype=jnp.int32) - 1
+    mine = iok & (gslot >= offset) & (gslot < offset + capacity)
+    lpos = jnp.where(mine, gslot - offset, capacity)  # OOB -> dropped
+    src = src.at[lpos].set(ilo.astype(src.dtype), mode="drop")
+    dst = dst.at[lpos].set(ihi.astype(dst.dtype), mode="drop")
+    valid = valid.at[lpos].set(True, mode="drop")
+    n_inserted = jnp.sum(iok, dtype=jnp.int32)
+    n_edges = n_edges + n_inserted
+
+    # O(batch) delta keeps the shared (hi, dout_same) statistics exact for
+    # the table with the new edges — same per-edge predicate as the full
+    # passes (graph_ops.hi_dout_indicators); the batch is replicated under
+    # sharding, so the delta needs no collective
+    hi_u, hi_v, do_u, do_v = G.hi_dout_indicators(core, label, ilo, ihi, iok)
+    hi = hi.at[ilo].add(hi_u.astype(jnp.int32))
+    hi = hi.at[ihi].add(hi_v.astype(jnp.int32))
+    dout_same = dout_same.at[ilo].add(do_u.astype(jnp.int32))
+    dout_same = dout_same.at[ihi].add(do_v.astype(jnp.int32))
+
+    core_pre_ins = core
+    core, label, ins_rounds, v_plus = promotion_fixpoint(
+        src, dst, valid, core, label, ilo, ihi, iok,
+        hi, dout_same, n, n_levels, axis=axis,
+    )
+    n_promoted = jnp.sum(core != core_pre_ins, dtype=jnp.int32)
+
+    # ---- 4. in-program renumber gate (no host sync) ----------------------
+    label, renumbered = maybe_renumber(core, label)
+
+    stats = BatchStats(
+        n_inserted=n_inserted,
+        n_removed=n_removed,
+        insert_rounds=ins_rounds,
+        n_promoted=n_promoted,
+        v_plus=jnp.sum(v_plus, dtype=jnp.int32),
+        remove_rounds=rm_rounds,
+        n_dropped=n_dropped,
+        renumbered=renumbered,
+    )
+    return src, dst, valid, core, label, n_edges, stats
 
 
 @partial(
@@ -90,117 +262,21 @@ def apply_batch(
     ``ins_*``/``rm_*`` are padded edge lists masked by their ``_ok``
     flags; orientation is normalized on device. ``active_cap`` is the
     host's (sync-free) power-of-two bound on the slot high-water mark
-    incl. this batch: every edge pass below runs over ``active_cap``
-    slots instead of the full over-provisioned capacity, so per-batch
-    device work scales with the live graph, not with headroom. Returns
-    ``(src, dst, valid, core, label, n_edges, stats)``.
+    incl. this batch: every edge pass in the program body runs over
+    ``active_cap`` slots instead of the full over-provisioned capacity,
+    so per-batch device work scales with the live graph, not with
+    headroom. Returns ``(src, dst, valid, core, label, n_edges, stats)``.
     """
     full_src, full_dst, full_valid = src, dst, valid
-    src = src[:active_cap]
-    dst = dst[:active_cap]
-    valid = valid[:active_cap]
-    capacity = src.shape[0]
-    tlo = jnp.minimum(src, dst)
-    thi = jnp.maximum(src, dst)
-
-    # one sorted view of the live table serves BOTH the removal slot lookup
-    # and the insert membership test: O(C log C + B log C) instead of the
-    # naive O(B * C) broadcast compare
-    big = jnp.int64(1) << 62  # sentinel: tombstones sort past every real key
-    tkey = jnp.where(
-        valid, tlo.astype(jnp.int64) * jnp.int64(n) + thi.astype(jnp.int64),
-        big,
+    src, dst, valid, core, label, n_edges, stats = batch_program(
+        src[:active_cap], dst[:active_cap], valid[:active_cap],
+        core, label, n_edges,
+        ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok,
+        n, n_levels,
     )
-    torder = jnp.argsort(tkey)
-    tsorted = tkey[torder]
-
-    def lookup(qkey):
-        """(found, slot) of each query key in the live table."""
-        pos = jnp.searchsorted(tsorted, qkey)
-        pos = jnp.minimum(pos, capacity - 1)
-        return tsorted[pos] == qkey, torder[pos]
-
-    # ---- 1. removals: vectorized slot lookup + tombstoning ---------------
-    rlo = jnp.minimum(rm_u, rm_v)
-    rhi = jnp.maximum(rm_u, rm_v)
-    rm_ok = rm_ok & (rlo != rhi)
-    rkey = rlo.astype(jnp.int64) * jnp.int64(n) + rhi.astype(jnp.int64)
-    rfound, rslot = lookup(rkey)
-    found = rfound & rm_ok
-    # commutative scatter-max: not-found rows are no-ops
-    rm_mask = jnp.zeros(capacity, dtype=bool).at[rslot].max(found)
-    valid = valid & ~rm_mask
-    n_removed = jnp.sum(rm_mask, dtype=jnp.int32)
-
-    core_pre_rm = core
-    core, label, rm_rounds, hi, dout_same = removal_fixpoint(
-        src, dst, valid, core, label, n, n_levels
-    )
-    n_dropped = jnp.sum(core != core_pre_rm, dtype=jnp.int32)
-
-    # ---- 2. insert dedup + membership against the post-removal table ----
-    ilo = jnp.minimum(ins_u, ins_v)
-    ihi = jnp.maximum(ins_u, ins_v)
-    iok = ins_ok & (ilo != ihi)
-    key = ilo.astype(jnp.int64) * jnp.int64(n) + ihi.astype(jnp.int64)
-    # in-batch dedup, O(B log B): sort the (masked) keys and keep one
-    # representative per run of equals — batch order is irrelevant since
-    # the whole batch commits simultaneously
-    ikey = jnp.where(iok, key, big)
-    iperm = jnp.argsort(ikey)
-    isorted = ikey[iperm]
-    first = jnp.concatenate(
-        [jnp.ones((1,), dtype=bool), isorted[1:] != isorted[:-1]]
-    )
-    keep = jnp.zeros_like(iok).at[iperm].set(first)
-    iok = iok & keep
-    # membership against the POST-removal table: the sorted view predates
-    # the tombstoning, so mask out slots removed in step 1 — this is what
-    # lets an edge removed and re-inserted in the same batch round-trip
-    ifound, islot_hit = lookup(key)
-    exists = ifound & ~rm_mask[islot_hit]
-    iok = iok & ~exists
-
-    # ---- 3. batch slot allocation via cumsum + table writes --------------
-    n_edges0 = n_edges
-    src, dst, valid, n_edges = write_edge_slots(
-        src, dst, valid, n_edges, ilo, ihi, iok
-    )
-    n_inserted = n_edges - n_edges0
-
-    # O(batch) delta keeps the shared (hi, dout_same) statistics exact for
-    # the table with the new edges — same per-edge predicate as the full
-    # passes (graph_ops.hi_dout_indicators)
-    hi_u, hi_v, do_u, do_v = G.hi_dout_indicators(core, label, ilo, ihi, iok)
-    hi = hi.at[ilo].add(hi_u.astype(jnp.int32))
-    hi = hi.at[ihi].add(hi_v.astype(jnp.int32))
-    dout_same = dout_same.at[ilo].add(do_u.astype(jnp.int32))
-    dout_same = dout_same.at[ihi].add(do_v.astype(jnp.int32))
-
-    core_pre_ins = core
-    core, label, ins_rounds, v_plus = promotion_fixpoint(
-        src, dst, valid, core, label, ilo, ihi, iok,
-        hi, dout_same, n, n_levels,
-    )
-    n_promoted = jnp.sum(core != core_pre_ins, dtype=jnp.int32)
-
-    # ---- 4. in-program renumber gate (no host sync) ----------------------
-    label, renumbered = maybe_renumber(core, label)
-
     # splice the active region back into the full-capacity buffers (the
     # inactive tail is untouched: all-invalid headroom)
     src = jnp.concatenate([src, full_src[active_cap:]])
     dst = jnp.concatenate([dst, full_dst[active_cap:]])
     valid = jnp.concatenate([valid, full_valid[active_cap:]])
-
-    stats = BatchStats(
-        n_inserted=n_inserted,
-        n_removed=n_removed,
-        insert_rounds=ins_rounds,
-        n_promoted=n_promoted,
-        v_plus=jnp.sum(v_plus, dtype=jnp.int32),
-        remove_rounds=rm_rounds,
-        n_dropped=n_dropped,
-        renumbered=renumbered,
-    )
     return src, dst, valid, core, label, n_edges, stats

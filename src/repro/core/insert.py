@@ -79,6 +79,7 @@ def promotion_fixpoint(
     dout_same: Array,
     n: int,
     n_levels: int,
+    axis: str | None = None,
 ) -> Tuple[Array, Array, Array, Array]:
     """Promotion rounds for pending edges already written into the table.
 
@@ -87,6 +88,12 @@ def promotion_fixpoint(
     commit, so the caller-provided pair is consumed exactly once. This is
     how the unified engine shares one statistics pass between the removal
     fixpoint and the first promotion round.
+
+    With ``axis`` the table arrays are shard_map-local edge shards and all
+    neighborhood statistics are psum-completed over that mesh axis; the
+    pending-edge arrays (``new_src``/``new_dst``/``new_ok``) and all
+    per-vertex state stay replicated, so the seed scatter and the label
+    placement need no collective.
 
     Returns ``(core, label, rounds, v_plus_mask)``.
     """
@@ -111,11 +118,11 @@ def promotion_fixpoint(
         seed = seed | promoted_prev
 
         reach, passing = _forward_reach(
-            src, dst, valid, core, label, seed, hi, dout_same, n
+            src, dst, valid, core, label, seed, hi, dout_same, n, axis
         )
         cand0 = reach & passing
         cand, evict_round = _evict_fixpoint(
-            src, dst, valid, core, cand0, hi, n
+            src, dst, valid, core, cand0, hi, n, axis
         )
 
         new_core = core + cand.astype(jnp.int32)
@@ -129,7 +136,7 @@ def promotion_fixpoint(
                             n_levels=n_levels, round_key=evict_round)
         # fused (hi, dout_same) for the NEXT round — one scatter-add (C1)
         new_hi, new_dout = G.hi_and_dout_same(
-            src, dst, valid, new_core, label, n
+            src, dst, valid, new_core, label, n, axis
         )
         # Continue only while the k-order certificate is violated somewhere:
         # the passing-set fixpoint bootstraps from ``hi + dout_same > core``
@@ -168,6 +175,7 @@ def _forward_reach(
     hi: Array,
     dout_same: Array,
     n: int,
+    axis: str | None = None,
 ) -> Tuple[Array, Array]:
     """Monotone fixpoint of gated forward expansion.
 
@@ -183,7 +191,8 @@ def _forward_reach(
         reach, passing, _ = state
         rp = reach & passing
         # one fused scatter per wave: din and frontier growth (C1)
-        din, grow = G.din_and_expand(src, dst, valid, core, label, rp, n)
+        din, grow = G.din_and_expand(src, dst, valid, core, label, rp, n,
+                                     axis)
         new_passing = (hi + dout_same + din) > core
         new_reach = reach | grow
         changed = jnp.any(new_reach != reach) | jnp.any(new_passing != passing)
@@ -204,6 +213,7 @@ def _evict_fixpoint(
     cand: Array,
     hi: Array,
     n: int,
+    axis: str | None = None,
 ) -> Tuple[Array, Array]:
     """Greatest fixpoint of the candidate support test (sound + complete
     for any starting superset of V*).
@@ -218,7 +228,8 @@ def _evict_fixpoint(
 
     def body(state):
         cand, evict_round, rnd, _ = state
-        support = hi + G.count_same_level_in(src, dst, valid, core, cand, n)
+        support = hi + G.count_same_level_in(src, dst, valid, core, cand, n,
+                                             axis)
         new_cand = cand & (support > core)
         newly_evicted = cand & ~new_cand
         evict_round = jnp.where(newly_evicted, rnd, evict_round)

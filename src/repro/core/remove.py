@@ -52,6 +52,7 @@ def removal_fixpoint(
     n: int,
     n_levels: int,
     share_stats: bool = True,
+    axis: str | None = None,
 ) -> Tuple[Array, Array, Array, Array, Array]:
     """Run the decrease-only mcd fixpoint on an already-tombstoned table.
 
@@ -62,6 +63,11 @@ def removal_fixpoint(
     untouched) — the unified engine seeds its promotion phase from them
     for free. Removal-only callers pass ``share_stats=False`` to scatter
     just the 1-column mcd (the returned hi/dout_same stay zero).
+
+    With ``axis`` the edge arrays are shard_map-local shards of the slot
+    table and every statistic is completed by a psum over that mesh axis;
+    core/label are replicated, so all devices run the loop in lockstep on
+    identical (replicated) per-vertex state.
     """
 
     def cond(state):
@@ -71,10 +77,10 @@ def removal_fixpoint(
         core, label, _, rounds, hi, dout_same = state
         if share_stats:
             mcd, hi, dout_same = G.mcd_hi_dout(
-                src, dst, valid, core, label, n
+                src, dst, valid, core, label, n, axis
             )
         else:
-            mcd = G.count_ge(src, dst, valid, core, n)
+            mcd = G.count_ge(src, dst, valid, core, n, axis)
         drop = (mcd < core) & (core > 0)
         new_core = core - drop.astype(jnp.int32)
         # place this round's droppers at the tail of their new level

@@ -7,6 +7,21 @@ statistic becomes  local segment_sum over the device's edge shard + one
 ``psum``. The fixpoint loops are unchanged — bulk-synchronous rounds are
 mesh-agnostic, which is exactly why the reformulation scales to pods.
 
+``make_sharded_apply`` is the full order-based maintenance engine behind
+``CoreMaintainer(engine="sharded")``: the exact ``engine.apply_batch``
+program (dedup, slot lookup, removal fixpoint, promotion rounds,
+place_block label assignment, renumber gate) with the slot table sharded
+across the mesh and every per-vertex statistic completed by one psum
+(docs/DESIGN.md §4). It wraps ``engine.batch_program`` — the unified
+engine's program body, not a copy — in a ``shard_map``, with the body's
+``axis`` parameter (threaded down into the remove.py / insert.py
+fixpoints) supplying the psums, so unified and sharded engines cannot
+drift algorithmically.
+
+The older core-only kernels (``make_sharded_remove`` /
+``make_sharded_insert_round``) are kept as minimal building blocks for
+experiments that maintain core numbers without k-order labels.
+
 For 1000+-node deployments the vertex state would be range-sharded too
 (psum -> reduce_scatter over vertex ranges + all_gather of the frontier
 bitmask); that variant is exercised by the dry-run configs in
@@ -22,8 +37,61 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
+from .engine import batch_program
 
 Array = jax.Array
+
+
+def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
+                       axis: str = "data"):
+    """Build the jitted sharded mixed-batch engine over ``mesh``.
+
+    The returned function has the same signature and semantics as
+    ``engine.apply_batch`` minus the ``n``/``n_levels``/``active_cap``
+    statics: ``(src, dst, valid, core, label, n_edges, ins_u, ins_v,
+    ins_ok, rm_u, rm_v, rm_ok) -> (src, dst, valid, core, label, n_edges,
+    stats)``. ``src``/``dst``/``valid`` must be sharded along ``axis``
+    (capacity divisible by the axis size); everything else is replicated.
+
+    Division of labor inside the kernel (docs/DESIGN.md §4):
+
+    * slot lookup — each device searches its LOCAL sorted shard; an edge
+      lives in exactly one shard, so one psum of the found flags yields
+      the global membership/removal verdict without materializing a
+      global sort;
+    * tombstoning — each device masks only its own slots (no cross-device
+      slot indices ever exist);
+    * slot allocation — the batch cumsum (replicated) assigns GLOBAL slot
+      ids; each device writes the ids that land in its shard range and
+      drops the rest via out-of-bounds scatter semantics;
+    * fixpoints — the shared removal/promotion loops with ``axis=…``:
+      local scatter-adds + one psum per round, per-vertex state
+      replicated, so every device runs the loop in lockstep;
+    * labels/renumber — pure vertex-state (replicated) computation.
+    """
+    def _kernel(src, dst, valid, core, label, n_edges,
+                ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok):
+        # the UNIFIED engine's program body, verbatim, over this device's
+        # local shard: its axis parameter turns every table reduction and
+        # fixpoint statistic into local-scatter + psum (engine.py)
+        return batch_program(
+            src, dst, valid, core, label, n_edges,
+            ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok,
+            n, n_levels, axis=axis,
+        )
+
+    shardmapped = shard_map(
+        _kernel,
+        mesh=mesh,
+        in_specs=(
+            P(axis), P(axis), P(axis),          # src, dst, valid
+            P(), P(), P(),                      # core, label, n_edges
+            P(), P(), P(), P(), P(), P(),       # batch (replicated)
+        ),
+        out_specs=(P(axis), P(axis), P(axis), P(), P(), P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(shardmapped, donate_argnums=(0, 1, 2, 3, 4, 5))
 
 
 def _seg_psum(data: Array, ids: Array, n: int, axis: str) -> Array:

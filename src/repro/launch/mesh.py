@@ -19,6 +19,15 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def make_edge_mesh(n_devices=None, axis: str = "data"):
+    """1-D mesh over the local devices for edge-slot sharding — the mesh
+    shape ``CoreMaintainer(engine="sharded")`` consumes by default. On a
+    production slice this is the flattened ``data`` axis of
+    ``make_production_mesh``."""
+    ndev = n_devices or len(jax.devices())
+    return jax.make_mesh((ndev,), (axis,))
+
+
 HW = {
     "name": "TPU v5e",
     "peak_flops_bf16": 197e12,     # per chip

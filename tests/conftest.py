@@ -1,0 +1,16 @@
+"""Shared test helpers (importable from any test module via
+``from conftest import ...`` under pytest's prepend import mode)."""
+import numpy as np
+
+
+def sample_absent(cur, rng, k):
+    """k distinct normalized edges absent from CSRGraph ``cur`` (no
+    self-loops), by rejection sampling."""
+    batch = []
+    while len(batch) < k:
+        u, v = rng.integers(0, cur.n, size=2)
+        key = (int(min(u, v)), int(max(u, v)))
+        if u == v or cur.has_edge(*key) or key in batch:
+            continue
+        batch.append(key)
+    return np.asarray(batch, dtype=np.int64)

@@ -1,0 +1,163 @@
+"""engine="sharded": the full mixed-batch program with the edge-slot
+table sharded over the mesh's data axis. On the single-device test
+session the mesh has one shard — the same code path as multi-device, with
+the psums degenerate; the slow subprocess test below re-runs parity on 8
+forced host devices where the slot table genuinely spans shards."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from conftest import sample_absent as _sample_absent
+
+from repro.core.api import CoreMaintainer
+from repro.core.oracle import bz_from_csr
+from repro.graph.csr import add_edges_csr, build_csr, remove_edges_csr
+from repro.graph.generators import erdos_renyi
+from repro.graph.stream import mixed_stream
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_sharded_mixed_batches_match_bz(seed):
+    """Oracle-checked fuzz: one sharded apply_batch per mixed event == BZ
+    from scratch, including dup/self-loop batches and tight-capacity
+    churn through _compact/_grow."""
+    rng = np.random.default_rng(seed + 40)
+    n = 70
+    g = erdos_renyi(n, 260, seed=seed)
+    m = CoreMaintainer.from_graph(
+        g, capacity=int(g.m * 1.5) + 8, engine="sharded"
+    )
+    cur = g
+    for step in range(5):
+        ins = _sample_absent(cur, rng, 6)
+        edges = cur.edge_array()
+        take = rng.choice(edges.shape[0], size=6, replace=False)
+        rm = edges[take]
+        # adversarial garnish: self-loop + in-batch duplicate + dup of a
+        # live edge, all of which must be masked on device
+        garnish = np.asarray([[3, 3], list(ins[0]), list(edges[0])])
+        m.apply_batch(
+            insert_edges=np.concatenate([ins, garnish]), remove_edges=rm
+        )
+        cur = add_edges_csr(remove_edges_csr(cur, rm), ins)
+        np.testing.assert_array_equal(m.cores(), bz_from_csr(cur))
+    assert m.live_edges == cur.m
+
+
+def test_sharded_agrees_with_unified_on_stream():
+    """Cores AND k-order labels identical to the unified engine on the
+    same mixed stream (all statistics are exact integers, so the two
+    engines are bit-identical, not just equivalent)."""
+    g = erdos_renyi(70, 280, seed=8)
+    mu = CoreMaintainer.from_graph(g, capacity=2048, engine="unified")
+    ms = CoreMaintainer.from_graph(g, capacity=2048, engine="sharded")
+    for ev in mixed_stream(g, 6, 12, seed=4):
+        su = mu.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+        ss = ms.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+        np.testing.assert_array_equal(mu.cores(), ms.cores())
+        np.testing.assert_array_equal(mu.labels(), ms.labels())
+        assert int(su.n_inserted) == int(ss.n_inserted)
+        assert int(su.n_removed) == int(ss.n_removed)
+    assert mu.live_edges == ms.live_edges
+    assert mu.edge_slot == ms.edge_slot
+
+
+def test_sharded_remove_and_reinsert_same_batch():
+    g = erdos_renyi(50, 180, seed=3)
+    m = CoreMaintainer.from_graph(g, capacity=1024, engine="sharded")
+    before = m.cores().copy()
+    e = g.edge_array()[:4]
+    st = m.apply_batch(insert_edges=e, remove_edges=e)
+    assert int(st.n_removed) == 4
+    assert int(st.n_inserted) == 4
+    np.testing.assert_array_equal(m.cores(), before)
+    for a, b in e:
+        assert (int(a), int(b)) in m.edge_slot
+
+
+def test_sharded_save_load_roundtrip(tmp_path):
+    """save() on sharded reloads under any engine (and back) with the
+    same state and identical continuation."""
+    g = erdos_renyi(50, 150, seed=0)
+    m = CoreMaintainer.from_graph(g, capacity=1024, engine="sharded")
+    ev = next(mixed_stream(g, 1, 20, seed=2))
+    m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+    p = str(tmp_path / "state.npz")
+    m.save(p)
+    m2 = CoreMaintainer.load(p, engine="sharded")
+    m3 = CoreMaintainer.load(p, engine="unified")
+    assert m2.edge_slot == m.edge_slot == m3.edge_slot
+    ins = _sample_absent(
+        build_csr(m.n, np.asarray(sorted(m.edge_slot))),
+        np.random.default_rng(1), 5,
+    )
+    for mm in (m, m2, m3):
+        mm.apply_batch(insert_edges=ins)
+    np.testing.assert_array_equal(m.cores(), m2.cores())
+    np.testing.assert_array_equal(m.cores(), m3.cores())
+    np.testing.assert_array_equal(m.labels(), m2.labels())
+
+
+_PARITY_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+
+    import repro  # enables x64
+    from repro.core.api import CoreMaintainer
+    from repro.core.oracle import bz_from_csr
+    from repro.graph.csr import build_csr
+    from repro.graph.generators import erdos_renyi
+    from repro.graph.stream import mixed_stream
+
+    assert len(jax.devices()) == 8, jax.devices()
+    g = erdos_renyi(80, 320, seed=1)
+    # tight capacity: live slots span every shard and churn crosses
+    # shard boundaries; odd capacity also exercises the divisibility pad
+    mu = CoreMaintainer.from_graph(g, capacity=645, engine="unified")
+    ms = CoreMaintainer.from_graph(g, capacity=645, engine="sharded")
+    assert ms.capacity % 8 == 0, ms.capacity
+    live = {tuple(e) for e in g.edge_array().tolist()}
+    for ev in mixed_stream(g, 8, 24, seed=3):
+        mu.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+        ms.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+        live.difference_update(map(tuple, ev.removals.tolist()))
+        live.update(map(tuple, ev.edges.tolist()))
+        cur = build_csr(g.n, np.asarray(sorted(live), dtype=np.int64))
+        np.testing.assert_array_equal(ms.cores(), bz_from_csr(cur))
+        np.testing.assert_array_equal(ms.cores(), mu.cores())
+        np.testing.assert_array_equal(ms.labels(), mu.labels())
+    assert ms.live_edges == mu.live_edges == len(live)
+    # masked invalid edges are dropped identically under sharding
+    ms.validate = False
+    st = ms.apply_batch(insert_edges=[[5, 9999], [-1, 3]])
+    assert int(st.n_inserted) == 0
+    print("sharded-parity-8dev OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_engine_parity_8dev(tmp_path):
+    """Multi-process parity: the sharded engine on 8 forced host devices
+    tracks BZ and the unified engine exactly (cores and labels)."""
+    script = tmp_path / "parity.py"
+    script.write_text(_PARITY_SCRIPT)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    out = subprocess.run(
+        [sys.executable, str(script)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "sharded-parity-8dev OK" in out.stdout

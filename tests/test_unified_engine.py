@@ -3,6 +3,7 @@ dedup semantics, same-batch remove+re-insert, slot-table mirror, and the
 in-program renumber gate."""
 import numpy as np
 import pytest
+from conftest import sample_absent as _sample_absent
 
 import jax.numpy as jnp
 
@@ -12,17 +13,6 @@ from repro.core.order import LABEL_GAP, needs_renumber
 from repro.graph.csr import add_edges_csr, build_csr, remove_edges_csr
 from repro.graph.generators import erdos_renyi
 from repro.graph.stream import mixed_stream
-
-
-def _sample_absent(cur, rng, k):
-    batch = []
-    while len(batch) < k:
-        u, v = rng.integers(0, cur.n, size=2)
-        key = (int(min(u, v)), int(max(u, v)))
-        if u == v or cur.has_edge(*key) or key in batch:
-            continue
-        batch.append(key)
-    return np.asarray(batch, dtype=np.int64)
 
 
 def _certificate_violations(m: CoreMaintainer) -> np.ndarray:
