@@ -32,7 +32,12 @@ from repro.core.oracle import OrderCoreMaintainer, TraversalCoreMaintainer
 from repro.graph.generators import erdos_renyi
 from repro.graph.stream import mixed_stream
 
-from .workloads import paper_graphs, sample_insertions, sample_removals
+from .workloads import (
+    churn_workload,
+    paper_graphs,
+    sample_insertions,
+    sample_removals,
+)
 
 Row = Dict[str, object]
 
@@ -344,6 +349,101 @@ def sharded_device_scaling(
             )
         rows.append(json.loads(out.stdout.strip().splitlines()[-1]))
     return rows
+
+
+CHURN_ENGINES = ("host", "unified", "sharded")
+
+
+def churn_bench(
+    n: int = 1500,
+    m: int = 6000,
+    n_batches: int = 30,
+    batch_size: int = 128,
+    warmup: int = 3,
+    capacity_mult: float = 1.2,
+    out_json: str = "BENCH_stream.json",
+    engines: Sequence[str] = CHURN_ENGINES,
+) -> Dict[str, object]:
+    """Steady-state churn throughput: in-program slot recycling ON (the
+    device engines' free-list allocator) vs OFF (the host engine, whose
+    tombstones are only reclaimed by host-side ``_compact``) on the SAME
+    balanced 50/50 stream over a deliberately tight table
+    (``capacity_mult * m``): the host path is forced through periodic
+    compaction syncs while the device engines absorb every batch
+    in-program. Reports batches/sec, reclaimed slots, defrag counts and
+    final capacity per engine, and merges a ``churn`` section into
+    ``out_json`` (alongside ``stream_bench``'s sections).
+    """
+    g, events = churn_workload(n, m, n_batches + warmup, batch_size)
+    capacity = int(capacity_mult * g.m) + 64
+    per_engine: Dict[str, Dict[str, float]] = {}
+    finals = {}
+    orig_defrag = CoreMaintainer._defrag_to
+    for engine in engines:
+        mt = CoreMaintainer.from_graph(g, capacity=capacity, engine=engine)
+        defrags = [0]
+
+        def counting(self, new_cap, _d=defrags):
+            _d[0] += 1
+            return orig_defrag(self, new_cap)
+
+        stats = []
+        try:
+            CoreMaintainer._defrag_to = counting
+            for ev in events[:warmup]:
+                mt.apply_batch(insert_edges=ev.edges,
+                               remove_edges=ev.removals)
+            mt.core.block_until_ready()
+            defrags[0] = 0
+            cap0 = mt.capacity
+            t0 = time.perf_counter()
+            for ev in events[warmup:]:
+                # stats are device scalars — collecting them is free; the
+                # int() reads happen after the timed region
+                stats.append(
+                    mt.apply_batch(insert_edges=ev.edges,
+                                   remove_edges=ev.removals)
+                )
+            mt.core.block_until_ready()
+            dt = time.perf_counter() - t0
+        finally:
+            CoreMaintainer._defrag_to = orig_defrag
+        per_engine[engine] = {
+            "seconds": dt,
+            "batches_per_s": n_batches / dt,
+            "recycled_slots": int(sum(int(s.n_recycled) for s in stats)),
+            "host_defrags": defrags[0],
+            "capacity_start": cap0,
+            "capacity_final": mt.capacity,
+            "high_water_final": int(stats[-1].high_water),
+        }
+        finals[engine] = mt.cores()
+    agree = all(
+        bool((finals[e] == finals[engines[0]]).all()) for e in engines
+    )
+    result: Dict[str, object] = {
+        "graph": {"n": n, "m": g.m},
+        "n_batches": n_batches,
+        "batch_size": batch_size,
+        "capacity": capacity,
+        "engines_agree": agree,
+    }
+    result.update(per_engine)
+    if "host" in per_engine and "unified" in per_engine:
+        result["speedup_unified_vs_host"] = (
+            per_engine["host"]["seconds"]
+            / per_engine["unified"]["seconds"]
+        )
+    if out_json:
+        blob = {}
+        if os.path.exists(out_json):
+            with open(out_json) as fh:
+                blob = json.load(fh)
+        blob["churn"] = result
+        with open(out_json, "w") as fh:
+            json.dump(blob, fh, indent=2)
+    assert agree, "engines diverged on the churn stream"
+    return result
 
 
 def rounds_depth(batch: int = 512) -> List[Row]:

@@ -110,6 +110,33 @@ def main() -> None:
             f"batches_per_s={row['batches_per_s']:.2f}",
         )
 
+    # steady-state churn on a tight table: in-program slot recycling
+    # (device engines) vs host-side _compact reclaim (appends the
+    # "churn" section to the BENCH_stream.json artifact)
+    cb = cm.churn_bench(
+        n_batches=10 if args.quick else 30,
+        batch_size=64 if args.quick else 128,
+        out_json=args.stream_json,
+    )
+    for eng in cm.CHURN_ENGINES:
+        r = cb[eng]
+        _emit(
+            f"churn/{eng}",
+            1e6 * r["seconds"] / cb["n_batches"],
+            (
+                f"batches_per_s={r['batches_per_s']:.2f};"
+                f"recycled={r['recycled_slots']};"
+                f"defrags={r['host_defrags']};"
+                f"cap={r['capacity_start']}->{r['capacity_final']}"
+            ),
+        )
+    _emit(
+        "churn/speedup",
+        0.0,
+        f"unified_vs_host={cb['speedup_unified_vs_host']:.2f}x;"
+        f"agree={cb['engines_agree']}",
+    )
+
     # roofline table (from the dry-run artifact, if present)
     if os.path.exists(args.roofline_json):
         with open(args.roofline_json) as fh:

@@ -14,6 +14,31 @@ import numpy as np
 
 from repro.graph.csr import CSRGraph
 from repro.graph.generators import barabasi_albert, erdos_renyi, rmat
+from repro.graph.stream import churn_stream
+
+
+def churn_workload(
+    n: int = 1500,
+    m: int = 6000,
+    n_batches: int = 30,
+    batch_size: int = 128,
+    seed: int = 23,
+):
+    """Steady-state churn: balanced 50/50 insert/remove batches with
+    heavy just-removed re-insertion (graph/stream.py::churn_stream) —
+    the workload where the device engines' in-program slot recycling
+    pays and the host engine must fall back to ``_compact``. Live edge
+    count is exactly flat, so per-batch work and capacity should be too.
+
+    Returns ``(graph, events)``; every event is a dirty mixed
+    ``EdgeEvent`` (duplicates/self-loops/absent removals included, as a
+    production stream would carry).
+    """
+    g = erdos_renyi(n, m, seed=seed)
+    events = list(
+        churn_stream(g, n_batches, batch_size, p_reinsert=0.6, seed=seed)
+    )
+    return g, events
 
 
 def paper_graphs(scale: float = 1.0) -> Dict[str, CSRGraph]:

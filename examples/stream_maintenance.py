@@ -74,7 +74,9 @@ def main():
                                remove_edges=ev.removals)
             extra = (f"+{int(st.n_inserted)}/-{int(st.n_removed)} "
                      f"|V*|={int(st.n_promoted) + int(st.n_dropped)} "
-                     f"rounds={int(st.insert_rounds) + int(st.remove_rounds)}")
+                     f"rounds={int(st.insert_rounds) + int(st.remove_rounds)} "
+                     f"recycled={int(st.n_recycled)} "
+                     f"hwm={int(st.high_water)}")
         elif ev.kind == "insert":
             st = m.insert_edges(ev.edges)
             extra = f"|V*|={int(st.n_promoted)} rounds={int(st.rounds)}"

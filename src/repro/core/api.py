@@ -10,8 +10,16 @@ path entirely (see docs/DESIGN.md §3 for the host-sync audit).
 The host keeps only
   * a lazily-rebuilt ``edge -> slot`` mirror for queries (invalidated per
     batch, materialized on first access), and
-  * ``n_edges_ub``, a monotone host-side upper bound on the device slot
-    high-water mark, used for capacity compaction/growth planning.
+  * two sync-free monotone bounds used for capacity planning:
+    ``hwm_ub`` (upper bound on the per-shard slot high-water mark
+    reported exactly by ``stats.high_water``) and ``live_ub`` (upper
+    bound on the live edge count ``n_edges``). The device program
+    recycles tombstoned slots through an in-program free-list
+    (``insert.freelist_alloc``), so under balanced churn the high-water
+    mark — and with it the active window, the per-batch device work, and
+    the capacity — stays flat; the bounds are re-synced from the device
+    only when they cross the capacity threshold, and ``_compact`` is a
+    rare defrag instead of the only reclaim path.
 
 The seed two-program path (host-dict dedup + `insert.insert_batch` /
 `remove.remove_batch`) is preserved under ``engine="host"`` as the
@@ -19,8 +27,9 @@ benchmark baseline and fallback.
 
 ``engine="sharded"`` runs the SAME one-program-per-batch semantics with
 the edge-slot table sharded across a mesh's ``data`` axis
-(core/sharded.py, docs/DESIGN.md §4): per-device work scales as
-capacity / n_devices, vertex state is replicated, and each statistic
+(core/sharded.py, docs/DESIGN.md §4): per-device work is bounded by the
+densest shard's high-water window (not full capacity / n_devices —
+docs/DESIGN.md §4.1), vertex state is replicated, and each statistic
 costs one psum.
 
 Batches are padded to power-of-two sizes so the jit cache stays small.
@@ -110,16 +119,33 @@ class CoreMaintainer:
     last_remove_stats: Optional[RemoveStats] = None
     last_batch_stats: Optional[BatchStats] = None
     slot_cache: Optional[Dict[Tuple[int, int], int]] = None
-    n_edges_ub: int = 0         # host upper bound on int(n_edges)
+    live_ub: int = -1           # upper bound on live edges (-1: from valid)
+    hwm_ub: int = -1            # upper bound on the per-shard slot
+    #                             high-water mark (-1: compute from valid)
+    _last_window: int = dataclasses.field(default=0, repr=False)
     host_renumbered: bool = False  # last host-path call triggered a renumber
-    _sharded_fn: Optional[Callable] = dataclasses.field(
-        default=None, repr=False
+    _sharded_fns: Dict[int, Callable] = dataclasses.field(
+        default_factory=dict, repr=False
     )
 
     def __post_init__(self) -> None:
         if self.engine not in _ENGINES:
             raise ValueError(f"unknown engine {self.engine!r}")
         _require_x64()
+        if self.live_ub < 0 or self.hwm_ub < 0:
+            # exact initial bounds from the slot table (construction is
+            # the one host-side moment where a sync is free): the global
+            # high-water mark upper-bounds every shard's local one
+            val = np.asarray(self.valid)
+            idx = np.nonzero(val)[0]
+            self.live_ub = int(idx.shape[0])
+            self.hwm_ub = int(idx[-1]) + 1 if idx.size else 0
+        if self.engine == "host":
+            # the host path bump-allocates from n_edges: it must cover the
+            # high-water mark (device-engine saves store the live count)
+            ne = int(self.n_edges)
+            if ne < self.hwm_ub:
+                self.n_edges = jnp.asarray(self.hwm_ub, dtype=jnp.int32)
         if self.engine == "sharded":
             if self.mesh is None:
                 self.mesh = _default_edge_mesh()
@@ -128,13 +154,14 @@ class CoreMaintainer:
                     f"sharded engine needs a {EDGE_AXIS!r} mesh axis; got "
                     f"axes {tuple(self.mesh.axis_names)}"
                 )
-            # pad the slot table up to an even shard split (all-invalid
-            # headroom); save()d states keep working on any device count.
-            # _grow_to places the grown buffers itself, so only place here
-            # when no padding was needed
-            cap0 = self.capacity
-            self._grow_to(self.capacity)
-            if self.capacity == cap0:
+            if self._n_shards > 1:
+                # one re-layout: pad capacity to an even shard split AND
+                # stride the live slots across the shards so the densest
+                # shard's high-water mark (the per-shard window bound)
+                # starts near live / n_shards; save()d states keep
+                # working on any device count
+                self._defrag_to(self.capacity)
+            else:
                 self._place_sharded()
 
     # -- sharded placement ---------------------------------------------------
@@ -155,12 +182,39 @@ class CoreMaintainer:
             jnp.asarray(self.n_edges, dtype=jnp.int32), rep
         )
 
-    def _get_sharded_fn(self) -> Callable:
-        if self._sharded_fn is None:
-            self._sharded_fn = make_sharded_apply(
-                self.mesh, self.n, self.n_levels, axis=EDGE_AXIS
+    def _get_sharded_fn(self, local_active: int) -> Callable:
+        """Jitted sharded program for one per-shard window bucket. The
+        buckets are powers of two (one cache entry per bucket, same jit
+        hygiene as the unified engine's ``active_cap``)."""
+        fn = self._sharded_fns.get(local_active)
+        if fn is None:
+            fn = make_sharded_apply(
+                self.mesh, self.n, self.n_levels, axis=EDGE_AXIS,
+                local_active=local_active,
             )
-        return self._sharded_fn
+            self._sharded_fns[local_active] = fn
+        return fn
+
+    # -- capacity planning ---------------------------------------------------
+    def _window(self, b_ins: int) -> int:
+        """Pow2 bucket of the per-shard active window covering the
+        high-water bound plus this batch, clamped to the shard size."""
+        need = max(16, self.hwm_ub + b_ins + 1)
+        window = 1
+        while window < need:
+            window *= 2
+        return min(window, self._local_cap)
+
+    @property
+    def _n_shards(self) -> int:
+        if self.engine != "sharded":
+            return 1
+        return dict(self.mesh.shape)[EDGE_AXIS]
+
+    @property
+    def _local_cap(self) -> int:
+        """Slots per shard (== capacity off the sharded engine)."""
+        return self.capacity // self._n_shards
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -219,7 +273,8 @@ class CoreMaintainer:
             mesh=mesh,
             validate=validate,
             slot_cache=edge_slot,
-            n_edges_ub=m,
+            live_ub=m,
+            hwm_ub=m,
         )
 
     # -- queries -------------------------------------------------------------
@@ -313,19 +368,19 @@ class CoreMaintainer:
                 remove_rounds=rm_st.rounds,
                 n_dropped=rm_st.n_dropped,
                 renumbered=jnp.bool_(renumbered),
+                n_recycled=jnp.int32(0),  # host path reclaims via _compact
+                high_water=self.n_edges,  # == the host bump pointer
             )
             self.last_batch_stats = stats
             return stats
         b_ins = ins.shape[0]
         if b_ins == 0 and rm.shape[0] == 0:
             z = jnp.int32(0)
-            stats = BatchStats(z, z, z, z, z, z, z, jnp.bool_(False))
+            stats = BatchStats(z, z, z, z, z, z, z, jnp.bool_(False), z,
+                               jnp.int32(self.hwm_ub))
             self.last_batch_stats = stats
             return stats
-        if self.n_edges_ub + b_ins + 1 >= self.capacity:
-            self._compact()
-            if self.n_edges_ub + b_ins + 1 >= self.capacity:
-                self._grow(b_ins)
+        self._ensure_capacity(b_ins)
         iu = _pad_pow2(ins[:, 0], 0)
         iv = _pad_pow2(ins[:, 1], 0)
         iok = np.zeros(len(iu), dtype=bool)
@@ -348,6 +403,21 @@ class CoreMaintainer:
             jnp.asarray(rv),
             jnp.asarray(rok),
         )
+        # static pow2 bound on the per-shard slot high-water mark incl.
+        # this batch: every edge pass runs over this per-shard slot
+        # prefix only, and (because the free-list allocator fills the
+        # lowest holes first) the window always contains >= b_ins free
+        # slots per shard — so the in-program recycler can never run dry
+        window = self._window(b_ins)
+        if 0 < self._last_window < window:
+            # the bucket would grow — but hwm_ub is the conservative
+            # march, not the truth. Refresh the exact device bounds (one
+            # amortized sync) before paying a recompile + wider passes:
+            # under balanced churn the true high-water mark is flat and
+            # the bucket never actually grows
+            self._refresh_bounds()
+            window = self._window(b_ins)
+        self._last_window = window
         with warnings.catch_warnings():
             # donation is declared for accelerator backends; backends
             # without buffer aliasing (CPU) warn and copy instead
@@ -355,18 +425,11 @@ class CoreMaintainer:
                 "ignore", message="Some donated buffers were not usable"
             )
             if self.engine == "sharded":
-                # every edge pass runs over capacity / n_devices slots per
-                # device; no active_cap prefix (slicing would reshard)
-                out = self._get_sharded_fn()(*args)
+                # the per-shard window is sliced INSIDE the shard_map
+                # kernel (slicing the sharded buffer here would reshard)
+                out = self._get_sharded_fn(window)(*args)
             else:
-                # static pow2 bound on the slot high-water mark incl. this
-                # batch: every edge pass runs over this slot prefix only
-                need = max(16, self.n_edges_ub + b_ins + 1)
-                active_cap = 1
-                while active_cap < need:
-                    active_cap *= 2
-                active_cap = min(active_cap, self.capacity)
-                out = apply_batch(*args, self.n, self.n_levels, active_cap)
+                out = apply_batch(*args, self.n, self.n_levels, window)
         (
             self.src,
             self.dst,
@@ -376,8 +439,13 @@ class CoreMaintainer:
             self.n_edges,
             stats,
         ) = out
-        # monotone host bound: the device allocated at most b_ins new slots
-        self.n_edges_ub += b_ins
+        # monotone sync-free bounds: each insert can raise the densest
+        # shard's high-water mark by at most one (holes fill first), and
+        # the live count by at most one; removals only help. The exact
+        # values (stats.high_water / n_edges) are re-read only when
+        # planning crosses the capacity threshold (_refresh_bounds).
+        self.hwm_ub = min(self.hwm_ub + b_ins, self._local_cap)
+        self.live_ub = min(self.live_ub + b_ins, self.capacity)
         self.slot_cache = None
         self.last_batch_stats = stats
         return stats
@@ -454,7 +522,9 @@ class CoreMaintainer:
             self.n,
             self.n_levels,
         )
-        self.n_edges_ub = int(self.n_edges)
+        # on the host path n_edges IS the bump pointer (slot high-water)
+        self.hwm_ub = int(self.n_edges)
+        self.live_ub = self.hwm_ub
         self.host_renumbered = self._maybe_renumber()
         self.last_insert_stats = stats
         return stats
@@ -495,39 +565,97 @@ class CoreMaintainer:
             return True
         return False
 
-    def _compact(self) -> None:
-        """Drop tombstoned slots; preserves core/label state. The one edit
-        path step that syncs — amortized over many batches."""
+    def _refresh_bounds(self) -> None:
+        """Amortized sync point: replace the monotone worst-case planning
+        bounds with the exact values the device already computed —
+        ``stats.high_water`` (per-shard high-water mark) and ``n_edges``
+        (live count). Called only when the conservative bounds cross the
+        capacity threshold; the per-batch edit path stays sync-free.
+        Under balanced churn the exact high-water mark is flat (the
+        free-list recycles every tombstone), so this usually reveals
+        plenty of headroom and no defrag or growth happens at all."""
+        if self.last_batch_stats is not None:
+            self.hwm_ub = int(self.last_batch_stats.high_water)
+        self.live_ub = int(self.n_edges)
+
+    def _ensure_capacity(self, b_ins: int) -> None:
+        """Make the per-shard window able to hold the live slots plus this
+        batch. Escalates: sync-free bound check -> exact-bound refresh
+        (one amortized sync) -> defrag, growing in the same re-layout if
+        even a perfectly packed table would leave no window headroom —
+        so the sharded buffers are placed at most ONCE per call (the old
+        compact-then-grow path placed them twice)."""
+        if self.hwm_ub + b_ins + 1 < self._local_cap:
+            return
+        self._refresh_bounds()
+        if self.hwm_ub + b_ins + 1 < self._local_cap:
+            return
+        nd = self._n_shards
+        new_cap = self.capacity
+        # after a balanced defrag the densest shard holds ceil(live / nd)
+        while -(-self.live_ub // nd) + b_ins + 1 >= new_cap // nd:
+            new_cap = max(new_cap * 2, new_cap + nd * (2 * b_ins + 16))
+        self._defrag_to(new_cap)
+
+    def _defrag_to(self, new_cap: int) -> None:
+        """Repack live slots into a balanced layout at ``new_cap`` total
+        capacity (compact + grow fused: one buffer re-layout, one sharded
+        placement). Live edges are strided across the shards — edge j
+        lands on shard ``j % n_shards`` — so every shard's high-water
+        mark starts at ~``live / n_shards``. Preserves core/label state.
+        Rare: the in-program free-list reclaims tombstones batch-by-batch,
+        so this only runs when the exact bounds genuinely leave no window
+        headroom (large net growth or a lopsided loaded layout)."""
+        nd = self._n_shards
+        new_cap += (-new_cap) % nd
         src = np.asarray(self.src)
         dst = np.asarray(self.dst)
         val = np.asarray(self.valid)
         live = np.nonzero(val)[0]
         m = live.shape[0]
-        new_src = np.zeros(self.capacity, dtype=np.int32)
-        new_dst = np.zeros(self.capacity, dtype=np.int32)
-        new_val = np.zeros(self.capacity, dtype=bool)
-        new_src[:m] = src[live]
-        new_dst[:m] = dst[live]
-        new_val[:m] = True
+        if new_cap <= m:
+            raise ValueError(
+                f"defrag target {new_cap} cannot hold {m} live edges"
+            )
+        local_cap = new_cap // nd
+        j = np.arange(m, dtype=np.int64)
+        tgt = (j % nd) * local_cap + j // nd
+        new_src = np.zeros(new_cap, dtype=np.int32)
+        new_dst = np.zeros(new_cap, dtype=np.int32)
+        new_val = np.zeros(new_cap, dtype=bool)
+        new_src[tgt] = src[live]
+        new_dst[tgt] = dst[live]
+        new_val[tgt] = True
         self.src = jnp.asarray(new_src)
         self.dst = jnp.asarray(new_dst)
         self.valid = jnp.asarray(new_val)
         self.n_edges = jnp.asarray(m, dtype=jnp.int32)
-        self.n_edges_ub = m
+        self.capacity = new_cap
+        self.live_ub = m
+        self.hwm_ub = -(-m // nd) if m else 0
+        self._last_window = 0  # fresh layout: let the next batch re-bucket
         # the mirror is stale either way; let the edge_slot property
         # rebuild it lazily (the unified engine never reads it)
         self.slot_cache = None
         if self.engine == "sharded":
             self._place_sharded()
 
+    def _compact(self) -> None:
+        """Drop tombstoned slots (host-path reclaim; a defrag elsewhere).
+        The one edit-path step that syncs — amortized over many batches."""
+        self._defrag_to(self.capacity)
+
     def _grow(self, need: int) -> None:
         self._grow_to(max(self.capacity * 2, self.capacity + 2 * need + 16))
 
     def _grow_to(self, new_cap: int) -> None:
+        """Extend the slot table with dead headroom — the host-path
+        growth step. The device engines grow through ``_defrag_to``
+        (which also re-strides across shards); delegate so a sharded
+        caller can never produce an unbalanced un-restrided layout."""
         if self.engine == "sharded":
-            # keep the slot table evenly divisible across the mesh
-            ndev = dict(self.mesh.shape)[EDGE_AXIS]
-            new_cap += (-new_cap) % ndev
+            self._defrag_to(new_cap)
+            return
         pad = new_cap - self.capacity
         if pad <= 0:
             return
@@ -542,11 +670,14 @@ class CoreMaintainer:
         self.dst = ext(self.dst, 0)
         self.valid = ext(self.valid, False)
         self.capacity = new_cap
-        if self.engine == "sharded":
-            self._place_sharded()
 
     # -- persistence -------------------------------------------------------------
     def save(self, path: str) -> None:
+        """Checkpoint the maintainer. The free-list is implicit — a dead
+        slot is exactly a ``valid=False`` entry — so tombstones, the
+        recycler's state, and the per-shard high-water marks all
+        round-trip through the ``valid`` mask (load() recomputes the
+        planning bounds from it, shard-count independent)."""
         np.savez_compressed(
             path,
             n=self.n,
@@ -582,7 +713,11 @@ class CoreMaintainer:
             mesh=mesh,
             validate=validate,
             slot_cache=None,  # lazily rebuilt from the live table
-            n_edges_ub=int(z["n_edges"]),
+            # live_ub / hwm_ub default to -1: __post_init__ recomputes
+            # both exactly from the saved valid mask, which makes the
+            # high-water bookkeeping portable across device counts (a
+            # state saved on 1 device reloads sharded over 8 and vice
+            # versa; the sharded path re-strides the layout on entry)
         )
 
 

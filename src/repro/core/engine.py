@@ -14,9 +14,12 @@ buffer copies. ``apply_batch`` moves all of it on-device:
                membership test against the *post-removal* table, so an
                edge removed and re-inserted in the same batch round-trips
                correctly.
-  3. INSERT  — batch slot allocation via ``cumsum``, table writes, and the
-               promotion rounds (insert.promotion_fixpoint). The removal
-               fixpoint's terminating round already computed (hi,
+  3. INSERT  — batch slot allocation from the in-program free-list
+               (``insert.freelist_alloc``: the ``cumsum`` of kept inserts
+               draws from dead slots in global slot order, recycling the
+               step-1 tombstones without any host reclaim), table writes,
+               and the promotion rounds (insert.promotion_fixpoint). The
+               removal fixpoint's terminating round already computed (hi,
                dout_same) in its packed scatter; the new edges' O(batch)
                delta is scattered on top, so the promotion phase starts
                with exact statistics without another O(m) pass.
@@ -42,7 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from . import graph_ops as G
-from .insert import promotion_fixpoint
+from .insert import freelist_alloc, promotion_fixpoint
 from .order import maybe_renumber
 from .remove import removal_fixpoint
 
@@ -60,6 +63,8 @@ class BatchStats(NamedTuple):
     remove_rounds: Array   # removal fixpoint rounds executed
     n_dropped: Array       # |V*| of the removal phase
     renumbered: Array      # True if the in-program label renumber fired
+    n_recycled: Array      # inserts that reused a tombstoned slot
+    high_water: Array      # post-batch max per-shard slot high-water mark
 
 
 def edge_key(lo: Array, hi: Array, n: int) -> Array:
@@ -141,22 +146,25 @@ def batch_program(
 
     The axis parameter changes exactly three things:
 
-    * ``offset`` — this shard's base in the GLOBAL slot id space (0 when
-      unsharded), used to localize the cumsum-allocated slot ids;
+    * the free-list allocator ranks dead slots globally from one
+      all_gather of the windowed dead masks (O(n_shards * window)
+      replicated bytes — the one per-batch collective whose payload is
+      not O(n) or O(1)), so the batch cumsum still assigns globally
+      unique slots and foreign writes drop out-of-bounds;
     * reductions over found-flags / removal masks are completed by a
       psum (an edge lives in exactly one shard, so the psum of the local
       verdicts IS the global verdict — no global sort is materialized);
     * every fixpoint statistic is psum-completed via the fixpoints' own
       ``axis`` parameter.
     """
-    capacity = src.shape[0]  # local shard length under shard_map
-    if axis is None:
-        offset = jnp.int32(0)
-    else:
-        offset = jax.lax.axis_index(axis).astype(jnp.int32) * capacity
+    capacity = src.shape[0]  # local (windowed) shard length under shard_map
 
     def allsum(x):
         return x if axis is None else jax.lax.psum(x, axis)
+
+    # pre-batch LOCAL high-water mark: inserts landing below it reclaimed
+    # a tombstone (the n_recycled statistic)
+    hwm0 = G.slot_high_water(valid)
 
     # one sorted view of the (local) table serves BOTH the removal slot
     # lookup and the insert membership test
@@ -189,17 +197,23 @@ def batch_program(
     exists = allsum((ifound & ~rm_mask[islot_hit]).astype(jnp.int32)) > 0
     iok = iok & ~exists
 
-    # ---- 3. batch slot allocation: the cumsum assigns GLOBAL slot ids;
-    # each device writes the ids landing in its shard range and drops the
-    # rest (masked lanes included) via out-of-bounds scatter semantics
-    gslot = n_edges + jnp.cumsum(iok.astype(jnp.int32), dtype=jnp.int32) - 1
-    mine = iok & (gslot >= offset) & (gslot < offset + capacity)
-    lpos = jnp.where(mine, gslot - offset, capacity)  # OOB -> dropped
+    # ---- 3. batch slot allocation from the free-list: dead slots (the
+    # step-1 tombstones included) are ranked lowest-local-index-first,
+    # interleaved across shards, and the batch cumsum assigns insert
+    # rank r to the r-th free slot; each device writes the ranks landing
+    # in its own shard and drops the rest (masked lanes included) via
+    # out-of-bounds scatter semantics. The host guarantees enough free
+    # slots in the active window (api.py), so the slot table recycles
+    # tombstones without ever syncing.
+    lpos, iok = freelist_alloc(valid, iok, axis=axis)
     src = src.at[lpos].set(ilo.astype(src.dtype), mode="drop")
     dst = dst.at[lpos].set(ihi.astype(dst.dtype), mode="drop")
     valid = valid.at[lpos].set(True, mode="drop")
     n_inserted = jnp.sum(iok, dtype=jnp.int32)
-    n_edges = n_edges + n_inserted
+    n_recycled = allsum(jnp.sum(lpos < hwm0, dtype=jnp.int32))
+    # n_edges is the LIVE edge count (not a bump pointer): removals and
+    # insertions both land in it, so it tracks the paper's workload size
+    n_edges = n_edges - n_removed + n_inserted
 
     # O(batch) delta keeps the shared (hi, dout_same) statistics exact for
     # the table with the new edges — same per-edge predicate as the full
@@ -230,6 +244,10 @@ def batch_program(
         remove_rounds=rm_rounds,
         n_dropped=n_dropped,
         renumbered=renumbered,
+        n_recycled=n_recycled,
+        # exact post-batch bound the host refreshes its sync-free window
+        # planning from (max over shards of the LOCAL high-water mark)
+        high_water=G.slot_high_water(valid, axis),
     )
     return src, dst, valid, core, label, n_edges, stats
 
@@ -265,7 +283,11 @@ def apply_batch(
     incl. this batch: every edge pass in the program body runs over
     ``active_cap`` slots instead of the full over-provisioned capacity,
     so per-batch device work scales with the live graph, not with
-    headroom. Returns ``(src, dst, valid, core, label, n_edges, stats)``.
+    headroom. Because the free-list allocator fills the lowest holes
+    first, the window also guarantees the allocator enough dead slots
+    (window >= high_water + batch implies free >= batch) and the tail
+    past it stays all-invalid. Returns ``(src, dst, valid, core, label,
+    n_edges, stats)``.
     """
     full_src, full_dst, full_valid = src, dst, valid
     src, dst, valid, core, label, n_edges, stats = batch_program(

@@ -32,6 +32,21 @@ def _psum(x: Array, axis: Optional[str]) -> Array:
     return x if axis is None else jax.lax.psum(x, axis)
 
 
+def _pmax(x: Array, axis: Optional[str]) -> Array:
+    return x if axis is None else jax.lax.pmax(x, axis)
+
+
+def slot_high_water(valid: Array, axis: Optional[str] = None) -> Array:
+    """High-water mark of a slot table: 1 + the largest valid slot index
+    (0 when empty). With ``axis`` (shard_map-local shard) the result is
+    the max over shards of each shard's LOCAL high-water mark — the
+    "densest shard" bound that sizes the per-shard active window of the
+    sharded engine (docs/DESIGN.md §4.1)."""
+    idx = jnp.arange(valid.shape[0], dtype=jnp.int32)
+    local = jnp.max(jnp.where(valid, idx + 1, 0))
+    return _pmax(local, axis)
+
+
 def _seg2(data_to_src: Array, data_to_dst: Array, src: Array, dst: Array,
           n: int, axis: Optional[str] = None) -> Array:
     """Two-direction segment sum. Two LOCAL scatter-adds + elementwise add:

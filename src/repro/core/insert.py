@@ -42,6 +42,71 @@ class InsertStats(NamedTuple):
     v_plus: Array       # |V+| — vertices ever reached by FORWARD
 
 
+def freelist_alloc(
+    valid: Array,
+    iok: Array,
+    axis: str | None = None,
+) -> Tuple[Array, Array]:
+    """Recycling slot allocator: every dead slot IS the free-list.
+
+    Dead slots (``~valid``) are ranked in (local slot, shard) order and
+    the batch's kept inserts (``iok``, rank by cumsum) are assigned
+    one-to-one to the lowest-ranked free slots. Filling the lowest local
+    indices first — interleaved ACROSS shards, not shard-by-shard — does
+    two jobs at once: the per-shard slot high-water mark only grows when
+    every shard is hole-free below it (so steady-state churn recycles
+    tombstones entirely in-program and host-side ``_compact`` becomes a
+    rare defrag), and fresh-ground allocation round-robins the shards,
+    keeping the densest shard's high-water mark — the quantity that
+    sizes the per-shard active window — near ``live / n_shards``.
+    Ranking by (shard, slot) instead would funnel every insert into the
+    lowest shard's tail before touching the next shard's holes,
+    ratcheting that shard up to full local capacity (docs/DESIGN.md
+    §4.1). On one shard both orders degenerate to ascending slot id, so
+    the unified and 1-device sharded engines still pick identical slots.
+
+    With ``axis`` (shard_map) each device ranks its own dead slots from
+    one ``all_gather`` of the [window]-sized dead masks, writes the
+    batch ranks that land in its shard, and drops the rest via the
+    sentinel position — the same OOB-drop trick as the stat scatters.
+
+    Returns ``(lpos, iok)``: ``lpos[b]`` is this shard's local slot for
+    insert lane ``b`` (``== capacity`` when the lane is masked or owned
+    by another shard — out-of-bounds, so ``.at[lpos].set(mode="drop")``
+    skips it), and ``iok`` narrowed by the free-exhaustion guard (an
+    insert with no free slot anywhere is dropped rather than miscounted;
+    the host's capacity planning makes that unreachable).
+    """
+    capacity = valid.shape[0]
+    b = iok.shape[0]
+    dead = ~valid
+    if axis is None:
+        total_free = jnp.sum(dead, dtype=jnp.int32)
+        drank = jnp.cumsum(dead.astype(jnp.int32), dtype=jnp.int32) - 1
+    else:
+        all_dead = jax.lax.all_gather(dead, axis)  # [n_shards, capacity]
+        me = jax.lax.axis_index(axis)
+        col = jnp.sum(all_dead, axis=0, dtype=jnp.int32)  # dead per index
+        total_free = jnp.sum(col, dtype=jnp.int32)
+        # free rank of MY dead slot i = all dead slots at indices < i
+        # (any shard) + dead slots at index i on shards before me
+        col_before = jnp.cumsum(col, dtype=jnp.int32) - col
+        row_before = (
+            jnp.cumsum(all_dead.astype(jnp.int32), axis=0) - all_dead
+        )[me]
+        drank = col_before + row_before
+    rank = jnp.cumsum(iok.astype(jnp.int32), dtype=jnp.int32) - 1
+    iok = iok & (rank < total_free)
+    # ranks past the batch can never be targets (rank < b always), so
+    # their dead slots park on the scatter sentinel
+    spos = jnp.where(dead & (drank < b), drank, b)
+    slot_of_rank = jnp.full((b,), capacity, dtype=jnp.int32).at[spos].set(
+        jnp.arange(capacity, dtype=jnp.int32), mode="drop"
+    )
+    lpos = jnp.where(iok, slot_of_rank[jnp.maximum(rank, 0)], capacity)
+    return lpos, iok
+
+
 def write_edge_slots(
     src: Array,
     dst: Array,
@@ -51,7 +116,11 @@ def write_edge_slots(
     new_dst: Array,
     new_ok: Array,
 ) -> Tuple[Array, Array, Array, Array]:
-    """Batch slot allocation via ``cumsum`` + masked table writes.
+    """Bump slot allocation via ``cumsum`` + masked table writes — the
+    seed path behind ``engine="host"``, where ``n_edges`` is the bump
+    pointer (slot high-water mark) and tombstones are reclaimed only by
+    host-side ``_compact``. The device engines allocate with
+    ``freelist_alloc`` instead.
 
     Padding lanes are parked on the LAST slot (they rewrite its current
     values, a no-op); callers must guarantee that slot is never a real

@@ -9,14 +9,16 @@ mesh-agnostic, which is exactly why the reformulation scales to pods.
 
 ``make_sharded_apply`` is the full order-based maintenance engine behind
 ``CoreMaintainer(engine="sharded")``: the exact ``engine.apply_batch``
-program (dedup, slot lookup, removal fixpoint, promotion rounds,
-place_block label assignment, renumber gate) with the slot table sharded
-across the mesh and every per-vertex statistic completed by one psum
-(docs/DESIGN.md §4). It wraps ``engine.batch_program`` — the unified
-engine's program body, not a copy — in a ``shard_map``, with the body's
-``axis`` parameter (threaded down into the remove.py / insert.py
-fixpoints) supplying the psums, so unified and sharded engines cannot
-drift algorithmically.
+program (dedup, slot lookup, free-list slot recycling, removal fixpoint,
+promotion rounds, place_block label assignment, renumber gate) with the
+slot table sharded across the mesh and every per-vertex statistic
+completed by one psum (docs/DESIGN.md §4). It wraps
+``engine.batch_program`` — the unified engine's program body, not a copy
+— in a ``shard_map``, with the body's ``axis`` parameter (threaded down
+into the remove.py / insert.py fixpoints) supplying the psums, so
+unified and sharded engines cannot drift algorithmically. Per-batch
+work is bounded by the per-shard high-water window (``local_active``),
+sliced locally inside the kernel so the sharded placement never moves.
 
 The older core-only kernels (``make_sharded_remove`` /
 ``make_sharded_insert_round``) are kept as minimal building blocks for
@@ -43,7 +45,8 @@ Array = jax.Array
 
 
 def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
-                       axis: str = "data"):
+                       axis: str = "data",
+                       local_active: int | None = None):
     """Build the jitted sharded mixed-batch engine over ``mesh``.
 
     The returned function has the same signature and semantics as
@@ -53,6 +56,17 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
     stats)``. ``src``/``dst``/``valid`` must be sharded along ``axis``
     (capacity divisible by the axis size); everything else is replicated.
 
+    ``local_active`` is the per-shard high-water window — the sharded
+    analogue of the unified engine's ``active_cap``. Slicing a SHARDED
+    buffer would force a reshard, so the slice happens INSIDE the
+    shard_map kernel on each device's local (already materialized) shard:
+    every edge pass runs over ``local_active`` slots per device instead
+    of ``capacity / n_devices``, bounding per-batch work by the densest
+    shard's live prefix. The host sizes it from the pow2 bucket of
+    ``stats.high_water`` (api.py), so live slots — and the free slots the
+    allocator needs — always sit inside the window, and the local tail
+    past it stays all-invalid. ``None`` runs the full shard (no slicing).
+
     Division of labor inside the kernel (docs/DESIGN.md §4):
 
     * slot lookup — each device searches its LOCAL sorted shard; an edge
@@ -61,9 +75,11 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
       global sort;
     * tombstoning — each device masks only its own slots (no cross-device
       slot indices ever exist);
-    * slot allocation — the batch cumsum (replicated) assigns GLOBAL slot
-      ids; each device writes the ids that land in its shard range and
-      drops the rest via out-of-bounds scatter semantics;
+    * slot allocation — ``insert.freelist_alloc``: dead slots are ranked
+      lowest-local-index-first interleaved across shards (one all_gather
+      of the windowed dead masks); each device writes the batch-cumsum
+      ranks that land in its own shard and drops the rest via
+      out-of-bounds scatter semantics;
     * fixpoints — the shared removal/promotion loops with ``axis=…``:
       local scatter-adds + one psum per round, per-vertex state
       replicated, so every device runs the loop in lockstep;
@@ -73,12 +89,20 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
                 ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok):
         # the UNIFIED engine's program body, verbatim, over this device's
         # local shard: its axis parameter turns every table reduction and
-        # fixpoint statistic into local-scatter + psum (engine.py)
-        return batch_program(
-            src, dst, valid, core, label, n_edges,
+        # fixpoint statistic into local-scatter + psum (engine.py). The
+        # per-shard window is a LOCAL slice (cf. engine.apply_batch's
+        # active_cap prefix): the all-invalid tail is spliced back on.
+        w = src.shape[0] if local_active is None else local_active
+        full_src, full_dst, full_valid = src, dst, valid
+        src, dst, valid, core, label, n_edges, stats = batch_program(
+            src[:w], dst[:w], valid[:w], core, label, n_edges,
             ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok,
             n, n_levels, axis=axis,
         )
+        src = jnp.concatenate([src, full_src[w:]])
+        dst = jnp.concatenate([dst, full_dst[w:]])
+        valid = jnp.concatenate([valid, full_valid[w:]])
+        return src, dst, valid, core, label, n_edges, stats
 
     shardmapped = shard_map(
         _kernel,

@@ -106,6 +106,89 @@ def mixed_stream(
         )
 
 
+def churn_stream(
+    g: CSRGraph,
+    n_batches: int,
+    batch_size: int,
+    p_reinsert: float = 0.6,
+    same_batch_roundtrip: bool = True,
+    dirty: bool = True,
+    seed: int = 0,
+) -> Iterator[EdgeEvent]:
+    """Balanced 50/50 insert/remove churn with adversarial recycling
+    pressure — the steady-state workload the in-program free-list
+    allocator (core/engine.py) exists for.
+
+    Per batch: ``batch_size // 2`` removals of live edges, then the same
+    number of insertions of which ~``p_reinsert`` re-insert RECENTLY
+    removed edges (landing on slots the recycler just reclaimed; the
+    rest are fresh absent edges). With ``same_batch_roundtrip`` one of
+    the batch's own removals is re-inserted in the SAME event (the slot
+    is freed and refilled inside one compiled program). With ``dirty``
+    each event also carries rows every engine must mask on device: a
+    self-loop, an in-batch duplicate, a duplicate of a live edge, and a
+    removal of an absent edge. Live edge count is exactly flat across
+    every event — the capacity/high-water invariant tests key on this.
+
+    Consumers tracking the live set must apply removals first, then
+    deduped insertions (``CoreMaintainer.apply_batch`` order).
+    """
+    rng = np.random.default_rng(seed)
+    live = {tuple(e) for e in g.edge_array().tolist()}
+    pool: list = []  # recently removed candidates for re-insertion
+    n = g.n
+    max_edges = n * (n - 1) // 2
+    for t in range(n_batches):
+        k = min(batch_size // 2, len(live))
+        lst = sorted(live)
+        take = rng.choice(len(lst), size=k, replace=False)
+        removals = [lst[i] for i in take]
+        live.difference_update(removals)
+        inserts: list = []
+        if same_batch_roundtrip and removals:
+            inserts.append(removals[0])  # removed and re-inserted at t
+        while pool and len(inserts) < int(round(k * p_reinsert)):
+            e = pool.pop(int(rng.integers(0, len(pool))))
+            if e not in live and e not in inserts:
+                inserts.append(e)
+        # clamp to the absent pairs actually available so the rejection
+        # loop terminates on (near-)complete graphs; the removals above
+        # guarantee at least k absent pairs, so live stays exactly flat
+        # on any graph that is not literally full
+        k_ins = min(k, max_edges - len(live))
+        while len(inserts) < k_ins:
+            u, v = rng.integers(0, n, size=2)
+            key = (int(min(u, v)), int(max(u, v)))
+            if u == v or key in live or key in inserts:
+                continue
+            inserts.append(key)
+        pool.extend(e for e in removals if e not in inserts)
+        live.update(inserts)
+        ins = np.asarray(inserts, dtype=np.int64).reshape(-1, 2)
+        rm = np.asarray(removals, dtype=np.int64).reshape(-1, 2)
+        if dirty:
+            garnish = [[3 % n, 3 % n]]  # self-loop
+            if inserts:
+                garnish.append(list(inserts[-1]))  # in-batch duplicate
+            if live:
+                garnish.append(list(next(iter(live))))  # dup of live edge
+            ins = np.concatenate(
+                [ins, np.asarray(garnish, dtype=np.int64)]
+            )
+            absent_rm = None  # removal of an absent edge is a no-op
+            for _ in range(20):
+                u, v = rng.integers(0, n, size=2)
+                key = (int(min(u, v)), int(max(u, v)))
+                if u != v and key not in live:
+                    absent_rm = key
+                    break
+            if absent_rm is not None:
+                rm = np.concatenate(
+                    [rm, np.asarray([absent_rm], dtype=np.int64)]
+                )
+        yield EdgeEvent(ins, "mixed", t, removals=rm)
+
+
 def temporal_replay(
     edges_with_time: np.ndarray, batch_size: int
 ) -> Iterator[EdgeEvent]:

@@ -1,6 +1,27 @@
 """Shared test helpers (importable from any test module via
-``from conftest import ...`` under pytest's prepend import mode)."""
+``from conftest import ...`` under pytest's prepend import mode).
+
+Also registers hypothesis profiles: the ``ci`` profile (selected with
+``HYPOTHESIS_PROFILE=ci``, as .github/workflows/ci.yml does) derandomizes
+example generation so CI failures are reproducible, disables the
+per-example deadline (jit compiles inside examples would otherwise flake
+as DeadlineExceeded), and prints the reproduction blob of any failing
+example instead.
+"""
+import os
+
 import numpy as np
+
+try:
+    from hypothesis import settings as _hsettings
+
+    _hsettings.register_profile(
+        "ci", derandomize=True, deadline=None, print_blob=True
+    )
+    _hsettings.register_profile("dev", deadline=None, print_blob=True)
+    _hsettings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ImportError:  # hypothesis tests importorskip themselves
+    pass
 
 
 def sample_absent(cur, rng, k):

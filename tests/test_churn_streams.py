@@ -1,0 +1,436 @@
+"""Cross-engine churn harness: long balanced insert/remove/re-insert
+streams through ALL THREE engines, pinned bit-identical to each other and
+to the sequential oracle — the differential lockdown of the in-program
+free-list slot recycler and the per-shard high-water window.
+
+The claims under test (docs/DESIGN.md §4.1):
+
+* heavy recycled-slot traffic (just-removed re-insertion, same-batch
+  remove+re-insert, duplicate dirt) never desynchronizes cores OR
+  k-order labels between host / unified / sharded;
+* with flat live edges, capacity never grows after warm-up and the slot
+  high-water mark is bounded by the running max of the live count (the
+  recycling invariant) — host-side defrag never fires on device engines;
+* ``validate=False`` masked rows consume no slots and leave
+  ``live_edges`` / ``BatchStats`` untouched;
+* a save -> load round trip after recycling (tombstones + free-list +
+  per-shard high-water marks, all carried by the ``valid`` mask)
+  restores an equivalent maintainer on 1 and 8 forced host devices;
+* a batch that must defrag AND grow places the sharded buffers exactly
+  once (regression: the old compact-then-grow path placed them twice).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+try:  # the fuzz variant needs hypothesis; the deterministic harness not
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.api import CoreMaintainer
+from repro.core.oracle import OrderCoreMaintainer, bz_from_csr
+from repro.graph.csr import build_csr
+from repro.graph.generators import erdos_renyi
+from repro.graph.stream import churn_stream
+
+ENGINES = ("host", "unified", "sharded")
+
+
+def _norm(edges) -> list:
+    """Normalized (lo, hi) tuples of an [k, 2] edge array."""
+    return [
+        (int(min(a, b)), int(max(a, b))) for a, b in np.asarray(edges)
+    ]
+
+
+def _effective_delta(live, ins, rm):
+    """Replay one dirty event with apply_batch semantics on a host-side
+    live-set mirror: removals first, then first-occurrence-deduped
+    insertions. Returns the clean (inserted, removed) lists the
+    sequential oracle (which rejects duplicate edits) can consume."""
+    removed = []
+    for e in _norm(rm):
+        if e in live:
+            live.discard(e)
+            removed.append(e)
+    inserted = []
+    for e in _norm(ins):
+        if e[0] != e[1] and e not in live:
+            live.add(e)
+            inserted.append(e)
+    return inserted, removed
+
+
+def _run_churn_differential(m0, graph_seed, stream_seed, n_batches,
+                            batch_size, p_reinsert):
+    """Every engine sees the same dirty churn events; after every event
+    all three agree bit-exactly (cores AND labels) with each other, with
+    BZ from scratch, and with the sequential order-based oracle fed the
+    clean effective delta."""
+    n = 24
+    g = erdos_renyi(n, m0, seed=graph_seed)
+    cap = 4 * g.m + 64
+    ms = {
+        e: CoreMaintainer.from_graph(g, capacity=cap, engine=e)
+        for e in ENGINES
+    }
+    caps0 = {e: m.capacity for e, m in ms.items()}
+    oracle = OrderCoreMaintainer(n, g.edge_array())
+    live = set(_norm(g.edge_array()))
+    hwm_bound = len(live)  # running max of the live count
+    for ev in churn_stream(g, n_batches, batch_size, seed=stream_seed,
+                           p_reinsert=p_reinsert):
+        stats = {
+            e: m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+            for e, m in ms.items()
+        }
+        inserted, removed = _effective_delta(live, ev.edges, ev.removals)
+        oracle.remove_batch(np.asarray(removed).reshape(-1, 2))
+        oracle.insert_batch(np.asarray(inserted).reshape(-1, 2))
+        hwm_bound = max(hwm_bound, len(live))
+        expect = bz_from_csr(
+            build_csr(n, np.asarray(sorted(live), dtype=np.int64))
+        )
+        u = ms["unified"]
+        np.testing.assert_array_equal(u.cores(), expect)
+        np.testing.assert_array_equal(u.cores(), oracle.core)
+        for e in ("host", "sharded"):
+            np.testing.assert_array_equal(u.cores(), ms[e].cores(), e)
+            np.testing.assert_array_equal(u.labels(), ms[e].labels(), e)
+        for e, st_ in stats.items():
+            assert int(st_.n_inserted) == len(inserted), e
+            assert int(st_.n_removed) == len(removed), e
+        # the recycling invariant: the slot high-water mark never outruns
+        # the running max of the live count (holes are filled first)
+        assert int(stats["unified"].high_water) <= hwm_bound
+        assert int(u.n_edges) == u.live_edges == len(live)
+        assert ms["sharded"].live_edges == len(live)
+    # balanced stream + generous initial capacity: nothing may grow
+    for e, m in ms.items():
+        assert m.capacity == caps0[e], e
+
+
+@pytest.mark.parametrize(
+    "params",
+    [
+        # (m0, graph_seed, stream_seed, n_batches, batch_size, p_reinsert)
+        (60, 0, 1, 4, 12, 0.6),   # mixed fresh/recycled traffic
+        (45, 7, 3, 3, 8, 1.0),    # every insert re-inserts a removal
+        (90, 2, 9, 3, 16, 0.3),   # denser graph, mostly fresh inserts
+    ],
+)
+def test_churn_engines_bit_identical(params):
+    _run_churn_differential(*params)
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def churn_params(draw):
+        # n is held fixed so the whole hypothesis run shares one jit
+        # cache per (batch-bucket, window-bucket) pair; the graph, the
+        # stream shape, and the dirt all vary through the seeds
+        m0 = draw(st.integers(min_value=40, max_value=90))
+        graph_seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        stream_seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        n_batches = draw(st.integers(min_value=2, max_value=4))
+        batch_size = draw(st.sampled_from([8, 12, 16]))
+        p_reinsert = draw(st.sampled_from([0.3, 0.6, 1.0]))
+        return m0, graph_seed, stream_seed, n_batches, batch_size, p_reinsert
+
+    @given(churn_params())
+    @settings(
+        max_examples=8,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large],
+    )
+    def test_churn_engines_bit_identical_fuzz(params):
+        _run_churn_differential(*params)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_capacity_flat_under_balanced_churn(engine):
+    """Acceptance: >= 50 balanced 50/50 batches on a TIGHT table. After
+    warm-up, capacity never grows on any engine; on the device engines
+    the in-program recycler absorbs every batch without a single
+    host-side defrag, and the high-water mark stays pinned at the live
+    count."""
+    g = erdos_renyi(60, 240, seed=2)
+    cap = int(g.m * 1.4) + 32  # far less than the stream's gross inserts
+    m = CoreMaintainer.from_graph(g, capacity=cap, engine=engine)
+    cap_after_warmup = None
+    defrags = 0
+    orig = CoreMaintainer._defrag_to
+
+    def counting(self, new_cap):
+        nonlocal defrags
+        defrags += 1
+        return orig(self, new_cap)
+
+    live = set(_norm(g.edge_array()))
+    events = list(churn_stream(g, 52, 16, seed=7))
+    try:
+        CoreMaintainer._defrag_to = counting
+        for i, ev in enumerate(events):
+            m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+            _effective_delta(live, ev.edges, ev.removals)
+            if i == 1:
+                cap_after_warmup = m.capacity
+                defrags = 0
+            if cap_after_warmup is not None:
+                assert m.capacity == cap_after_warmup, f"grew at batch {i}"
+    finally:
+        CoreMaintainer._defrag_to = orig
+    if engine != "host":
+        # flat live edges -> the free-list recycles every tombstone
+        # in-program; the host reclaim path never runs
+        assert defrags == 0
+        assert int(m.last_batch_stats.high_water) <= len(live) + 1
+        assert int(m.n_edges) == len(live)
+    assert m.live_edges == len(live)
+    expect = bz_from_csr(build_csr(m.n, np.asarray(sorted(live),
+                                                   dtype=np.int64)))
+    np.testing.assert_array_equal(m.cores(), expect)
+
+
+@pytest.mark.parametrize("engine", ("unified", "sharded"))
+def test_masked_rows_consume_nothing(engine):
+    """validate=False drops out-of-range rows BEFORE they can touch the
+    device: no slot is consumed, live_edges and n_edges are unchanged,
+    and the batch stats count only the surviving rows."""
+    g = erdos_renyi(40, 120, seed=5)
+    m = CoreMaintainer.from_graph(g, capacity=512, engine=engine,
+                                  validate=False)
+    live0 = m.live_edges
+    ne0 = int(m.n_edges)
+    core0 = m.cores().copy()
+    # all rows masked -> the batch degenerates to the empty-batch path
+    st_ = m.apply_batch(insert_edges=[[5, 9999], [-1, 3]],
+                        remove_edges=[[40, 0], [2, -7]])
+    assert int(st_.n_inserted) == 0 and int(st_.n_removed) == 0
+    assert int(st_.n_recycled) == 0
+    assert m.live_edges == live0 and int(m.n_edges) == ne0
+    np.testing.assert_array_equal(m.cores(), core0)
+    # mixed batch: only the in-range row lands
+    ins = [[0, 39], [0, 40], [-1, 1]]
+    already = (0, 39) in m.edge_slot
+    st_ = m.apply_batch(insert_edges=ins)
+    assert int(st_.n_inserted) == (0 if already else 1)
+    assert m.live_edges == live0 + int(st_.n_inserted)
+    assert int(m.n_edges) == m.live_edges
+
+
+def test_save_load_after_recycling_roundtrip(tmp_path):
+    """Tombstones, the implicit free-list, and the high-water bookkeeping
+    all ride in the ``valid`` mask: a reload mid-churn (holes present)
+    restores an equivalent maintainer under every engine and continues
+    bit-identically."""
+    g = erdos_renyi(50, 180, seed=1)
+    m = CoreMaintainer.from_graph(g, capacity=1024)
+    live = set(_norm(g.edge_array()))
+    events = list(churn_stream(g, 4, 12, seed=4))
+    for ev in events[:3]:
+        m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+        _effective_delta(live, ev.edges, ev.removals)
+    # punch extra unrecycled holes so the saved state is fragmented
+    holes = np.asarray(sorted(live), dtype=np.int64)[:7]
+    m.apply_batch(remove_edges=holes)
+    _effective_delta(live, np.zeros((0, 2), np.int64), holes)
+    p = str(tmp_path / "churned.npz")
+    m.save(p)
+    loaded = {e: CoreMaintainer.load(p, engine=e) for e in ENGINES}
+    val = np.asarray(m.valid)
+    hwm = int(np.nonzero(val)[0].max()) + 1
+    for e, m2 in loaded.items():
+        assert m2.live_ub == len(live), e
+        assert m2.hwm_ub == hwm, e  # recomputed exactly from the mask
+        assert m2.edge_slot == m.edge_slot, e
+    # everyone (original + 3 reloads) continues identically
+    ev = events[3]
+    for m2 in (m, *loaded.values()):
+        m2.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+    _effective_delta(live, ev.edges, ev.removals)
+    expect = bz_from_csr(build_csr(m.n, np.asarray(sorted(live),
+                                                   dtype=np.int64)))
+    np.testing.assert_array_equal(m.cores(), expect)
+    for e, m2 in loaded.items():
+        np.testing.assert_array_equal(m.cores(), m2.cores(), e)
+        np.testing.assert_array_equal(m.labels(), m2.labels(), e)
+        assert m2.live_edges == len(live), e
+
+
+def test_compact_then_grow_places_sharded_buffers_once():
+    """Regression: one apply_batch that must BOTH defrag and grow used to
+    place the sharded buffers twice (_compact placed, then _grow placed
+    again). _ensure_capacity now fuses them into a single re-layout."""
+    g = erdos_renyi(40, 150, seed=9)
+    m = CoreMaintainer.from_graph(g, capacity=g.m + 12, engine="sharded")
+    placements = 0
+    orig = CoreMaintainer._place_sharded
+
+    def counting(self):
+        nonlocal placements
+        placements += 1
+        return orig(self)
+
+    cap0 = m.capacity
+    big = np.asarray(
+        [[u, v] for u in range(6) for v in range(u + 1, 40)
+         if (u, v) not in m.edge_slot][:40],
+        dtype=np.int64,
+    )
+    try:
+        CoreMaintainer._place_sharded = counting
+        m.apply_batch(insert_edges=big)  # cannot fit: defrag + grow
+    finally:
+        CoreMaintainer._place_sharded = orig
+    assert m.capacity > cap0
+    assert placements == 1, f"sharded buffers placed {placements}x"
+    live = set(_norm(g.edge_array())) | set(_norm(big))
+    expect = bz_from_csr(build_csr(m.n, np.asarray(sorted(live),
+                                                   dtype=np.int64)))
+    np.testing.assert_array_equal(m.cores(), expect)
+    assert m.live_edges == len(live)
+
+
+def test_pure_defrag_keeps_capacity():
+    """When live edges shrink but the high-water mark stays pinned high
+    (a live edge stuck in a top slot above a sea of holes), the
+    escalation path defrags WITHOUT growing — _compact demoted to a rare
+    defrag, not the reclaim path."""
+    g = erdos_renyi(40, 150, seed=3)
+    m = CoreMaintainer.from_graph(g, capacity=g.m + 24)
+    edges = g.edge_array()
+    # remove most edges: live collapses but the top slots stay occupied,
+    # so high_water stays ~m while the table is mostly holes
+    m.apply_batch(remove_edges=edges[: g.m - 10])
+    hw = int(m.last_batch_stats.high_water)
+    assert hw == g.m  # top slot still live above the holes
+    live = set(_norm(edges[g.m - 10:]))
+    # a batch too big for the window above the pinned high-water mark:
+    # the exact-bound refresh still crosses the threshold, so the
+    # escalation must defrag — but a packed table leaves plenty of room,
+    # so capacity must NOT grow
+    fresh = []
+    for u in range(40):
+        for v in range(u + 1, 40):
+            if (u, v) not in live and len(fresh) < 30:
+                fresh.append((u, v))
+    fresh = np.asarray(fresh, dtype=np.int64)
+    defrags = 0
+    orig = CoreMaintainer._defrag_to
+
+    def counting(self, new_cap):
+        nonlocal defrags
+        defrags += 1
+        return orig(self, new_cap)
+
+    cap0 = m.capacity
+    try:
+        CoreMaintainer._defrag_to = counting
+        m.apply_batch(insert_edges=fresh)
+    finally:
+        CoreMaintainer._defrag_to = orig
+    live |= set(_norm(fresh))
+    assert defrags == 1
+    assert m.capacity == cap0
+    assert int(m.last_batch_stats.high_water) <= len(live)
+    expect = bz_from_csr(build_csr(m.n, np.asarray(sorted(live),
+                                                   dtype=np.int64)))
+    np.testing.assert_array_equal(m.cores(), expect)
+    assert m.live_edges == len(live)
+
+
+_ROUNDTRIP_8DEV = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+
+    import repro  # enables x64
+    from repro.core.api import CoreMaintainer
+    from repro.core.oracle import bz_from_csr
+    from repro.graph.csr import build_csr
+    from repro.graph.generators import erdos_renyi
+    from repro.graph.stream import churn_stream
+
+    assert len(jax.devices()) == 8, jax.devices()
+    g = erdos_renyi(80, 320, seed=1)
+    ms = CoreMaintainer.from_graph(g, capacity=645, engine="sharded")
+    mu = CoreMaintainer.from_graph(g, capacity=645, engine="unified")
+    assert ms.capacity % 8 == 0, ms.capacity
+
+    def norm(edges):
+        return [(int(min(a, b)), int(max(a, b))) for a, b in edges]
+
+    live = set(norm(g.edge_array()))
+    events = list(churn_stream(g, 8, 24, seed=5))
+    for ev in events[:6]:
+        ms.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+        mu.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+        for e in norm(ev.removals):
+            live.discard(e)
+        for e in norm(ev.edges):
+            if e[0] != e[1]:
+                live.add(e)
+    # flat live edges on a tight table: nobody grew, slots recycled
+    assert ms.capacity == 648 and mu.capacity == 645
+    assert int(ms.last_batch_stats.n_recycled) > 0
+    # per-shard window bound: densest shard stays far under local cap
+    assert int(ms.last_batch_stats.high_water) <= -(-len(live) // 8) + 24
+
+    p = "/tmp/churn_8dev_roundtrip.npz"
+    ms.save(p)
+    m2 = CoreMaintainer.load(p, engine="sharded")   # re-strided over 8
+    m3 = CoreMaintainer.load(p, engine="unified")
+    assert m2.edge_slot.keys() == m3.edge_slot.keys() == {
+        tuple(e) for e in live
+    }
+    for ev in events[6:]:
+        for m in (ms, mu, m2, m3):
+            m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+        for e in norm(ev.removals):
+            live.discard(e)
+        for e in norm(ev.edges):
+            if e[0] != e[1]:
+                live.add(e)
+    expect = bz_from_csr(build_csr(g.n, np.asarray(sorted(live),
+                                                   dtype=np.int64)))
+    for name, m in (("sharded", ms), ("unified", mu),
+                    ("reload-sharded", m2), ("reload-unified", m3)):
+        np.testing.assert_array_equal(m.cores(), expect, err_msg=name)
+        np.testing.assert_array_equal(m.labels(), ms.labels(), err_msg=name)
+        assert m.live_edges == len(live), name
+    print("churn-roundtrip-8dev OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_churn_save_load_roundtrip_8dev(tmp_path):
+    """8 forced host devices: recycled-slot churn on a genuinely sharded
+    table, then a save -> load round trip (sharded AND unified readers)
+    that must keep tracking BZ and the original engines bit-exactly."""
+    script = tmp_path / "roundtrip8.py"
+    script.write_text(_ROUNDTRIP_8DEV)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    out = subprocess.run(
+        [sys.executable, str(script)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "churn-roundtrip-8dev OK" in out.stdout
