@@ -180,7 +180,16 @@ def fig7_stability(n_batches: int = 8, batch: int = 128) -> List[Row]:
     return rows
 
 
-STREAM_ENGINES = ("host", "unified", "sharded")
+STREAM_ENGINES = ("host", "unified", "sharded", "vertex_sharded")
+
+# engine NAME -> CoreMaintainer kwargs (the bench rows are engine
+# configurations, not just engine strings, since PR 4's vertex layouts)
+ENGINE_SPECS: Dict[str, Dict[str, str]] = {
+    "host": {"engine": "host"},
+    "unified": {"engine": "unified"},
+    "sharded": {"engine": "sharded"},
+    "vertex_sharded": {"engine": "sharded", "vertex_sharding": "range"},
+}
 
 
 def stream_bench(
@@ -192,14 +201,18 @@ def stream_bench(
     out_json: str = "BENCH_stream.json",
     engines: Sequence[str] = STREAM_ENGINES,
     scaling_device_counts: Sequence[int] = (),
+    vertex_scaling_device_counts: Sequence[int] = (),
 ) -> Dict[str, object]:
     """Mixed insert+remove stream on the SAME events: the unified one-call
-    engine and the mesh-sharded engine vs the seed two-call path
-    (host-dict dedup + separate insert/remove programs). Reports
-    batches/sec per engine and writes ``out_json``. With
-    ``scaling_device_counts`` the sharded engine is re-timed in
-    subprocesses with that many forced host devices (the paper's
-    time-vs-workers scaling axis; see ``sharded_device_scaling``).
+    engine, the mesh-sharded engine (replicated AND range-sharded vertex
+    state) vs the seed two-call path (host-dict dedup + separate
+    insert/remove programs). Reports batches/sec per engine and writes
+    ``out_json``. With ``scaling_device_counts`` /
+    ``vertex_scaling_device_counts`` the sharded / vertex-sharded engine
+    is re-timed in subprocesses with that many forced host devices (the
+    paper's time-vs-workers scaling axis; ``sharded_device_scaling``) —
+    recorded as ``sharded_scaling`` / ``vertex_scaling`` rows with their
+    ``n_devices``.
 
     Note on jit-cache hygiene: the unified engine's ``active_cap`` is a
     static pow2 bucket of the slot high-water mark. With the defaults
@@ -217,7 +230,8 @@ def stream_bench(
     per_engine: Dict[str, Dict[str, float]] = {}
     finals = {}
     for engine in engines:
-        mt = CoreMaintainer.from_graph(g, capacity=4 * m, engine=engine)
+        mt = CoreMaintainer.from_graph(g, capacity=4 * m,
+                                       **ENGINE_SPECS[engine])
 
         def step(ev):
             if engine == "host":  # seed path: one program per edit kind
@@ -274,6 +288,13 @@ def stream_bench(
             n_batches=min(n_batches, 10), batch_size=batch_size,
         )
         _write()
+    if vertex_scaling_device_counts:
+        result["vertex_scaling"] = sharded_device_scaling(
+            vertex_scaling_device_counts, n=n, m=m,
+            n_batches=min(n_batches, 10), batch_size=batch_size,
+            vertex_sharding="range",
+        )
+        _write()
     assert agree, "engines diverged on the same stream"
     return result
 
@@ -287,9 +308,11 @@ from repro.graph.generators import erdos_renyi
 from repro.graph.stream import mixed_stream
 
 n, m, n_batches, batch_size, warmup = map(int, sys.argv[1:6])
+vertex_sharding = sys.argv[6]
 g = erdos_renyi(n, m, seed=12)
 events = list(mixed_stream(g, n_batches + warmup, batch_size, seed=17))
-mt = CoreMaintainer.from_graph(g, capacity=4 * m, engine="sharded")
+mt = CoreMaintainer.from_graph(g, capacity=4 * m, engine="sharded",
+                               vertex_sharding=vertex_sharding)
 for ev in events[:warmup]:
     mt.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
 mt.core.block_until_ready()
@@ -300,6 +323,7 @@ mt.core.block_until_ready()
 dt = time.perf_counter() - t0
 print(json.dumps({
     "n_devices": len(jax.devices()),
+    "vertex_sharding": vertex_sharding,
     "n_batches": n_batches,
     "seconds": dt,
     "batches_per_s": n_batches / dt,
@@ -314,13 +338,17 @@ def sharded_device_scaling(
     n_batches: int = 10,
     batch_size: int = 128,
     warmup: int = 3,
+    vertex_sharding: str = "replicated",
 ) -> List[Dict[str, float]]:
-    """Time the sharded engine under forced host device counts (one
-    subprocess per count — XLA fixes the device count at init). On a
-    single-core CPU container the host devices share one core, so this
-    measures collective overhead rather than speedup; on real multi-core
-    or multi-chip hardware the same harness reports the paper's
-    time-vs-workers curve."""
+    """Time the sharded engine (replicated or range-sharded vertex state)
+    under forced host device counts (one subprocess per count — XLA
+    fixes the device count at init). On a single-core CPU container the
+    host devices share one core, so this measures collective overhead
+    rather than speedup; on real multi-core or multi-chip hardware the
+    same harness reports the paper's time-vs-workers curve — and the
+    ``vertex_sharding="range"`` sweep is the one whose per-round vertex
+    traffic stays O(n + frontier bits * d) as d grows (docs/DESIGN.md
+    §4.2)."""
     src_path = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src")
     )
@@ -336,7 +364,8 @@ def sharded_device_scaling(
         env["PYTHONPATH"] = src_path + os.pathsep + env.get("PYTHONPATH", "")
         out = subprocess.run(
             [sys.executable, "-c", _SCALING_SCRIPT,
-             str(n), str(m), str(n_batches), str(batch_size), str(warmup)],
+             str(n), str(m), str(n_batches), str(batch_size), str(warmup),
+             vertex_sharding],
             capture_output=True,
             text=True,
             env=env,
@@ -380,7 +409,8 @@ def churn_bench(
     finals = {}
     orig_defrag = CoreMaintainer._defrag_to
     for engine in engines:
-        mt = CoreMaintainer.from_graph(g, capacity=capacity, engine=engine)
+        mt = CoreMaintainer.from_graph(g, capacity=capacity,
+                                       **ENGINE_SPECS[engine])
         defrags = [0]
 
         def counting(self, new_cap, _d=defrags):

@@ -24,6 +24,10 @@ def main() -> None:
     ap.add_argument("--roofline-json", default="dryrun_results.json")
     ap.add_argument("--stream-json", default="BENCH_stream.json")
     args = ap.parse_args()
+    if args.quick and args.stream_json == "BENCH_stream.json":
+        # --quick skips the device-scaling sweeps; never let it clobber
+        # the committed artifact (CI asserts the sweep rows are present)
+        args.stream_json = "BENCH_stream.quick.json"
 
     from . import core_maintenance as cm
 
@@ -89,6 +93,7 @@ def main() -> None:
         batch_size=64 if args.quick else 128,
         out_json=args.stream_json,
         scaling_device_counts=() if args.quick else (1, 2, 4),
+        vertex_scaling_device_counts=() if args.quick else (1, 2, 4),
     )
     for eng in cm.STREAM_ENGINES:
         _emit(
@@ -103,12 +108,13 @@ def main() -> None:
         f"sharded_vs_host={sb['speedup_sharded_vs_host']:.2f}x;"
         f"agree={sb['engines_agree']}",
     )
-    for row in sb.get("sharded_scaling", ()):
-        _emit(
-            f"stream/sharded_scaling/dev{row['n_devices']}",
-            1e6 * row["seconds"] / row["n_batches"],
-            f"batches_per_s={row['batches_per_s']:.2f}",
-        )
+    for key in ("sharded_scaling", "vertex_scaling"):
+        for row in sb.get(key, ()):
+            _emit(
+                f"stream/{key}/dev{row['n_devices']}",
+                1e6 * row["seconds"] / row["n_batches"],
+                f"batches_per_s={row['batches_per_s']:.2f}",
+            )
 
     # steady-state churn on a tight table: in-program slot recycling
     # (device engines) vs host-side _compact reclaim (appends the

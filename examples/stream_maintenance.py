@@ -41,7 +41,17 @@ def main():
              "(XLA_FLAGS=--xla_force_host_platform_device_count=8 to try "
              "multi-device on CPU)",
     )
+    ap.add_argument(
+        "--vertex-sharding", default="replicated",
+        choices=("replicated", "range"),
+        help="where the per-vertex state lives under --engine sharded: "
+             "replicated (one psum per statistic) or range (each device "
+             "owns a vertex range; reduce_scatter stats + bit-packed "
+             "frontier masks — docs/DESIGN.md §4.2)",
+    )
     args = ap.parse_args()
+    if args.vertex_sharding == "range" and args.engine != "sharded":
+        ap.error("--vertex-sharding range needs --engine sharded")
 
     g = erdos_renyi(args.n, args.m, seed=0)
     state_path = args.ckpt
@@ -49,18 +59,20 @@ def main():
 
     start_batch = 0
     if os.path.exists(state_path) and os.path.exists(meta_path):
-        m = CoreMaintainer.load(state_path, engine=args.engine)
+        m = CoreMaintainer.load(state_path, engine=args.engine,
+                                vertex_sharding=args.vertex_sharding)
         start_batch = int(open(meta_path).read().strip()) + 1
         print(f"[resume] restored checkpoint, continuing at batch "
               f"{start_batch}")
     else:
         m = CoreMaintainer.from_graph(
-            g, capacity=8 * args.m, engine=args.engine
+            g, capacity=8 * args.m, engine=args.engine,
+            vertex_sharding=args.vertex_sharding,
         )
     if args.engine == "sharded":
         import jax
         print(f"[mesh] edge slots sharded over {len(jax.devices())} "
-              f"device(s)")
+              f"device(s), vertex state {args.vertex_sharding}")
 
     stream = mixed_stream if args.mixed else synthetic_stream
     events = list(stream(g, args.batches, args.batch_size, seed=42))

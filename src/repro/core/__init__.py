@@ -6,6 +6,8 @@ Layers:
 * ``order``         — k-order label maintenance (OM adaptation, JAX).
 * ``insert``        — batch-parallel order-based insertion maintenance (JAX).
 * ``remove``        — batch-parallel mcd-cascade removal maintenance (JAX).
+* ``vertex_layout`` — pluggable vertex-state layouts (replicated / range-
+                      sharded) the fixpoints complete statistics through.
 * ``api``           — CoreMaintainer public interface (incl. sharded variant).
 """
 from .oracle import (  # noqa: F401

@@ -29,8 +29,16 @@ benchmark baseline and fallback.
 the edge-slot table sharded across a mesh's ``data`` axis
 (core/sharded.py, docs/DESIGN.md §4): per-device work is bounded by the
 densest shard's high-water window (not full capacity / n_devices —
-docs/DESIGN.md §4.1), vertex state is replicated, and each statistic
-costs one psum.
+docs/DESIGN.md §4.1). ``vertex_sharding`` picks where the per-vertex
+state lives (core/vertex_layout.py): ``"replicated"`` (the default —
+each statistic costs one psum, O(n) received per device per round) or
+``"range"`` (core/label range-sharded over the same axis: statistics
+complete by reduce_scatter into owner ranges, O(n / n_devices) received
+per device, and only changed-vertex bitmasks cross the mesh per round —
+docs/DESIGN.md §4.2). ``freelist`` picks the slot-allocator ranking
+(``"interleaved"`` | ``"hierarchical"`` — `insert.freelist_alloc`).
+All engine configurations are bit-identical in cores AND k-order labels
+on the same streams (tests/test_churn_streams.py).
 
 Batches are padded to power-of-two sizes so the jit cache stays small.
 
@@ -93,9 +101,13 @@ def _require_x64() -> None:
         )
 
 
-def _default_edge_mesh():
-    from ..launch.mesh import make_edge_mesh
+def _default_edge_mesh(vertex_sharding: str = "replicated"):
+    from ..launch.mesh import make_edge_mesh, make_edge_vertex_mesh
 
+    if vertex_sharding == "range":
+        # same 1-D mesh, named for its double duty: the single axis
+        # carries the edge shards AND the vertex ranges
+        return make_edge_vertex_mesh(axis=EDGE_AXIS)
     return make_edge_mesh(axis=EDGE_AXIS)
 
 
@@ -114,6 +126,8 @@ class CoreMaintainer:
     n_levels: int
     engine: str = "unified"     # "unified" | "host" | "sharded"
     mesh: Optional[Any] = None  # sharded engine only; needs a "data" axis
+    vertex_sharding: str = "replicated"  # "replicated" | "range" (sharded)
+    freelist: str = "interleaved"        # "interleaved" | "hierarchical"
     validate: bool = True       # raise on out-of-range endpoints (else mask)
     last_insert_stats: Optional[InsertStats] = None
     last_remove_stats: Optional[RemoveStats] = None
@@ -131,6 +145,24 @@ class CoreMaintainer:
     def __post_init__(self) -> None:
         if self.engine not in _ENGINES:
             raise ValueError(f"unknown engine {self.engine!r}")
+        if self.vertex_sharding not in ("replicated", "range"):
+            raise ValueError(
+                f"unknown vertex_sharding {self.vertex_sharding!r}"
+            )
+        if self.freelist not in ("interleaved", "hierarchical"):
+            raise ValueError(f"unknown freelist {self.freelist!r}")
+        if self.vertex_sharding == "range" and self.engine != "sharded":
+            raise ValueError(
+                "vertex_sharding='range' needs engine='sharded' (the "
+                "other engines keep full vertex state on one device)"
+            )
+        if self.freelist == "hierarchical" and self.engine != "sharded":
+            raise ValueError(
+                "freelist='hierarchical' needs engine='sharded' — the "
+                "ranking only differs across shards (host never uses the "
+                "free-list; on one shard it degenerates to interleaved), "
+                "so accepting it elsewhere would silently do nothing"
+            )
         _require_x64()
         if self.live_ub < 0 or self.hwm_ub < 0:
             # exact initial bounds from the slot table (construction is
@@ -148,7 +180,7 @@ class CoreMaintainer:
                 self.n_edges = jnp.asarray(self.hwm_ub, dtype=jnp.int32)
         if self.engine == "sharded":
             if self.mesh is None:
-                self.mesh = _default_edge_mesh()
+                self.mesh = _default_edge_mesh(self.vertex_sharding)
             if EDGE_AXIS not in dict(self.mesh.shape):
                 raise ValueError(
                     f"sharded engine needs a {EDGE_AXIS!r} mesh axis; got "
@@ -165,19 +197,44 @@ class CoreMaintainer:
                 self._place_sharded()
 
     # -- sharded placement ---------------------------------------------------
+    @property
+    def _n_vertex_pad(self) -> int:
+        """Vertex-state length under range sharding: ``n`` rounded up to
+        a shard multiple (phantom tail vertices hold zeros and are never
+        referenced by an edge or returned by ``cores()``)."""
+        nd = self._n_shards
+        return -(-self.n // nd) * nd
+
+    def _pad_vertex_state(self) -> None:
+        core = jnp.asarray(self.core)
+        label = jnp.asarray(self.label)
+        pad = self._n_vertex_pad - core.shape[0]
+        if pad > 0:
+            self.core = jnp.concatenate(
+                [core, jnp.zeros((pad,), dtype=core.dtype)]
+            )
+            self.label = jnp.concatenate(
+                [label, jnp.zeros((pad,), dtype=label.dtype)]
+            )
+
     def _place_sharded(self) -> None:
         """Commit the slot table sharded over the mesh's data axis and the
-        vertex state replicated, so the jitted shard_map program never
-        reshards its inputs."""
+        vertex state replicated — or range-sharded over the SAME axis
+        under ``vertex_sharding="range"`` — so the jitted shard_map
+        program never reshards its inputs."""
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         esh = NamedSharding(self.mesh, P(EDGE_AXIS))
         rep = NamedSharding(self.mesh, P())
+        vsh = rep
+        if self.vertex_sharding == "range":
+            self._pad_vertex_state()
+            vsh = esh
         self.src = jax.device_put(jnp.asarray(self.src), esh)
         self.dst = jax.device_put(jnp.asarray(self.dst), esh)
         self.valid = jax.device_put(jnp.asarray(self.valid), esh)
-        self.core = jax.device_put(jnp.asarray(self.core), rep)
-        self.label = jax.device_put(jnp.asarray(self.label), rep)
+        self.core = jax.device_put(jnp.asarray(self.core), vsh)
+        self.label = jax.device_put(jnp.asarray(self.label), vsh)
         self.n_edges = jax.device_put(
             jnp.asarray(self.n_edges, dtype=jnp.int32), rep
         )
@@ -191,6 +248,8 @@ class CoreMaintainer:
             fn = make_sharded_apply(
                 self.mesh, self.n, self.n_levels, axis=EDGE_AXIS,
                 local_active=local_active,
+                vertex_sharding=self.vertex_sharding,
+                freelist=self.freelist,
             )
             self._sharded_fns[local_active] = fn
         return fn
@@ -225,6 +284,8 @@ class CoreMaintainer:
         init: str = "host-bz",
         engine: str = "unified",
         mesh: Optional[Any] = None,
+        vertex_sharding: str = "replicated",
+        freelist: str = "interleaved",
         validate: bool = True,
     ) -> "CoreMaintainer":
         _require_x64()  # before any label math that would truncate quietly
@@ -271,6 +332,8 @@ class CoreMaintainer:
             n_levels=n_levels,
             engine=engine,
             mesh=mesh,
+            vertex_sharding=vertex_sharding,
+            freelist=freelist,
             validate=validate,
             slot_cache=edge_slot,
             live_ub=m,
@@ -297,10 +360,12 @@ class CoreMaintainer:
         return self.slot_cache
 
     def cores(self) -> np.ndarray:
-        return np.asarray(self.core)
+        # [: n] drops the phantom pad of range-sharded vertex state (a
+        # no-op everywhere else)
+        return np.asarray(self.core)[: self.n]
 
     def labels(self) -> np.ndarray:
-        return np.asarray(self.label)
+        return np.asarray(self.label)[: self.n]
 
     def order_lt(self, u: int, v: int) -> bool:
         cu, cv = int(self.core[u]), int(self.core[v])
@@ -677,7 +742,10 @@ class CoreMaintainer:
         slot is exactly a ``valid=False`` entry — so tombstones, the
         recycler's state, and the per-shard high-water marks all
         round-trip through the ``valid`` mask (load() recomputes the
-        planning bounds from it, shard-count independent)."""
+        planning bounds from it, shard-count independent). Range-sharded
+        vertex state is saved UNPADDED (``[:n]``), so the checkpoint is
+        also vertex-shard-count independent: a state saved range-sharded
+        over 8 devices reloads replicated on 1 and vice versa."""
         np.savez_compressed(
             path,
             n=self.n,
@@ -686,8 +754,8 @@ class CoreMaintainer:
             dst=np.asarray(self.dst),
             valid=np.asarray(self.valid),
             n_edges=np.asarray(self.n_edges),
-            core=np.asarray(self.core),
-            label=np.asarray(self.label),
+            core=self.cores(),
+            label=self.labels(),
         )
 
     @classmethod
@@ -696,6 +764,8 @@ class CoreMaintainer:
         path: str,
         engine: str = "unified",
         mesh: Optional[Any] = None,
+        vertex_sharding: str = "replicated",
+        freelist: str = "interleaved",
         validate: bool = True,
     ) -> "CoreMaintainer":
         z = np.load(path)
@@ -711,6 +781,8 @@ class CoreMaintainer:
             n_levels=int(z["n"]) + 2,
             engine=engine,
             mesh=mesh,
+            vertex_sharding=vertex_sharding,
+            freelist=freelist,
             validate=validate,
             slot_cache=None,  # lazily rebuilt from the live table
             # live_ub / hwm_ub default to -1: __post_init__ recomputes

@@ -48,6 +48,7 @@ from . import graph_ops as G
 from .insert import freelist_alloc, promotion_fixpoint
 from .order import maybe_renumber
 from .remove import removal_fixpoint
+from .vertex_layout import ReplicatedVertices, VertexLayout
 
 Array = jax.Array
 
@@ -137,27 +138,41 @@ def batch_program(
     n: int,
     n_levels: int,
     axis: str | None = None,
+    layout: VertexLayout | None = None,
+    freelist: str = "interleaved",
 ) -> Tuple[Array, Array, Array, Array, Array, Array, BatchStats]:
     """The ONE mixed-batch program body, shared verbatim by the unified
     engine (``axis=None``: the table arrays are the global slot table)
-    and the sharded engine (``axis`` = mesh axis: the table arrays are
-    this device's shard_map-local shard, per-vertex state replicated).
-    Sharing the body is what guarantees the engines cannot drift.
+    and the sharded engines (``axis`` = mesh axis: the table arrays are
+    this device's shard_map-local shard). Sharing the body is what
+    guarantees the engines cannot drift.
 
     The axis parameter changes exactly three things:
 
     * the free-list allocator ranks dead slots globally from one
       all_gather of the windowed dead masks (O(n_shards * window)
-      replicated bytes — the one per-batch collective whose payload is
-      not O(n) or O(1)), so the batch cumsum still assigns globally
-      unique slots and foreign writes drop out-of-bounds;
+      replicated bytes; ``freelist="hierarchical"`` shrinks that to one
+      scalar per shard at the cost of the interleaved shard-balance
+      property — `insert.freelist_alloc`), so the batch cumsum still
+      assigns globally unique slots and foreign writes drop
+      out-of-bounds;
     * reductions over found-flags / removal masks are completed by a
       psum (an edge lives in exactly one shard, so the psum of the local
       verdicts IS the global verdict — no global sort is materialized);
-    * every fixpoint statistic is psum-completed via the fixpoints' own
-      ``axis`` parameter.
+    * every fixpoint statistic is completed by the vertex ``layout``
+      (core/vertex_layout.py): psum for replicated vertex state — the
+      default, ``layout=None`` builds ``ReplicatedVertices(n, axis)`` —
+      or reduce_scatter to owned vertex ranges for
+      ``RangeShardedVertices``, with only changed-vertex bitmasks
+      crossing the mesh per round (docs/DESIGN.md §4.2).
+
+    ``core``/``label`` are full replicated [n] working values either
+    way; a range-sharded caller gathers its owned slices before calling
+    and re-slices the returned arrays (core/sharded.py).
     """
     capacity = src.shape[0]  # local (windowed) shard length under shard_map
+    if layout is None:
+        layout = ReplicatedVertices(n, axis)
 
     def allsum(x):
         return x if axis is None else jax.lax.psum(x, axis)
@@ -184,7 +199,7 @@ def batch_program(
 
     core_pre_rm = core
     core, label, rm_rounds, hi, dout_same = removal_fixpoint(
-        src, dst, valid, core, label, n, n_levels, axis=axis
+        src, dst, valid, core, label, n, n_levels, layout=layout
     )
     n_dropped = jnp.sum(core != core_pre_rm, dtype=jnp.int32)
 
@@ -205,7 +220,8 @@ def batch_program(
     # out-of-bounds scatter semantics. The host guarantees enough free
     # slots in the active window (api.py), so the slot table recycles
     # tombstones without ever syncing.
-    lpos, iok = freelist_alloc(valid, iok, axis=axis)
+    lpos, iok = freelist_alloc(valid, iok, axis=axis,
+                               hierarchical=(freelist == "hierarchical"))
     src = src.at[lpos].set(ilo.astype(src.dtype), mode="drop")
     dst = dst.at[lpos].set(ihi.astype(dst.dtype), mode="drop")
     valid = valid.at[lpos].set(True, mode="drop")
@@ -218,17 +234,18 @@ def batch_program(
     # O(batch) delta keeps the shared (hi, dout_same) statistics exact for
     # the table with the new edges — same per-edge predicate as the full
     # passes (graph_ops.hi_dout_indicators); the batch is replicated under
-    # sharding, so the delta needs no collective
+    # sharding, so the delta needs no collective (a range-sharded layout
+    # scatters each row into its owner's slice and drops the rest OOB)
     hi_u, hi_v, do_u, do_v = G.hi_dout_indicators(core, label, ilo, ihi, iok)
-    hi = hi.at[ilo].add(hi_u.astype(jnp.int32))
-    hi = hi.at[ihi].add(hi_v.astype(jnp.int32))
-    dout_same = dout_same.at[ilo].add(do_u.astype(jnp.int32))
-    dout_same = dout_same.at[ihi].add(do_v.astype(jnp.int32))
+    hi = layout.add_at(hi, ilo, hi_u.astype(jnp.int32))
+    hi = layout.add_at(hi, ihi, hi_v.astype(jnp.int32))
+    dout_same = layout.add_at(dout_same, ilo, do_u.astype(jnp.int32))
+    dout_same = layout.add_at(dout_same, ihi, do_v.astype(jnp.int32))
 
     core_pre_ins = core
     core, label, ins_rounds, v_plus = promotion_fixpoint(
         src, dst, valid, core, label, ilo, ihi, iok,
-        hi, dout_same, n, n_levels, axis=axis,
+        hi, dout_same, n, n_levels, layout=layout,
     )
     n_promoted = jnp.sum(core != core_pre_ins, dtype=jnp.int32)
 

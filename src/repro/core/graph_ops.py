@@ -10,13 +10,15 @@ Round-level stats are packed into multi-column scatters where profitable
 (§Perf iteration C1; a concatenated single-scatter variant measured WORSE
 — the concat of two edge-sharded streams forces an all-gather reshard).
 
-Every statistic takes an optional ``axis``: inside a ``shard_map`` over
-edge slots, the local segment sums are completed by one ``psum`` over
-that mesh axis, giving the exact global per-vertex statistic on every
-device (vertex state is replicated). With ``axis=None`` (single-device /
-GSPMD) the psum is skipped and the functions are unchanged. This is how
-the sharded engine (core/sharded.py) reuses the exact fixpoint code of
-remove.py / insert.py.
+Every statistic takes an optional ``layout`` (core/vertex_layout.py):
+inside a ``shard_map`` over edge slots the local segment sums are
+COMPLETED by the layout — one ``psum`` over the mesh axis for
+``ReplicatedVertices`` (exact global statistic on every device), one
+``reduce_scatter`` for ``RangeShardedVertices`` (each device receives
+only the vertex range it owns). With ``layout=None`` (single-device /
+GSPMD) completion is the identity and the functions are unchanged. This
+is how the sharded engines reuse the exact fixpoint code of remove.py /
+insert.py regardless of where the vertex state lives.
 """
 from __future__ import annotations
 
@@ -25,11 +27,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from .vertex_layout import VertexLayout
+
 Array = jax.Array
 
 
-def _psum(x: Array, axis: Optional[str]) -> Array:
-    return x if axis is None else jax.lax.psum(x, axis)
+def _complete(x: Array, layout: Optional[VertexLayout]) -> Array:
+    return x if layout is None else layout.complete(x)
 
 
 def _pmax(x: Array, axis: Optional[str]) -> Array:
@@ -48,37 +52,38 @@ def slot_high_water(valid: Array, axis: Optional[str] = None) -> Array:
 
 
 def _seg2(data_to_src: Array, data_to_dst: Array, src: Array, dst: Array,
-          n: int, axis: Optional[str] = None) -> Array:
+          n: int, layout: Optional[VertexLayout] = None) -> Array:
     """Two-direction segment sum. Two LOCAL scatter-adds + elementwise add:
     GSPMD then emits a single all-reduce for the combined [n] result.
     (A concatenated single-scatter variant was measured WORSE — the concat
     of two edge-sharded streams forces an all-gather reshard; §Perf C1.)
-    Under shard_map the all-reduce is the explicit ``psum`` over ``axis``."""
+    Under shard_map the partial result is completed by the vertex layout
+    (psum for replicated state, reduce_scatter for range-sharded)."""
     a = jax.ops.segment_sum(data_to_src, src, num_segments=n)
     b = jax.ops.segment_sum(data_to_dst, dst, num_segments=n)
-    return _psum(a + b, axis)
+    return _complete(a + b, layout)
 
 
 def degree(src: Array, dst: Array, valid: Array, n: int,
-           axis: Optional[str] = None) -> Array:
+           layout: Optional[VertexLayout] = None) -> Array:
     one = valid.astype(jnp.int32)
-    return _seg2(one, one, src, dst, n, axis)
+    return _seg2(one, one, src, dst, n, layout)
 
 
 def count_ge(src: Array, dst: Array, valid: Array, vals: Array, n: int,
-             axis: Optional[str] = None) -> Array:
+             layout: Optional[VertexLayout] = None) -> Array:
     """mcd (Def 3.8): per-vertex count of neighbors w with vals[w] >= vals[v]."""
     to_src = (valid & (vals[dst] >= vals[src])).astype(jnp.int32)
     to_dst = (valid & (vals[src] >= vals[dst])).astype(jnp.int32)
-    return _seg2(to_src, to_dst, src, dst, n, axis)
+    return _seg2(to_src, to_dst, src, dst, n, layout)
 
 
 def count_gt(src: Array, dst: Array, valid: Array, vals: Array, n: int,
-             axis: Optional[str] = None) -> Array:
+             layout: Optional[VertexLayout] = None) -> Array:
     """Per-vertex count of neighbors w with vals[w] > vals[v]."""
     to_src = (valid & (vals[dst] > vals[src])).astype(jnp.int32)
     to_dst = (valid & (vals[src] > vals[dst])).astype(jnp.int32)
-    return _seg2(to_src, to_dst, src, dst, n, axis)
+    return _seg2(to_src, to_dst, src, dst, n, layout)
 
 
 def hi_dout_indicators(
@@ -99,7 +104,7 @@ def hi_dout_indicators(
 
 def hi_and_dout_same(
     src: Array, dst: Array, valid: Array, core: Array, label: Array, n: int,
-    axis: Optional[str] = None,
+    layout: Optional[VertexLayout] = None,
 ):
     """Packed (hi, dout_same) for the insertion round: one [n, 2] result
     (single collective) carries both the higher-core neighbor count and
@@ -111,17 +116,17 @@ def hi_and_dout_same(
     to_dst = jnp.stack(
         [hi_d.astype(jnp.int32), do_d.astype(jnp.int32)], axis=-1
     )
-    out = _psum(
+    out = _complete(
         jax.ops.segment_sum(to_src, src, num_segments=n)
         + jax.ops.segment_sum(to_dst, dst, num_segments=n),
-        axis,
+        layout,
     )
     return out[:, 0], out[:, 1]
 
 
 def mcd_hi_dout(
     src: Array, dst: Array, valid: Array, core: Array, label: Array, n: int,
-    axis: Optional[str] = None,
+    layout: Optional[VertexLayout] = None,
 ):
     """Packed (mcd, hi, dout_same) — one [n, 3] scatter carries the removal
     fixpoint's support count (Def 3.8) together with both promotion-seeding
@@ -145,24 +150,24 @@ def mcd_hi_dout(
         ],
         axis=-1,
     )
-    out = _psum(
+    out = _complete(
         jax.ops.segment_sum(to_src, src, num_segments=n)
         + jax.ops.segment_sum(to_dst, dst, num_segments=n),
-        axis,
+        layout,
     )
     return out[:, 0], out[:, 1], out[:, 2]
 
 
 def count_same_level_after(
     src: Array, dst: Array, valid: Array, core: Array, label: Array, n: int,
-    axis: Optional[str] = None,
+    layout: Optional[VertexLayout] = None,
 ) -> Array:
     """dout within level (part of Def 3.7): neighbors with equal core and a
     larger order label (successors in the k-order DAG at the same level)."""
     same = valid & (core[src] == core[dst])
     to_src = (same & (label[dst] > label[src])).astype(jnp.int32)
     to_dst = (same & (label[src] > label[dst])).astype(jnp.int32)
-    return _seg2(to_src, to_dst, src, dst, n, axis)
+    return _seg2(to_src, to_dst, src, dst, n, layout)
 
 
 def count_same_level_before_in(
@@ -173,24 +178,24 @@ def count_same_level_before_in(
     label: Array,
     mask: Array,
     n: int,
-    axis: Optional[str] = None,
+    layout: Optional[VertexLayout] = None,
 ) -> Array:
     """din* (Def 3.6): same-level order-predecessors that are in ``mask``."""
     same = valid & (core[src] == core[dst])
     to_src = (same & (label[dst] < label[src]) & mask[dst]).astype(jnp.int32)
     to_dst = (same & (label[src] < label[dst]) & mask[src]).astype(jnp.int32)
-    return _seg2(to_src, to_dst, src, dst, n, axis)
+    return _seg2(to_src, to_dst, src, dst, n, layout)
 
 
 def count_same_level_in(
     src: Array, dst: Array, valid: Array, core: Array, mask: Array, n: int,
-    axis: Optional[str] = None,
+    layout: Optional[VertexLayout] = None,
 ) -> Array:
     """Per-vertex count of same-level neighbors inside ``mask``."""
     same = valid & (core[src] == core[dst])
     to_src = (same & mask[dst]).astype(jnp.int32)
     to_dst = (same & mask[src]).astype(jnp.int32)
-    return _seg2(to_src, to_dst, src, dst, n, axis)
+    return _seg2(to_src, to_dst, src, dst, n, layout)
 
 
 def din_and_expand(
@@ -201,7 +206,7 @@ def din_and_expand(
     label: Array,
     rp: Array,
     n: int,
-    axis: Optional[str] = None,
+    layout: Optional[VertexLayout] = None,
 ):
     """Fused FORWARD-wave statistics in ONE scatter-add: din counts
     reached-and-passing k-order predecessors, and frontier growth is
@@ -212,7 +217,7 @@ def din_and_expand(
     fwd_to_src = same & (label[dst] < label[src]) & rp[dst]
     din = _seg2(
         fwd_to_src.astype(jnp.int32), fwd_to_dst.astype(jnp.int32),
-        src, dst, n, axis,
+        src, dst, n, layout,
     )
     return din, din > 0
 
@@ -225,7 +230,7 @@ def expand_forward(
     label: Array,
     frontier: Array,
     n: int,
-    axis: Optional[str] = None,
+    layout: Optional[VertexLayout] = None,
 ) -> Array:
     """One wave of the Forward phase: reach same-level k-order successors of
     ``frontier`` vertices (boolean [n])."""
@@ -234,6 +239,6 @@ def expand_forward(
     hit_src = same & frontier[dst] & (label[dst] < label[src])
     out = _seg2(
         hit_src.astype(jnp.int32), hit_dst.astype(jnp.int32), src, dst, n,
-        axis,
+        layout,
     )
     return out > 0

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from . import graph_ops as G
 from .order import place_block
+from .vertex_layout import ReplicatedVertices, VertexLayout
 
 Array = jax.Array
 
@@ -46,6 +47,7 @@ def freelist_alloc(
     valid: Array,
     iok: Array,
     axis: str | None = None,
+    hierarchical: bool = False,
 ) -> Tuple[Array, Array]:
     """Recycling slot allocator: every dead slot IS the free-list.
 
@@ -70,6 +72,19 @@ def freelist_alloc(
     batch ranks that land in its shard, and drops the rest via the
     sentinel position — the same OOB-drop trick as the stat scatters.
 
+    ``hierarchical`` replaces that O(n_shards * window) mask exchange
+    with an all_gather of ONE scalar per shard (the per-shard free
+    count): each device already knows its local dead ranks, and the
+    exclusive prefix sum of the gathered counts offsets them into a
+    global ranking. The ranking becomes (shard, local slot) —
+    shard-by-shard instead of interleaved — so it gives up the
+    §4.1 shard-balance property (fresh ground fills the lowest shard's
+    window before touching the next) in exchange for O(n_shards) bytes
+    per batch; the LIVE EDGE SET and the maintained core/label state are
+    unaffected (core numbers never depend on slot positions), which the
+    churn harness pins by running both rankings against each other. On
+    one shard both paths are ascending slot id, i.e. identical.
+
     Returns ``(lpos, iok)``: ``lpos[b]`` is this shard's local slot for
     insert lane ``b`` (``== capacity`` when the lane is masked or owned
     by another shard — out-of-bounds, so ``.at[lpos].set(mode="drop")``
@@ -83,6 +98,16 @@ def freelist_alloc(
     if axis is None:
         total_free = jnp.sum(dead, dtype=jnp.int32)
         drank = jnp.cumsum(dead.astype(jnp.int32), dtype=jnp.int32) - 1
+    elif hierarchical:
+        my_free = jnp.sum(dead, dtype=jnp.int32)
+        counts = jax.lax.all_gather(my_free, axis)  # [n_shards] scalars
+        me = jax.lax.axis_index(axis)
+        total_free = jnp.sum(counts, dtype=jnp.int32)
+        # my dead slot with local free-rank r has global rank
+        # (free slots on shards before me) + r: (shard, slot) order
+        base = (jnp.cumsum(counts, dtype=jnp.int32) - counts)[me]
+        drank = base + jnp.cumsum(dead.astype(jnp.int32),
+                                  dtype=jnp.int32) - 1
     else:
         all_dead = jax.lax.all_gather(dead, axis)  # [n_shards, capacity]
         me = jax.lax.axis_index(axis)
@@ -148,7 +173,7 @@ def promotion_fixpoint(
     dout_same: Array,
     n: int,
     n_levels: int,
-    axis: str | None = None,
+    layout: VertexLayout | None = None,
 ) -> Tuple[Array, Array, Array, Array]:
     """Promotion rounds for pending edges already written into the table.
 
@@ -156,16 +181,22 @@ def promotion_fixpoint(
     state including the pending edges; each round recomputes them after its
     commit, so the caller-provided pair is consumed exactly once. This is
     how the unified engine shares one statistics pass between the removal
-    fixpoint and the first promotion round.
+    fixpoint and the first promotion round. Under a range-sharded layout
+    the pair is OWNED-sized (the caller completed it with the layout).
 
-    With ``axis`` the table arrays are shard_map-local edge shards and all
-    neighborhood statistics are psum-completed over that mesh axis; the
-    pending-edge arrays (``new_src``/``new_dst``/``new_ok``) and all
-    per-vertex state stay replicated, so the seed scatter and the label
+    With a ``layout`` the table arrays are shard_map-local edge shards and
+    all neighborhood statistics are completed by it (psum for replicated
+    vertex state, reduce_scatter to owned vertex ranges for
+    range-sharded); candidacy/eviction decisions then run on the owned
+    slices and come back as all_gathered bitmasks. The pending-edge
+    arrays (``new_src``/``new_dst``/``new_ok``) and the working
+    core/label stay replicated values, so the seed scatter and the label
     placement need no collective.
 
     Returns ``(core, label, rounds, v_plus_mask)``.
     """
+    if layout is None:
+        layout = ReplicatedVertices(n)
 
     def round_cond(state):
         return state[2]
@@ -182,16 +213,17 @@ def promotion_fixpoint(
             jnp.zeros(n, dtype=jnp.int32).at[root].add(new_ok.astype(jnp.int32))
             > 0
         )
-        # certificate violators are potential hidden roots
-        seed = seed | ((hi + dout_same) > core)
+        # certificate violators are potential hidden roots (the stats live
+        # on their owners; only the violator bitmask crosses the mesh)
+        seed = seed | layout.gather_mask((hi + dout_same) > layout.own(core))
         seed = seed | promoted_prev
 
         reach, passing = _forward_reach(
-            src, dst, valid, core, label, seed, hi, dout_same, n, axis
+            src, dst, valid, core, label, seed, hi, dout_same, n, layout
         )
         cand0 = reach & passing
         cand, evict_round = _evict_fixpoint(
-            src, dst, valid, core, cand0, hi, n, axis
+            src, dst, valid, core, cand0, hi, n, layout
         )
 
         new_core = core + cand.astype(jnp.int32)
@@ -205,7 +237,7 @@ def promotion_fixpoint(
                             n_levels=n_levels, round_key=evict_round)
         # fused (hi, dout_same) for the NEXT round — one scatter-add (C1)
         new_hi, new_dout = G.hi_and_dout_same(
-            src, dst, valid, new_core, label, n, axis
+            src, dst, valid, new_core, label, n, layout
         )
         # Continue only while the k-order certificate is violated somewhere:
         # the passing-set fixpoint bootstraps from ``hi + dout_same > core``
@@ -213,7 +245,9 @@ def promotion_fixpoint(
         # candidates (docs/DESIGN.md §2.3) — this skips the seed
         # implementation's trailing confirm round (a full forward + evict
         # + stats pass) entirely.
-        changed = jnp.any((new_hi + new_dout) > new_core)
+        changed = layout.any_owned(
+            (new_hi + new_dout) > layout.own(new_core)
+        )
         return (
             new_core,
             label,
@@ -244,13 +278,20 @@ def _forward_reach(
     hi: Array,
     dout_same: Array,
     n: int,
-    axis: str | None = None,
+    layout: VertexLayout | None = None,
 ) -> Tuple[Array, Array]:
     """Monotone fixpoint of gated forward expansion.
 
-    Returns (reach, passing) boolean masks. ``passing`` uses the optimistic
-    test with din counted over reached-and-passing predecessors only.
+    Returns (reach, passing) boolean masks (full [n], replicated).
+    ``passing`` uses the optimistic test with din counted over
+    reached-and-passing predecessors only. Under a range-sharded layout
+    each wave moves one reduce_scatter (din, owned) plus the two wave
+    bitmasks; the loop state stays full/replicated so the edge pass can
+    index it at arbitrary endpoints.
     """
+    if layout is None:
+        layout = ReplicatedVertices(n)
+    core_own = layout.own(core)
 
     def cond(state):
         _, _, changed = state
@@ -261,13 +302,15 @@ def _forward_reach(
         rp = reach & passing
         # one fused scatter per wave: din and frontier growth (C1)
         din, grow = G.din_and_expand(src, dst, valid, core, label, rp, n,
-                                     axis)
-        new_passing = (hi + dout_same + din) > core
-        new_reach = reach | grow
+                                     layout)
+        new_passing = layout.gather_mask(
+            (hi + dout_same + din) > core_own
+        )
+        new_reach = reach | layout.gather_mask(grow)
         changed = jnp.any(new_reach != reach) | jnp.any(new_passing != passing)
         return new_reach, new_passing, changed
 
-    init_pass = (hi + dout_same) > core
+    init_pass = layout.gather_mask((hi + dout_same) > core_own)
     reach, passing, _ = jax.lax.while_loop(
         cond, body, (seed, init_pass, jnp.bool_(True))
     )
@@ -282,14 +325,19 @@ def _evict_fixpoint(
     cand: Array,
     hi: Array,
     n: int,
-    axis: str | None = None,
+    layout: VertexLayout | None = None,
 ) -> Tuple[Array, Array]:
     """Greatest fixpoint of the candidate support test (sound + complete
     for any starting superset of V*).
 
-    Returns (surviving candidates, eviction round per vertex). The round
-    numbers order the Backward tail placement (never-evicted keep 0).
+    Returns (surviving candidates, eviction round per vertex), both full
+    [n]. The round numbers order the Backward tail placement
+    (never-evicted keep 0); they are maintained replicated from the
+    gathered candidate masks, so no integer array crosses the mesh.
     """
+    if layout is None:
+        layout = ReplicatedVertices(n)
+    core_own = layout.own(core)
 
     def cond(state):
         _, _, _, changed = state
@@ -298,8 +346,8 @@ def _evict_fixpoint(
     def body(state):
         cand, evict_round, rnd, _ = state
         support = hi + G.count_same_level_in(src, dst, valid, core, cand, n,
-                                             axis)
-        new_cand = cand & (support > core)
+                                             layout)
+        new_cand = cand & layout.gather_mask(support > core_own)
         newly_evicted = cand & ~new_cand
         evict_round = jnp.where(newly_evicted, rnd, evict_round)
         return new_cand, evict_round, rnd + 1, jnp.any(new_cand != cand)

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from . import graph_ops as G
 from .order import place_block
+from .vertex_layout import ReplicatedVertices, VertexLayout
 
 Array = jax.Array
 
@@ -52,7 +53,7 @@ def removal_fixpoint(
     n: int,
     n_levels: int,
     share_stats: bool = True,
-    axis: str | None = None,
+    layout: VertexLayout | None = None,
 ) -> Tuple[Array, Array, Array, Array, Array]:
     """Run the decrease-only mcd fixpoint on an already-tombstoned table.
 
@@ -62,13 +63,21 @@ def removal_fixpoint(
     (the last round drops nothing and therefore leaves core/label
     untouched) — the unified engine seeds its promotion phase from them
     for free. Removal-only callers pass ``share_stats=False`` to scatter
-    just the 1-column mcd (the returned hi/dout_same stay zero).
+    just the 1-column mcd (the returned hi/dout_same stay zero, and are
+    OWNED-sized under a range-sharded layout).
 
-    With ``axis`` the edge arrays are shard_map-local shards of the slot
-    table and every statistic is completed by a psum over that mesh axis;
-    core/label are replicated, so all devices run the loop in lockstep on
-    identical (replicated) per-vertex state.
+    With a ``layout`` the edge arrays are shard_map-local shards of the
+    slot table and every statistic is completed by the layout: a psum
+    over the mesh axis for replicated vertex state (every device sees
+    the full statistic), a reduce_scatter for range-sharded state (each
+    device sees only its owned vertex range and decides drops there; the
+    drop BITMASK is all_gathered so the commit — core -1 and the label
+    tail placement — replays identically everywhere). Either way the
+    working core/label stay replicated values, so all devices run the
+    loop in lockstep.
     """
+    if layout is None:
+        layout = ReplicatedVertices(n)
 
     def cond(state):
         return state[2]
@@ -77,18 +86,19 @@ def removal_fixpoint(
         core, label, _, rounds, hi, dout_same = state
         if share_stats:
             mcd, hi, dout_same = G.mcd_hi_dout(
-                src, dst, valid, core, label, n, axis
+                src, dst, valid, core, label, n, layout
             )
         else:
-            mcd = G.count_ge(src, dst, valid, core, n, axis)
-        drop = (mcd < core) & (core > 0)
+            mcd = G.count_ge(src, dst, valid, core, n, layout)
+        core_own = layout.own(core)
+        drop = layout.gather_mask((mcd < core_own) & (core_own > 0))
         new_core = core - drop.astype(jnp.int32)
         # place this round's droppers at the tail of their new level
         label = place_block(new_core, label, drop, at_head=False,
                             n_levels=n_levels)
         return new_core, label, jnp.any(drop), rounds + 1, hi, dout_same
 
-    z = jnp.zeros(n, dtype=jnp.int32)
+    z = layout.zeros()
     # rounds counts body executions (the final one observes no drops)
     core, label, _, rounds, hi, dout_same = jax.lax.while_loop(
         cond, body, (core, label, jnp.bool_(True), jnp.int32(0), z, z)

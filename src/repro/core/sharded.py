@@ -1,11 +1,15 @@
 """Multi-device core maintenance via shard_map (beyond-paper scaling).
 
 The paper targets one shared-memory node; here the edge slots are sharded
-across the mesh's ``data`` axis (vertex state is replicated — it is the
-small side: n << m for the paper's graphs and batches). Every neighborhood
-statistic becomes  local segment_sum over the device's edge shard + one
-``psum``. The fixpoint loops are unchanged — bulk-synchronous rounds are
-mesh-agnostic, which is exactly why the reformulation scales to pods.
+across the mesh's ``data`` axis, and the VERTEX state's home is a
+pluggable layout (core/vertex_layout.py): replicated by default (the
+small side: n << m for the paper's graphs and batches — every
+neighborhood statistic becomes a local segment_sum over the device's
+edge shard + one ``psum``) or range-sharded for wide meshes
+(``vertex_sharding="range"``: one ``reduce_scatter`` per statistic +
+bit-packed frontier masks, docs/DESIGN.md §4.2). The fixpoint loops are
+unchanged — bulk-synchronous rounds are mesh-agnostic, which is exactly
+why the reformulation scales to pods.
 
 ``make_sharded_apply`` is the full order-based maintenance engine behind
 ``CoreMaintainer(engine="sharded")``: the exact ``engine.apply_batch``
@@ -24,10 +28,12 @@ The older core-only kernels (``make_sharded_remove`` /
 ``make_sharded_insert_round``) are kept as minimal building blocks for
 experiments that maintain core numbers without k-order labels.
 
-For 1000+-node deployments the vertex state would be range-sharded too
-(psum -> reduce_scatter over vertex ranges + all_gather of the frontier
-bitmask); that variant is exercised by the dry-run configs in
-launch/dryrun.py (arch `coremaint`).
+For 1000+-node deployments the replicated-vertex assumption breaks; that
+is what ``vertex_sharding="range"`` is for: the vertex state itself is
+range-sharded over the SAME mesh axis (core/vertex_layout.py —
+``RangeShardedVertices``), every fixpoint statistic completes with one
+``reduce_scatter`` into its owner's range instead of a psum, and only
+changed-vertex BITMASKS cross the mesh per round (docs/DESIGN.md §4.2).
 """
 from __future__ import annotations
 
@@ -40,13 +46,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from .engine import batch_program
+from .vertex_layout import make_layout
 
 Array = jax.Array
 
 
 def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
                        axis: str = "data",
-                       local_active: int | None = None):
+                       local_active: int | None = None,
+                       vertex_sharding: str = "replicated",
+                       freelist: str = "interleaved"):
     """Build the jitted sharded mixed-batch engine over ``mesh``.
 
     The returned function has the same signature and semantics as
@@ -54,7 +63,25 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
     statics: ``(src, dst, valid, core, label, n_edges, ins_u, ins_v,
     ins_ok, rm_u, rm_v, rm_ok) -> (src, dst, valid, core, label, n_edges,
     stats)``. ``src``/``dst``/``valid`` must be sharded along ``axis``
-    (capacity divisible by the axis size); everything else is replicated.
+    (capacity divisible by the axis size); everything else is replicated —
+    except ``core``/``label`` under ``vertex_sharding="range"``, which
+    are range-sharded along the same axis (padded to a shard multiple,
+    api.py owns the padding).
+
+    ``vertex_sharding`` selects the vertex layout (vertex_layout.py):
+
+    * ``"replicated"`` — every device keeps full [n] vertex state; each
+      statistic costs one psum (O(n) received per device per round);
+    * ``"range"`` — device ``i`` OWNS vertex range ``i``: the kernel
+      all_gathers its core/label slice ONCE at entry into full working
+      copies, the fixpoints complete statistics with reduce_scatter into
+      owner ranges (O(n / n_shards) received per device) and exchange
+      only bit-packed changed-vertex masks per round, and the kernel
+      returns each device's owned slice. Integer arithmetic end to end,
+      so the result is BIT-identical to every other engine.
+
+    ``freelist`` picks the slot-allocator ranking (``"interleaved"`` |
+    ``"hierarchical"`` — `insert.freelist_alloc`).
 
     ``local_active`` is the per-shard high-water window — the sharded
     analogue of the unified engine's ``active_cap``. Slicing a SHARDED
@@ -76,43 +103,68 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
     * tombstoning — each device masks only its own slots (no cross-device
       slot indices ever exist);
     * slot allocation — ``insert.freelist_alloc``: dead slots are ranked
-      lowest-local-index-first interleaved across shards (one all_gather
-      of the windowed dead masks); each device writes the batch-cumsum
-      ranks that land in its own shard and drops the rest via
-      out-of-bounds scatter semantics;
-    * fixpoints — the shared removal/promotion loops with ``axis=…``:
-      local scatter-adds + one psum per round, per-vertex state
-      replicated, so every device runs the loop in lockstep;
-    * labels/renumber — pure vertex-state (replicated) computation.
+      globally (interleaved across shards from one all_gather of the
+      windowed dead masks, or shard-by-shard from per-shard scalar free
+      counts under ``freelist="hierarchical"``); each device writes the
+      batch-cumsum ranks that land in its own shard and drops the rest
+      via out-of-bounds scatter semantics;
+    * fixpoints — the shared removal/promotion loops with ``layout=…``:
+      local scatter-adds completed by the vertex layout each round (one
+      psum when replicated; one reduce_scatter + bit-packed mask
+      gathers when range-sharded), so every device runs the loop in
+      lockstep on identical replicated working core/label values;
+    * labels/renumber — pure vertex-state computation on those
+      replicated working values — no collective.
     """
+    n_shards = dict(mesh.shape)[axis]
+    # None = replicated: batch_program builds its own ReplicatedVertices
+    # over the edge axis, and the kernel skips the state gather/slice.
+    # Anything else resolves (and validates) through the layout factory.
+    layout = (
+        None if vertex_sharding == "replicated"
+        else make_layout(vertex_sharding, n, axis, n_shards)
+    )
+
     def _kernel(src, dst, valid, core, label, n_edges,
                 ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok):
         # the UNIFIED engine's program body, verbatim, over this device's
         # local shard: its axis parameter turns every table reduction and
-        # fixpoint statistic into local-scatter + psum (engine.py). The
-        # per-shard window is a LOCAL slice (cf. engine.apply_batch's
-        # active_cap prefix): the all-invalid tail is spliced back on.
+        # fixpoint statistic into local-scatter + layout completion
+        # (engine.py). The per-shard window is a LOCAL slice (cf.
+        # engine.apply_batch's active_cap prefix): the all-invalid tail
+        # is spliced back on.
+        if layout is not None:
+            # ONE state gather per batch: owned slices -> full replicated
+            # working copies for the edge passes (per-ROUND traffic stays
+            # reduce_scatter + bitmasks; docs/DESIGN.md §4.2)
+            core = layout.gather_state(core)
+            label = layout.gather_state(label)
         w = src.shape[0] if local_active is None else local_active
         full_src, full_dst, full_valid = src, dst, valid
         src, dst, valid, core, label, n_edges, stats = batch_program(
             src[:w], dst[:w], valid[:w], core, label, n_edges,
             ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok,
-            n, n_levels, axis=axis,
+            n, n_levels, axis=axis, layout=layout, freelist=freelist,
         )
         src = jnp.concatenate([src, full_src[w:]])
         dst = jnp.concatenate([dst, full_dst[w:]])
         valid = jnp.concatenate([valid, full_valid[w:]])
+        if layout is not None:
+            # back to owned slices — a local slice, no collective
+            core = layout.own(core)
+            label = layout.own(label)
         return src, dst, valid, core, label, n_edges, stats
 
+    vspec = P() if layout is None else P(axis)
     shardmapped = shard_map(
         _kernel,
         mesh=mesh,
         in_specs=(
             P(axis), P(axis), P(axis),          # src, dst, valid
-            P(), P(), P(),                      # core, label, n_edges
+            vspec, vspec, P(),                  # core, label, n_edges
             P(), P(), P(), P(), P(), P(),       # batch (replicated)
         ),
-        out_specs=(P(axis), P(axis), P(axis), P(), P(), P(), P()),
+        out_specs=(P(axis), P(axis), P(axis), vspec, vspec, P(), P()),
         check_vma=False,
     )
     return jax.jit(shardmapped, donate_argnums=(0, 1, 2, 3, 4, 5))

@@ -1,0 +1,241 @@
+"""Pluggable vertex-state layout — who holds each per-vertex statistic.
+
+Every maintenance round is "edge pass -> per-vertex decision -> commit".
+The edge pass produces PARTIAL per-vertex statistics (each device scatters
+only its own edge shard); the layout decides how those partials are
+completed and where the per-vertex decision runs:
+
+* ``ReplicatedVertices`` — every device keeps the full ``[n]`` vertex
+  state and partial stats complete with one ``psum`` over the edge axis
+  (``axis=None`` degenerates to the single-device identity). This is the
+  original sharded-engine layout: per-round cross-device vertex traffic
+  is O(n * n_devices) words delivered (every device receives every
+  completed statistic).
+
+* ``RangeShardedVertices`` — device ``i`` OWNS the contiguous vertex
+  range ``[i * n_owned, (i+1) * n_owned)``. Partial stats complete with
+  ONE ``psum_scatter`` (reduce_scatter): each device receives only its
+  owned slice, O(n) words total across the mesh instead of O(n * d).
+  The per-vertex decision (drop mask, passing test, eviction test) runs
+  on the owned slice, and only the resulting CHANGED-VERTEX mask —
+  bit-packed, 1 bit per vertex — is ``all_gather``ed back so every
+  device can apply the identical commit. The Order algorithm's commits
+  are deterministic functions of ``(core, label, mask)`` (core moves by
+  exactly +-1 on the mask; ``order.place_block`` relabels from the mask),
+  so the mask IS the frontier delta: no vertex-sized integer array ever
+  crosses the mesh inside a round. Per round the traffic is
+  O(n) stat words (reduce_scatter) + O(n * d) mask BITS — the quantity
+  the layout tests pin via the accounting below (docs/DESIGN.md §4.2).
+
+All arithmetic is integer, reduce_scatter is an exact sum, and the
+gathered masks are bitwise identical on every device — which is why the
+range-sharded engine stays BIT-identical (cores AND k-order labels) to
+the replicated ones (``tests/test_churn_streams.py``).
+
+A 2-axis factorization (edge shards x vertex ranges on distinct mesh
+axes) plugs in by psum-ing partials over the pure-edge axes before the
+``psum_scatter`` over the vertex axis; the shipped engine reuses ONE
+axis for both (``launch/mesh.py::make_edge_vertex_mesh``), which keeps
+every collective single-axis.
+
+Traffic accounting
+------------------
+``record_traffic()`` captures, at TRACE time, one record per collective
+a layout method issues, with the payload each device RECEIVES (computed
+from static shapes). ``lax.while_loop`` bodies trace exactly once, so a
+recorded fixpoint yields the PER-ROUND collective budget — the object
+the acceptance tests assert O(n + frontier-bits * d) on, without running
+a single batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from contextlib import contextmanager
+from typing import Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Traffic:
+    """One collective issued by a layout method (trace-time record)."""
+
+    op: str          # "psum" | "reduce_scatter" | "gather_mask" | ...
+    recv_bytes: int  # payload each participating device receives
+
+
+_LOG: Optional[List[Traffic]] = None
+
+
+@contextmanager
+def record_traffic() -> Iterator[List[Traffic]]:
+    """Capture the collectives issued while tracing under this context.
+
+    Nested use is not supported (the inner context would steal the outer
+    one's records); the tests trace one program per context.
+    """
+    global _LOG
+    prev, _LOG = _LOG, []
+    try:
+        yield _LOG
+    finally:
+        _LOG = prev
+
+
+def _note(op: str, recv_bytes: int) -> None:
+    if _LOG is not None:
+        _LOG.append(Traffic(op, int(recv_bytes)))
+
+
+def _nbytes(x: Array) -> int:
+    return int(x.size) * x.dtype.itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicatedVertices:
+    """Full ``[n]`` vertex state on every device; stats complete by psum
+    over the edge axis (identity when ``axis`` is None)."""
+
+    n: int
+    axis: Optional[str] = None
+    kind: str = dataclasses.field(default="replicated", init=False)
+
+    @property
+    def n_owned(self) -> int:
+        return self.n
+
+    def complete(self, stats: Array) -> Array:
+        """Partial per-vertex stats -> completed stats, full ``[n, ...]``."""
+        if self.axis is None:
+            return stats
+        _note("psum", _nbytes(stats))
+        return jax.lax.psum(stats, self.axis)
+
+    def own(self, full: Array) -> Array:
+        return full
+
+    def gather_state(self, owned: Array) -> Array:
+        return owned
+
+    def gather_mask(self, owned_mask: Array) -> Array:
+        return owned_mask
+
+    def any_owned(self, owned_mask: Array) -> Array:
+        return jnp.any(owned_mask)
+
+    def zeros(self, dtype=jnp.int32) -> Array:
+        return jnp.zeros(self.n, dtype=dtype)
+
+    def add_at(self, owned: Array, idx: Array, vals: Array) -> Array:
+        return owned.at[idx].add(vals)
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeShardedVertices:
+    """Device ``i`` owns vertices ``[i * n_owned, (i+1) * n_owned)``.
+
+    ``axis`` is the mesh axis that carries both the edge shards and the
+    vertex ranges (shared-axis layout, `launch/mesh.py`). ``n`` is padded
+    up to ``n_pad = n_owned * n_shards``; phantom vertices past ``n``
+    only ever hold zeros (no edge references them, ``own`` pads with
+    zeros, completed stats there are 0), so they can never enter a mask
+    or a level computation — everything vertex-global (``place_block``,
+    ``renumber``) runs on the exact ``[:n]`` prefix.
+    """
+
+    n: int
+    axis: str
+    n_shards: int
+    kind: str = dataclasses.field(default="range", init=False)
+
+    @property
+    def n_owned(self) -> int:
+        return -(-self.n // self.n_shards)
+
+    @property
+    def n_pad(self) -> int:
+        return self.n_owned * self.n_shards
+
+    def _offset(self) -> Array:
+        return jax.lax.axis_index(self.axis) * self.n_owned
+
+    def _pad(self, full: Array) -> Array:
+        pad = self.n_pad - full.shape[0]
+        if pad == 0:
+            return full
+        return jnp.concatenate(
+            [full, jnp.zeros((pad,) + full.shape[1:], dtype=full.dtype)]
+        )
+
+    def complete(self, stats: Array) -> Array:
+        """Partial ``[n, ...]`` stats -> exact OWNED slice ``[n_owned, ...]``
+        via one reduce_scatter: each device receives O(n / n_shards) words
+        — the whole mesh moves O(n), not O(n * n_shards)."""
+        padded = self._pad(stats)
+        _note("reduce_scatter",
+              _nbytes(padded) // self.n_shards)
+        return jax.lax.psum_scatter(
+            padded, self.axis, scatter_dimension=0, tiled=True
+        )
+
+    def own(self, full: Array) -> Array:
+        """Slice a replicated full array down to this device's range (no
+        collective — the full copy is already local)."""
+        return jax.lax.dynamic_slice_in_dim(
+            self._pad(full), self._offset(), self.n_owned
+        )
+
+    def gather_state(self, owned: Array) -> Array:
+        """Owned slices -> full replicated ``[n]`` array. Used ONCE per
+        batch (kernel entry) for ``core``/``label`` — never inside a
+        round, where only masks cross the mesh."""
+        _note("gather_state", self.n_pad * owned.dtype.itemsize)
+        return jax.lax.all_gather(owned, self.axis, tiled=True)[: self.n]
+
+    def gather_mask(self, owned_mask: Array) -> Array:
+        """Owned bool mask -> full replicated ``[n]`` mask, BIT-packed on
+        the wire: each device receives ``n_shards * ceil(n_owned / 8)``
+        bytes — the frontier bitmask exchange of docs/DESIGN.md §4.2."""
+        packed = jnp.packbits(owned_mask)  # [ceil(n_owned / 8)] uint8
+        _note("gather_mask", self.n_shards * int(packed.shape[0]))
+        g = jax.lax.all_gather(packed, self.axis)  # [n_shards, bytes]
+        bits = jnp.unpackbits(g, axis=1, count=self.n_owned)
+        return bits.reshape(-1)[: self.n].astype(jnp.bool_)
+
+    def any_owned(self, owned_mask: Array) -> Array:
+        """Replicated ``any`` over the disjoint owned slices (scalar
+        collective)."""
+        _note("psum_scalar", 4)
+        return jax.lax.psum(
+            jnp.any(owned_mask).astype(jnp.int32), self.axis
+        ) > 0
+
+    def zeros(self, dtype=jnp.int32) -> Array:
+        return jnp.zeros(self.n_owned, dtype=dtype)
+
+    def add_at(self, owned: Array, idx: Array, vals: Array) -> Array:
+        """Scatter-add replicated batch contributions into the owned
+        slice; rows owned by other devices fall off the end and drop
+        (the same OOB trick as the sharded table writes)."""
+        loc = idx - self._offset()
+        safe = jnp.where((loc >= 0) & (loc < self.n_owned), loc,
+                         self.n_owned)
+        return owned.at[safe].add(vals, mode="drop")
+
+
+VertexLayout = ReplicatedVertices | RangeShardedVertices
+
+
+def make_layout(kind: str, n: int, axis: Optional[str],
+                n_shards: int = 1) -> VertexLayout:
+    """Factory keyed by the public ``vertex_sharding`` name."""
+    if kind == "replicated":
+        return ReplicatedVertices(n, axis)
+    if kind == "range":
+        if axis is None:
+            raise ValueError("range-sharded vertex state needs a mesh axis")
+        return RangeShardedVertices(n, axis, n_shards)
+    raise ValueError(f"unknown vertex layout {kind!r}")

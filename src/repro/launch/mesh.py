@@ -28,6 +28,29 @@ def make_edge_mesh(n_devices=None, axis: str = "data"):
     return jax.make_mesh((ndev,), (axis,))
 
 
+# The axis that carries the vertex RANGE sharding of
+# ``CoreMaintainer(engine="sharded", vertex_sharding="range")``. It is
+# the edge axis: vertex range i lives with edge shard i, so every
+# statistic completes with a single-axis reduce_scatter and the frontier
+# bitmasks with a single-axis all_gather (core/vertex_layout.py).
+VERTEX_AXIS = "data"
+
+
+def make_edge_vertex_mesh(n_devices=None, axis: str = VERTEX_AXIS):
+    """Mesh for the range-sharded vertex layout: one axis shared by the
+    edge-slot sharding AND the vertex range sharding.
+
+    Sharing the axis is deliberate — device i owns edge shard i and
+    vertex range i, so ``RangeShardedVertices.complete`` is one
+    ``psum_scatter`` over this axis and no cross-axis collective exists.
+    A genuine 2-axis factorization (edge shards x vertex ranges, e.g.
+    re-using ``make_production_mesh``'s ``data`` x ``model``) plugs in
+    by psum-ing partial stats over the pure-edge axes before the
+    scatter; the shipped engine does not need it and keeps every
+    collective single-axis."""
+    return make_edge_mesh(n_devices, axis)
+
+
 HW = {
     "name": "TPU v5e",
     "peak_flops_bf16": 197e12,     # per chip

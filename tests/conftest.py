@@ -12,6 +12,13 @@ import os
 
 import numpy as np
 
+if os.environ.get("REQUIRE_HYPOTHESIS"):
+    # CI sets this so a missing hypothesis install fails collection
+    # LOUDLY instead of silently dropping the fuzz variants of the
+    # churn/property tests to their deterministic parametrizations
+    # (tests define the @given tests only when hypothesis imports).
+    import hypothesis  # noqa: F401  (ImportError here IS the signal)
+
 try:
     from hypothesis import settings as _hsettings
 

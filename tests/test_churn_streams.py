@@ -1,13 +1,22 @@
 """Cross-engine churn harness: long balanced insert/remove/re-insert
-streams through ALL THREE engines, pinned bit-identical to each other and
-to the sequential oracle — the differential lockdown of the in-program
-free-list slot recycler and the per-shard high-water window.
+streams through EVERY engine configuration — host / unified / sharded,
+plus the sharded engine's range-sharded vertex layout and hierarchical
+free-list variants — pinned bit-identical to each other and to the
+sequential oracle. This is the differential lockdown of the in-program
+free-list slot recycler, the per-shard high-water window, and the
+vertex-layout layer.
 
-The claims under test (docs/DESIGN.md §4.1):
+The claims under test (docs/DESIGN.md §4.1–§4.2):
 
 * heavy recycled-slot traffic (just-removed re-insertion, same-batch
   remove+re-insert, duplicate dirt) never desynchronizes cores OR
-  k-order labels between host / unified / sharded;
+  k-order labels between any two engine configurations — including
+  ``vertex_sharding="range"``, whose per-round exchanges are owned
+  stat slices + bitmasks rather than full vertex arrays;
+* the hierarchical free-list ranking (one scalar per shard instead of
+  the windowed dead-mask all_gather) allocates the IDENTICAL LIVE EDGE
+  SET — and, core numbers never depending on slot positions, identical
+  cores and labels — as the interleaved ranking;
 * with flat live edges, capacity never grows after warm-up and the slot
   high-water mark is bounded by the running max of the live count (the
   recycling invariant) — host-side defrag never fires on device engines;
@@ -40,6 +49,17 @@ from repro.graph.generators import erdos_renyi
 from repro.graph.stream import churn_stream
 
 ENGINES = ("host", "unified", "sharded")
+
+# every engine CONFIGURATION the differential harness pins bit-identical:
+# the three engines plus the sharded engine's vertex-layout / free-list
+# variants (CoreMaintainer kwargs per name)
+CONFIGS = {
+    "host": dict(engine="host"),
+    "unified": dict(engine="unified"),
+    "sharded": dict(engine="sharded"),
+    "vertex_range": dict(engine="sharded", vertex_sharding="range"),
+    "freelist_hier": dict(engine="sharded", freelist="hierarchical"),
+}
 
 
 def _norm(edges) -> list:
@@ -77,8 +97,8 @@ def _run_churn_differential(m0, graph_seed, stream_seed, n_batches,
     g = erdos_renyi(n, m0, seed=graph_seed)
     cap = 4 * g.m + 64
     ms = {
-        e: CoreMaintainer.from_graph(g, capacity=cap, engine=e)
-        for e in ENGINES
+        e: CoreMaintainer.from_graph(g, capacity=cap, **kw)
+        for e, kw in CONFIGS.items()
     }
     caps0 = {e: m.capacity for e, m in ms.items()}
     oracle = OrderCoreMaintainer(n, g.edge_array())
@@ -100,7 +120,9 @@ def _run_churn_differential(m0, graph_seed, stream_seed, n_batches,
         u = ms["unified"]
         np.testing.assert_array_equal(u.cores(), expect)
         np.testing.assert_array_equal(u.cores(), oracle.core)
-        for e in ("host", "sharded"):
+        for e in CONFIGS:
+            if e == "unified":
+                continue
             np.testing.assert_array_equal(u.cores(), ms[e].cores(), e)
             np.testing.assert_array_equal(u.labels(), ms[e].labels(), e)
         for e, st_ in stats.items():
@@ -110,7 +132,10 @@ def _run_churn_differential(m0, graph_seed, stream_seed, n_batches,
         # the running max of the live count (holes are filled first)
         assert int(stats["unified"].high_water) <= hwm_bound
         assert int(u.n_edges) == u.live_edges == len(live)
-        assert ms["sharded"].live_edges == len(live)
+        # both free-list rankings allocate the identical live set (slot
+        # POSITIONS may differ across shards; the keys may not)
+        for e in ("sharded", "vertex_range", "freelist_hier"):
+            assert ms[e].edge_slot.keys() == u.edge_slot.keys(), e
     # balanced stream + generous initial capacity: nothing may grow
     for e, m in ms.items():
         assert m.capacity == caps0[e], e
@@ -155,16 +180,17 @@ if HAVE_HYPOTHESIS:
         _run_churn_differential(*params)
 
 
-@pytest.mark.parametrize("engine", ENGINES)
-def test_capacity_flat_under_balanced_churn(engine):
+@pytest.mark.parametrize("config", tuple(CONFIGS))
+def test_capacity_flat_under_balanced_churn(config):
     """Acceptance: >= 50 balanced 50/50 batches on a TIGHT table. After
-    warm-up, capacity never grows on any engine; on the device engines
-    the in-program recycler absorbs every batch without a single
-    host-side defrag, and the high-water mark stays pinned at the live
-    count."""
+    warm-up, capacity never grows on any engine configuration; on the
+    device engines the in-program recycler absorbs every batch without a
+    single host-side defrag, and the high-water mark stays pinned at the
+    live count."""
+    engine = CONFIGS[config]["engine"]
     g = erdos_renyi(60, 240, seed=2)
     cap = int(g.m * 1.4) + 32  # far less than the stream's gross inserts
-    m = CoreMaintainer.from_graph(g, capacity=cap, engine=engine)
+    m = CoreMaintainer.from_graph(g, capacity=cap, **CONFIGS[config])
     cap_after_warmup = None
     defrags = 0
     orig = CoreMaintainer._defrag_to
@@ -200,13 +226,13 @@ def test_capacity_flat_under_balanced_churn(engine):
     np.testing.assert_array_equal(m.cores(), expect)
 
 
-@pytest.mark.parametrize("engine", ("unified", "sharded"))
-def test_masked_rows_consume_nothing(engine):
+@pytest.mark.parametrize("config", ("unified", "sharded", "vertex_range"))
+def test_masked_rows_consume_nothing(config):
     """validate=False drops out-of-range rows BEFORE they can touch the
     device: no slot is consumed, live_edges and n_edges are unchanged,
     and the batch stats count only the surviving rows."""
     g = erdos_renyi(40, 120, seed=5)
-    m = CoreMaintainer.from_graph(g, capacity=512, engine=engine,
+    m = CoreMaintainer.from_graph(g, capacity=512, **CONFIGS[config],
                                   validate=False)
     live0 = m.live_edges
     ne0 = int(m.n_edges)
@@ -230,8 +256,10 @@ def test_masked_rows_consume_nothing(engine):
 def test_save_load_after_recycling_roundtrip(tmp_path):
     """Tombstones, the implicit free-list, and the high-water bookkeeping
     all ride in the ``valid`` mask: a reload mid-churn (holes present)
-    restores an equivalent maintainer under every engine and continues
-    bit-identically."""
+    restores an equivalent maintainer under every engine configuration
+    and continues bit-identically. The second leg saves FROM the
+    range-sharded reader — its padded, vertex-sharded core/label must
+    checkpoint unpadded and reload under any layout."""
     g = erdos_renyi(50, 180, seed=1)
     m = CoreMaintainer.from_graph(g, capacity=1024)
     live = set(_norm(g.edge_array()))
@@ -245,14 +273,19 @@ def test_save_load_after_recycling_roundtrip(tmp_path):
     _effective_delta(live, np.zeros((0, 2), np.int64), holes)
     p = str(tmp_path / "churned.npz")
     m.save(p)
-    loaded = {e: CoreMaintainer.load(p, engine=e) for e in ENGINES}
+    loaded = {e: CoreMaintainer.load(p, **kw) for e, kw in CONFIGS.items()}
     val = np.asarray(m.valid)
     hwm = int(np.nonzero(val)[0].max()) + 1
     for e, m2 in loaded.items():
         assert m2.live_ub == len(live), e
         assert m2.hwm_ub == hwm, e  # recomputed exactly from the mask
         assert m2.edge_slot == m.edge_slot, e
-    # everyone (original + 3 reloads) continues identically
+    # fragmented save FROM range-sharded vertex state, reload replicated
+    p2 = str(tmp_path / "churned_vs.npz")
+    loaded["vertex_range"].save(p2)
+    loaded["reload_of_vs"] = CoreMaintainer.load(p2)
+    assert loaded["reload_of_vs"].core.shape == (g.n,)  # pad stripped
+    # everyone (original + reloads) continues identically
     ev = events[3]
     for m2 in (m, *loaded.values()):
         m2.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
@@ -363,10 +396,15 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
     from repro.graph.stream import churn_stream
 
     assert len(jax.devices()) == 8, jax.devices()
-    g = erdos_renyi(80, 320, seed=1)
+    g = erdos_renyi(83, 320, seed=1)  # n % 8 != 0: vertex pad in play
     ms = CoreMaintainer.from_graph(g, capacity=645, engine="sharded")
     mu = CoreMaintainer.from_graph(g, capacity=645, engine="unified")
+    mv = CoreMaintainer.from_graph(g, capacity=645, engine="sharded",
+                                   vertex_sharding="range")
+    mh = CoreMaintainer.from_graph(g, capacity=645, engine="sharded",
+                                   freelist="hierarchical")
     assert ms.capacity % 8 == 0, ms.capacity
+    assert mv.core.shape == (88,)  # padded to the shard multiple
 
     def norm(edges):
         return [(int(min(a, b)), int(max(a, b))) for a, b in edges]
@@ -374,28 +412,46 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
     live = set(norm(g.edge_array()))
     events = list(churn_stream(g, 8, 24, seed=5))
     for ev in events[:6]:
-        ms.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
-        mu.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+        for m in (ms, mu, mv, mh):
+            m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
         for e in norm(ev.removals):
             live.discard(e)
         for e in norm(ev.edges):
             if e[0] != e[1]:
                 live.add(e)
+        # range-sharded vertex state and the hierarchical free-list stay
+        # bit-identical to the replicated interleaved engine mid-stream
+        np.testing.assert_array_equal(mu.cores(), mv.cores())
+        np.testing.assert_array_equal(mu.labels(), mv.labels())
+        np.testing.assert_array_equal(mu.cores(), mh.cores())
+        np.testing.assert_array_equal(mu.labels(), mh.labels())
+        # hierarchical ranks (shard, slot): slot POSITIONS may differ
+        # from the interleaved engines, the LIVE SET may not
+        assert mh.edge_slot.keys() == mu.edge_slot.keys()
     # flat live edges on a tight table: nobody grew, slots recycled
     assert ms.capacity == 648 and mu.capacity == 645
     assert int(ms.last_batch_stats.n_recycled) > 0
+    assert int(mh.last_batch_stats.n_recycled) > 0
     # per-shard window bound: densest shard stays far under local cap
     assert int(ms.last_batch_stats.high_water) <= -(-len(live) // 8) + 24
 
     p = "/tmp/churn_8dev_roundtrip.npz"
     ms.save(p)
+    pv = "/tmp/churn_8dev_roundtrip_vs.npz"
+    mv.save(pv)  # fragmented save FROM range-sharded (padded) state
     m2 = CoreMaintainer.load(p, engine="sharded")   # re-strided over 8
     m3 = CoreMaintainer.load(p, engine="unified")
+    m4 = CoreMaintainer.load(pv, engine="sharded", vertex_sharding="range")
+    m5 = CoreMaintainer.load(pv, engine="unified")
+    assert m5.core.shape == (g.n,)  # the phantom pad never leaks out
     assert m2.edge_slot.keys() == m3.edge_slot.keys() == {
         tuple(e) for e in live
     }
+    assert m4.edge_slot.keys() == m5.edge_slot.keys() == {
+        tuple(e) for e in live
+    }
     for ev in events[6:]:
-        for m in (ms, mu, m2, m3):
+        for m in (ms, mu, mv, mh, m2, m3, m4, m5):
             m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
         for e in norm(ev.removals):
             live.discard(e)
@@ -405,7 +461,9 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
     expect = bz_from_csr(build_csr(g.n, np.asarray(sorted(live),
                                                    dtype=np.int64)))
     for name, m in (("sharded", ms), ("unified", mu),
-                    ("reload-sharded", m2), ("reload-unified", m3)):
+                    ("vertex-range", mv), ("freelist-hier", mh),
+                    ("reload-sharded", m2), ("reload-unified", m3),
+                    ("reload-vertex-range", m4), ("reload-vs-unified", m5)):
         np.testing.assert_array_equal(m.cores(), expect, err_msg=name)
         np.testing.assert_array_equal(m.labels(), ms.labels(), err_msg=name)
         assert m.live_edges == len(live), name
