@@ -180,7 +180,8 @@ def fig7_stability(n_batches: int = 8, batch: int = 128) -> List[Row]:
     return rows
 
 
-STREAM_ENGINES = ("host", "unified", "sharded", "vertex_sharded")
+STREAM_ENGINES = ("host", "unified", "sharded", "vertex_sharded",
+                  "frontier_sparse")
 
 # engine NAME -> CoreMaintainer kwargs (the bench rows are engine
 # configurations, not just engine strings, since PR 4's vertex layouts)
@@ -189,6 +190,8 @@ ENGINE_SPECS: Dict[str, Dict[str, str]] = {
     "unified": {"engine": "unified"},
     "sharded": {"engine": "sharded"},
     "vertex_sharded": {"engine": "sharded", "vertex_sharding": "range"},
+    "frontier_sparse": {"engine": "sharded", "vertex_sharding": "range",
+                        "frontier_exchange": "sparse"},
 }
 
 
@@ -202,16 +205,19 @@ def stream_bench(
     engines: Sequence[str] = STREAM_ENGINES,
     scaling_device_counts: Sequence[int] = (),
     vertex_scaling_device_counts: Sequence[int] = (),
+    frontier_scaling_device_counts: Sequence[int] = (),
 ) -> Dict[str, object]:
     """Mixed insert+remove stream on the SAME events: the unified one-call
     engine, the mesh-sharded engine (replicated AND range-sharded vertex
-    state) vs the seed two-call path (host-dict dedup + separate
-    insert/remove programs). Reports batches/sec per engine and writes
-    ``out_json``. With ``scaling_device_counts`` /
-    ``vertex_scaling_device_counts`` the sharded / vertex-sharded engine
-    is re-timed in subprocesses with that many forced host devices (the
-    paper's time-vs-workers scaling axis; ``sharded_device_scaling``) —
-    recorded as ``sharded_scaling`` / ``vertex_scaling`` rows with their
+    state, bitmask AND sparse frontier exchange) vs the seed two-call
+    path (host-dict dedup + separate insert/remove programs). Reports
+    batches/sec per engine and writes ``out_json``. With
+    ``scaling_device_counts`` / ``vertex_scaling_device_counts`` /
+    ``frontier_scaling_device_counts`` the sharded / vertex-sharded /
+    sparse-frontier engine is re-timed in subprocesses with that many
+    forced host devices (the paper's time-vs-workers scaling axis;
+    ``sharded_device_scaling``) — recorded as ``sharded_scaling`` /
+    ``vertex_scaling`` / ``frontier_scaling`` rows with their
     ``n_devices``.
 
     Note on jit-cache hygiene: the unified engine's ``active_cap`` is a
@@ -295,6 +301,13 @@ def stream_bench(
             vertex_sharding="range",
         )
         _write()
+    if frontier_scaling_device_counts:
+        result["frontier_scaling"] = sharded_device_scaling(
+            frontier_scaling_device_counts, n=n, m=m,
+            n_batches=min(n_batches, 10), batch_size=batch_size,
+            vertex_sharding="range", frontier_exchange="sparse",
+        )
+        _write()
     assert agree, "engines diverged on the same stream"
     return result
 
@@ -309,10 +322,12 @@ from repro.graph.stream import mixed_stream
 
 n, m, n_batches, batch_size, warmup = map(int, sys.argv[1:6])
 vertex_sharding = sys.argv[6]
+frontier_exchange = sys.argv[7]
 g = erdos_renyi(n, m, seed=12)
 events = list(mixed_stream(g, n_batches + warmup, batch_size, seed=17))
 mt = CoreMaintainer.from_graph(g, capacity=4 * m, engine="sharded",
-                               vertex_sharding=vertex_sharding)
+                               vertex_sharding=vertex_sharding,
+                               frontier_exchange=frontier_exchange)
 for ev in events[:warmup]:
     mt.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
 mt.core.block_until_ready()
@@ -324,6 +339,7 @@ dt = time.perf_counter() - t0
 print(json.dumps({
     "n_devices": len(jax.devices()),
     "vertex_sharding": vertex_sharding,
+    "frontier_exchange": frontier_exchange,
     "n_batches": n_batches,
     "seconds": dt,
     "batches_per_s": n_batches / dt,
@@ -339,16 +355,18 @@ def sharded_device_scaling(
     batch_size: int = 128,
     warmup: int = 3,
     vertex_sharding: str = "replicated",
+    frontier_exchange: str = "bitmask",
 ) -> List[Dict[str, float]]:
-    """Time the sharded engine (replicated or range-sharded vertex state)
-    under forced host device counts (one subprocess per count — XLA
-    fixes the device count at init). On a single-core CPU container the
-    host devices share one core, so this measures collective overhead
-    rather than speedup; on real multi-core or multi-chip hardware the
-    same harness reports the paper's time-vs-workers curve — and the
-    ``vertex_sharding="range"`` sweep is the one whose per-round vertex
-    traffic stays O(n + frontier bits * d) as d grows (docs/DESIGN.md
-    §4.2)."""
+    """Time the sharded engine (replicated or range-sharded vertex state,
+    bitmask or sparse frontier exchange) under forced host device counts
+    (one subprocess per count — XLA fixes the device count at init). On
+    a single-core CPU container the host devices share one core, so this
+    measures collective overhead rather than speedup; on real multi-core
+    or multi-chip hardware the same harness reports the paper's
+    time-vs-workers curve — the ``vertex_sharding="range"`` sweep is the
+    one whose per-round vertex traffic stays O(n + frontier bits * d) as
+    d grows (docs/DESIGN.md §4.2), and ``frontier_exchange="sparse"``
+    shrinks the frontier term to O(cap * d) words (§4.3)."""
     src_path = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src")
     )
@@ -365,7 +383,7 @@ def sharded_device_scaling(
         out = subprocess.run(
             [sys.executable, "-c", _SCALING_SCRIPT,
              str(n), str(m), str(n_batches), str(batch_size), str(warmup),
-             vertex_sharding],
+             vertex_sharding, frontier_exchange],
             capture_output=True,
             text=True,
             env=env,

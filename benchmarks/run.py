@@ -94,6 +94,7 @@ def main() -> None:
         out_json=args.stream_json,
         scaling_device_counts=() if args.quick else (1, 2, 4),
         vertex_scaling_device_counts=() if args.quick else (1, 2, 4),
+        frontier_scaling_device_counts=() if args.quick else (1, 2, 4),
     )
     for eng in cm.STREAM_ENGINES:
         _emit(
@@ -106,9 +107,11 @@ def main() -> None:
         0.0,
         f"unified_vs_host={sb['speedup_unified_vs_host']:.2f}x;"
         f"sharded_vs_host={sb['speedup_sharded_vs_host']:.2f}x;"
+        f"frontier_sparse_vs_host="
+        f"{sb['speedup_frontier_sparse_vs_host']:.2f}x;"
         f"agree={sb['engines_agree']}",
     )
-    for key in ("sharded_scaling", "vertex_scaling"):
+    for key in ("sharded_scaling", "vertex_scaling", "frontier_scaling"):
         for row in sb.get(key, ()):
             _emit(
                 f"stream/{key}/dev{row['n_devices']}",

@@ -49,9 +49,20 @@ def main():
              "owns a vertex range; reduce_scatter stats + bit-packed "
              "frontier masks — docs/DESIGN.md §4.2)",
     )
+    ap.add_argument(
+        "--frontier-exchange", default="bitmask",
+        choices=("bitmask", "sparse"),
+        help="how changed-vertex masks cross the mesh under "
+             "--vertex-sharding range: bitmask (n/8 bytes per shard per "
+             "round) or sparse (compacted frontier indices in a static "
+             "capacity bucket, falling back to the bitmask per round on "
+             "overflow — docs/DESIGN.md §4.3)",
+    )
     args = ap.parse_args()
     if args.vertex_sharding == "range" and args.engine != "sharded":
         ap.error("--vertex-sharding range needs --engine sharded")
+    if args.frontier_exchange == "sparse" and args.vertex_sharding != "range":
+        ap.error("--frontier-exchange sparse needs --vertex-sharding range")
 
     g = erdos_renyi(args.n, args.m, seed=0)
     state_path = args.ckpt
@@ -60,7 +71,8 @@ def main():
     start_batch = 0
     if os.path.exists(state_path) and os.path.exists(meta_path):
         m = CoreMaintainer.load(state_path, engine=args.engine,
-                                vertex_sharding=args.vertex_sharding)
+                                vertex_sharding=args.vertex_sharding,
+                                frontier_exchange=args.frontier_exchange)
         start_batch = int(open(meta_path).read().strip()) + 1
         print(f"[resume] restored checkpoint, continuing at batch "
               f"{start_batch}")
@@ -68,11 +80,13 @@ def main():
         m = CoreMaintainer.from_graph(
             g, capacity=8 * args.m, engine=args.engine,
             vertex_sharding=args.vertex_sharding,
+            frontier_exchange=args.frontier_exchange,
         )
     if args.engine == "sharded":
         import jax
         print(f"[mesh] edge slots sharded over {len(jax.devices())} "
-              f"device(s), vertex state {args.vertex_sharding}")
+              f"device(s), vertex state {args.vertex_sharding}, "
+              f"frontier exchange {args.frontier_exchange}")
 
     stream = mixed_stream if args.mixed else synthetic_stream
     events = list(stream(g, args.batches, args.batch_size, seed=42))

@@ -35,8 +35,14 @@ each statistic costs one psum, O(n) received per device per round) or
 ``"range"`` (core/label range-sharded over the same axis: statistics
 complete by reduce_scatter into owner ranges, O(n / n_devices) received
 per device, and only changed-vertex bitmasks cross the mesh per round —
-docs/DESIGN.md §4.2). ``freelist`` picks the slot-allocator ranking
-(``"interleaved"`` | ``"hierarchical"`` — `insert.freelist_alloc`).
+docs/DESIGN.md §4.2). ``frontier_exchange="sparse"`` shrinks that mask
+traffic further for the paper's tiny affected sets (its Fig. 5):
+compacted frontier INDICES in a static ``frontier_cap`` bucket (planned
+per batch like ``active_cap``, or pinned explicitly), with an
+in-program per-round fallback to the bitmask on overflow — bit-identical
+results in every regime (docs/DESIGN.md §4.3). ``freelist`` picks the
+slot-allocator ranking (``"interleaved"`` | ``"hierarchical"`` —
+`insert.freelist_alloc`).
 All engine configurations are bit-identical in cores AND k-order labels
 on the same streams (tests/test_churn_streams.py).
 
@@ -71,11 +77,17 @@ EDGE_AXIS = "data"  # mesh axis the sharded engine shards edge slots over
 _ENGINES = ("unified", "host", "sharded")
 
 
-def _pad_pow2(x: np.ndarray, fill: int) -> np.ndarray:
-    b = max(1, len(x))
+def _pow2_roundup(need: int) -> int:
+    """Smallest power of two >= need — the one bucketing idiom behind
+    batch padding, the active window, and the frontier cap."""
     p = 1
-    while p < b:
+    while p < need:
         p *= 2
+    return p
+
+
+def _pad_pow2(x: np.ndarray, fill: int) -> np.ndarray:
+    p = _pow2_roundup(max(1, len(x)))
     out = np.full(p, fill, dtype=np.int32)
     out[: len(x)] = x
     return out
@@ -128,6 +140,9 @@ class CoreMaintainer:
     mesh: Optional[Any] = None  # sharded engine only; needs a "data" axis
     vertex_sharding: str = "replicated"  # "replicated" | "range" (sharded)
     freelist: str = "interleaved"        # "interleaved" | "hierarchical"
+    frontier_exchange: str = "bitmask"   # "bitmask" | "sparse" (range only)
+    frontier_cap: int = 0       # sparse index-buffer capacity; 0 = planned
+    #                             per batch as a static pow2 bucket
     validate: bool = True       # raise on out-of-range endpoints (else mask)
     last_insert_stats: Optional[InsertStats] = None
     last_remove_stats: Optional[RemoveStats] = None
@@ -138,11 +153,15 @@ class CoreMaintainer:
     #                             high-water mark (-1: compute from valid)
     _last_window: int = dataclasses.field(default=0, repr=False)
     host_renumbered: bool = False  # last host-path call triggered a renumber
-    _sharded_fns: Dict[int, Callable] = dataclasses.field(
+    _sharded_fns: Dict[Tuple[int, int], Callable] = dataclasses.field(
         default_factory=dict, repr=False
     )
 
     def __post_init__(self) -> None:
+        # the FULL engine-configuration matrix is validated here, at
+        # construction, each message naming the offending field —
+        # a bad combination must never survive to surface as an opaque
+        # trace-time error inside make_sharded_apply / the layout layer
         if self.engine not in _ENGINES:
             raise ValueError(f"unknown engine {self.engine!r}")
         if self.vertex_sharding not in ("replicated", "range"):
@@ -151,6 +170,16 @@ class CoreMaintainer:
             )
         if self.freelist not in ("interleaved", "hierarchical"):
             raise ValueError(f"unknown freelist {self.freelist!r}")
+        if self.frontier_exchange not in ("bitmask", "sparse"):
+            raise ValueError(
+                f"unknown frontier_exchange {self.frontier_exchange!r}"
+            )
+        if self.mesh is not None and self.engine != "sharded":
+            raise ValueError(
+                f"mesh= is only consumed by engine='sharded' (got "
+                f"engine={self.engine!r}) — a silently ignored mesh "
+                "would hide a misconfigured deployment"
+            )
         if self.vertex_sharding == "range" and self.engine != "sharded":
             raise ValueError(
                 "vertex_sharding='range' needs engine='sharded' (the "
@@ -162,6 +191,24 @@ class CoreMaintainer:
                 "ranking only differs across shards (host never uses the "
                 "free-list; on one shard it degenerates to interleaved), "
                 "so accepting it elsewhere would silently do nothing"
+            )
+        if (self.frontier_exchange == "sparse"
+                and self.vertex_sharding != "range"):
+            raise ValueError(
+                "frontier_exchange='sparse' needs vertex_sharding="
+                "'range' (only the range layout exchanges frontier "
+                "masks; the other layouts would silently ignore it)"
+            )
+        if self.frontier_cap < 0:
+            raise ValueError(
+                f"frontier_cap must be >= 0 (0 = plan automatically), "
+                f"got {self.frontier_cap}"
+            )
+        if self.frontier_cap > 0 and self.frontier_exchange != "sparse":
+            raise ValueError(
+                f"frontier_cap={self.frontier_cap} is only consumed by "
+                "frontier_exchange='sparse' — the bitmask exchange "
+                "would silently ignore it"
             )
         _require_x64()
         if self.live_ub < 0 or self.hwm_ub < 0:
@@ -239,30 +286,56 @@ class CoreMaintainer:
             jnp.asarray(self.n_edges, dtype=jnp.int32), rep
         )
 
-    def _get_sharded_fn(self, local_active: int) -> Callable:
-        """Jitted sharded program for one per-shard window bucket. The
-        buckets are powers of two (one cache entry per bucket, same jit
-        hygiene as the unified engine's ``active_cap``)."""
-        fn = self._sharded_fns.get(local_active)
+    def _get_sharded_fn(self, local_active: int,
+                        frontier_cap: int = 0) -> Callable:
+        """Jitted sharded program for one (per-shard window, frontier
+        cap) bucket pair. Both are powers of two (one cache entry per
+        pair, same jit hygiene as the unified engine's ``active_cap``)."""
+        key = (local_active, frontier_cap)
+        fn = self._sharded_fns.get(key)
         if fn is None:
             fn = make_sharded_apply(
                 self.mesh, self.n, self.n_levels, axis=EDGE_AXIS,
                 local_active=local_active,
                 vertex_sharding=self.vertex_sharding,
                 freelist=self.freelist,
+                frontier_exchange=self.frontier_exchange,
+                frontier_cap=frontier_cap,
             )
-            self._sharded_fns[local_active] = fn
+            self._sharded_fns[key] = fn
         return fn
 
     # -- capacity planning ---------------------------------------------------
     def _window(self, b_ins: int) -> int:
         """Pow2 bucket of the per-shard active window covering the
         high-water bound plus this batch, clamped to the shard size."""
-        need = max(16, self.hwm_ub + b_ins + 1)
-        window = 1
-        while window < need:
-            window *= 2
-        return min(window, self._local_cap)
+        return min(_pow2_roundup(max(16, self.hwm_ub + b_ins + 1)),
+                   self._local_cap)
+
+    def _frontier_bucket(self, b_pad: int) -> int:
+        """Static pow2 capacity of the sparse frontier index buffer for a
+        batch padded to ``b_pad`` lanes (0 when the exchange is off).
+
+        Deterministic in the batch BUCKET — which already keys a trace —
+        so a stream with stable batch sizes never recompiles mid-stream
+        for the frontier cap, exactly like ``active_cap``/``local_active``
+        bucket planning. The heuristic covers a few cascade multiples of
+        the batch (the paper's Fig. 5: the affected set per edit is tiny,
+        so per-round frontiers rarely outrun the batch size); a
+        miss-sized cap costs only the in-program bitmask fallback round —
+        never correctness — so no sync or exact bound is needed here.
+        Clamped to the pow2 roof of the owned range, past which the
+        sparse buffer cannot beat the bitmask anyway (docs/DESIGN.md
+        §4.3 crossover)."""
+        if self.frontier_exchange != "sparse":
+            return 0
+        if self.frontier_cap > 0:
+            return self.frontier_cap
+        cap = _pow2_roundup(max(32, 4 * b_pad))
+        n_owned = -(-self._n_vertex_pad // self._n_shards)
+        while cap // 2 >= n_owned:
+            cap //= 2
+        return cap
 
     @property
     def _n_shards(self) -> int:
@@ -286,6 +359,8 @@ class CoreMaintainer:
         mesh: Optional[Any] = None,
         vertex_sharding: str = "replicated",
         freelist: str = "interleaved",
+        frontier_exchange: str = "bitmask",
+        frontier_cap: int = 0,
         validate: bool = True,
     ) -> "CoreMaintainer":
         _require_x64()  # before any label math that would truncate quietly
@@ -334,6 +409,8 @@ class CoreMaintainer:
             mesh=mesh,
             vertex_sharding=vertex_sharding,
             freelist=freelist,
+            frontier_exchange=frontier_exchange,
+            frontier_cap=frontier_cap,
             validate=validate,
             slot_cache=edge_slot,
             live_ub=m,
@@ -491,8 +568,11 @@ class CoreMaintainer:
             )
             if self.engine == "sharded":
                 # the per-shard window is sliced INSIDE the shard_map
-                # kernel (slicing the sharded buffer here would reshard)
-                out = self._get_sharded_fn(window)(*args)
+                # kernel (slicing the sharded buffer here would reshard);
+                # the sparse frontier cap is a second static bucket keyed
+                # off the padded batch size (0 = exchange off)
+                fcap = self._frontier_bucket(max(len(iu), len(ru)))
+                out = self._get_sharded_fn(window, fcap)(*args)
             else:
                 out = apply_batch(*args, self.n, self.n_levels, window)
         (
@@ -766,6 +846,8 @@ class CoreMaintainer:
         mesh: Optional[Any] = None,
         vertex_sharding: str = "replicated",
         freelist: str = "interleaved",
+        frontier_exchange: str = "bitmask",
+        frontier_cap: int = 0,
         validate: bool = True,
     ) -> "CoreMaintainer":
         z = np.load(path)
@@ -783,6 +865,8 @@ class CoreMaintainer:
             mesh=mesh,
             vertex_sharding=vertex_sharding,
             freelist=freelist,
+            frontier_exchange=frontier_exchange,
+            frontier_cap=frontier_cap,
             validate=validate,
             slot_cache=None,  # lazily rebuilt from the live table
             # live_ub / hwm_ub default to -1: __post_init__ recomputes

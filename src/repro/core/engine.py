@@ -163,8 +163,13 @@ def batch_program(
       (core/vertex_layout.py): psum for replicated vertex state — the
       default, ``layout=None`` builds ``ReplicatedVertices(n, axis)`` —
       or reduce_scatter to owned vertex ranges for
-      ``RangeShardedVertices``, with only changed-vertex bitmasks
-      crossing the mesh per round (docs/DESIGN.md §4.2).
+      ``RangeShardedVertices``, with only changed-vertex masks crossing
+      the mesh per round: bit-packed (docs/DESIGN.md §4.2) or, when the
+      layout carries a ``frontier_cap``, compacted to a fixed index
+      bucket with an in-program bitmask fallback on overflow (§4.3).
+      The program body never sees which representation moved — it only
+      calls ``layout.gather_mask`` — which is why the sparse exchange
+      concentrates entirely in the layout layer.
 
     ``core``/``label`` are full replicated [n] working values either
     way; a range-sharded caller gathers its owned slices before calling

@@ -188,7 +188,10 @@ def promotion_fixpoint(
     all neighborhood statistics are completed by it (psum for replicated
     vertex state, reduce_scatter to owned vertex ranges for
     range-sharded); candidacy/eviction decisions then run on the owned
-    slices and come back as all_gathered bitmasks. The pending-edge
+    slices and come back as all_gathered masks — bit-packed, or sparse
+    compacted indices with a per-round overflow fallback when the layout
+    carries a ``frontier_cap`` (docs/DESIGN.md §4.3); this code only
+    ever sees ``layout.gather_mask``. The pending-edge
     arrays (``new_src``/``new_dst``/``new_ok``) and the working
     core/label stay replicated values, so the seed scatter and the label
     placement need no collective.

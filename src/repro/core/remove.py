@@ -71,10 +71,12 @@ def removal_fixpoint(
     over the mesh axis for replicated vertex state (every device sees
     the full statistic), a reduce_scatter for range-sharded state (each
     device sees only its owned vertex range and decides drops there; the
-    drop BITMASK is all_gathered so the commit — core -1 and the label
-    tail placement — replays identically everywhere). Either way the
-    working core/label stay replicated values, so all devices run the
-    loop in lockstep.
+    drop mask is all_gathered — bit-packed, or as compacted frontier
+    indices with an in-program overflow fallback when the layout carries
+    a ``frontier_cap`` (docs/DESIGN.md §4.3) — so the commit — core -1
+    and the label tail placement — replays identically everywhere).
+    Either way the working core/label stay replicated values, so all
+    devices run the loop in lockstep.
     """
     if layout is None:
         layout = ReplicatedVertices(n)

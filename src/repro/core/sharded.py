@@ -33,7 +33,11 @@ is what ``vertex_sharding="range"`` is for: the vertex state itself is
 range-sharded over the SAME mesh axis (core/vertex_layout.py —
 ``RangeShardedVertices``), every fixpoint statistic completes with one
 ``reduce_scatter`` into its owner's range instead of a psum, and only
-changed-vertex BITMASKS cross the mesh per round (docs/DESIGN.md §4.2).
+changed-vertex BITMASKS cross the mesh per round (docs/DESIGN.md §4.2)
+— or, under ``frontier_exchange="sparse"``, compacted frontier INDICES
+in a fixed ``frontier_cap`` bucket with a per-round bitmask fallback on
+overflow (§4.3), shrinking mask traffic from O(n * d / 8) bytes to
+O(cap * d) words when the affected set is tiny (paper Fig. 5).
 """
 from __future__ import annotations
 
@@ -55,7 +59,9 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
                        axis: str = "data",
                        local_active: int | None = None,
                        vertex_sharding: str = "replicated",
-                       freelist: str = "interleaved"):
+                       freelist: str = "interleaved",
+                       frontier_exchange: str = "bitmask",
+                       frontier_cap: int = 0):
     """Build the jitted sharded mixed-batch engine over ``mesh``.
 
     The returned function has the same signature and semantics as
@@ -82,6 +88,16 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
 
     ``freelist`` picks the slot-allocator ranking (``"interleaved"`` |
     ``"hierarchical"`` — `insert.freelist_alloc`).
+
+    ``frontier_exchange`` picks how the per-round changed-vertex masks
+    cross the mesh under ``vertex_sharding="range"``: ``"bitmask"`` (the
+    §4.2 packed all_gather, O(n / 8) bytes per shard) or ``"sparse"``
+    (the §4.3 compacted-index exchange: ``frontier_cap`` global indices
+    per shard, count-prefixed and sentinel-padded, O(cap * d) words per
+    round with a per-round lax.cond falling back to the bitmask when any
+    shard's frontier overflows the cap — bit-identical either way).
+    ``frontier_cap`` is STATIC: one jitted engine per cap bucket, like
+    ``local_active`` (api.py plans the pow2 bucket).
 
     ``local_active`` is the per-shard high-water window — the sharded
     analogue of the unified engine's ``active_cap``. Slicing a SHARDED
@@ -117,12 +133,36 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
       replicated working values — no collective.
     """
     n_shards = dict(mesh.shape)[axis]
+    if frontier_exchange not in ("bitmask", "sparse"):
+        raise ValueError(
+            f"unknown frontier_exchange {frontier_exchange!r} "
+            "(expected 'bitmask' or 'sparse')"
+        )
+    if frontier_exchange == "sparse" and vertex_sharding != "range":
+        raise ValueError(
+            "frontier_exchange='sparse' needs vertex_sharding='range' "
+            "(the replicated layout exchanges no frontier masks)"
+        )
+    if frontier_exchange == "sparse" and frontier_cap < 1:
+        raise ValueError(
+            f"frontier_exchange='sparse' needs frontier_cap >= 1, got "
+            f"{frontier_cap}"
+        )
+    if frontier_exchange != "sparse" and frontier_cap != 0:
+        raise ValueError(
+            f"frontier_cap={frontier_cap} is only consumed by "
+            "frontier_exchange='sparse' — the bitmask exchange would "
+            "silently ignore it"
+        )
     # None = replicated: batch_program builds its own ReplicatedVertices
     # over the edge axis, and the kernel skips the state gather/slice.
     # Anything else resolves (and validates) through the layout factory.
     layout = (
         None if vertex_sharding == "replicated"
-        else make_layout(vertex_sharding, n, axis, n_shards)
+        else make_layout(
+            vertex_sharding, n, axis, n_shards,
+            frontier_cap if frontier_exchange == "sparse" else None,
+        )
     )
 
     def _kernel(src, dst, valid, core, label, n_edges,
@@ -136,9 +176,20 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
         if layout is not None:
             # ONE state gather per batch: owned slices -> full replicated
             # working copies for the edge passes (per-ROUND traffic stays
-            # reduce_scatter + bitmasks; docs/DESIGN.md §4.2)
+            # reduce_scatter + frontier masks; docs/DESIGN.md §4.2-§4.3)
             core = layout.gather_state(core)
             label = layout.gather_state(label)
+        if local_active is not None and local_active > src.shape[0]:
+            # an oversized window (e.g. sized from the GLOBAL high-water
+            # mark instead of the per-shard one) would slice past the
+            # shard and silently splice a SHORT table back together —
+            # refuse loudly instead of corrupting the slot table
+            raise ValueError(
+                f"local_active={local_active} exceeds the per-shard "
+                f"capacity {src.shape[0]} — the window must be sized "
+                "from the PER-SHARD high-water mark (capacity / "
+                "n_shards at most), not the global slot count"
+            )
         w = src.shape[0] if local_active is None else local_active
         full_src, full_dst, full_valid = src, dst, valid
         src, dst, valid, core, label, n_edges, stats = batch_program(

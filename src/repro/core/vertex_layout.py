@@ -27,6 +27,18 @@ completed and where the per-vertex decision runs:
   O(n) stat words (reduce_scatter) + O(n * d) mask BITS — the quantity
   the layout tests pin via the accounting below (docs/DESIGN.md §4.2).
 
+  With ``frontier_cap`` set, the mask exchange is SPARSE instead
+  (docs/DESIGN.md §4.3): each device compacts its owned changed
+  vertices to GLOBAL indices and all_gathers one fixed-capacity
+  ``[cap + 1]`` int32 buffer — count-prefixed, sentinel-padded — so a
+  round moves O(cap * d) words independent of ``n``; the replicated
+  mask is rebuilt by scatter. The paper's Fig. 5 locality (the
+  affected set of a batch is tiny) is what makes ``cap`` small. A
+  per-round ``lax.cond`` falls back to the bitmask path whenever ANY
+  shard's frontier overflows ``cap`` (the gathered count prefix makes
+  the verdict replicated), so results stay BIT-identical in every
+  regime — the cap is a bandwidth knob, never a correctness knob.
+
 All arithmetic is integer, reduce_scatter is an exact sum, and the
 gathered masks are bitwise identical on every device — which is why the
 range-sharded engine stays BIT-identical (cores AND k-order labels) to
@@ -45,11 +57,15 @@ a layout method issues, with the payload each device RECEIVES (computed
 from static shapes). ``lax.while_loop`` bodies trace exactly once, so a
 recorded fixpoint yields the PER-ROUND collective budget — the object
 the acceptance tests assert O(n + frontier-bits * d) on, without running
-a single batch.
+a single batch. Both arms of the sparse exchange's ``lax.cond`` trace,
+so their records carry a ``branch`` tag ("overflow" marks collectives
+that only move on the fallback arm); filtering it out yields the
+non-overflow round budget the tests pin at O(cap * d) words.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 from contextlib import contextmanager
 from typing import Iterator, List, Optional
 
@@ -65,29 +81,69 @@ class Traffic:
 
     op: str          # "psum" | "reduce_scatter" | "gather_mask" | ...
     recv_bytes: int  # payload each participating device receives
+    branch: str = ""  # "" = unconditional; "overflow" = only moves on
+    #                   the sparse exchange's lax.cond fallback arm
 
 
 _LOG: Optional[List[Traffic]] = None
+_OWNER: Optional[int] = None  # thread that opened the active session
+# the lock makes session entry/exit and appends atomic, so a second
+# session — nested OR from another thread — fails loudly instead of
+# silently stealing/corrupting the active log; the owner-thread filter
+# in _note keeps a stray trace on another thread out of the session's
+# records, and the branch tag is thread-local for the same reason
+_LOCK = threading.Lock()
+_TLS = threading.local()
 
 
 @contextmanager
 def record_traffic() -> Iterator[List[Traffic]]:
     """Capture the collectives issued while tracing under this context.
 
-    Nested use is not supported (the inner context would steal the outer
-    one's records); the tests trace one program per context.
+    Only one session may be active at a time: a nested (or concurrent)
+    entry raises ``RuntimeError`` — a silently-accepted inner context
+    would steal the outer one's records (every collective of the inner
+    trace would land in the wrong list). Trace one program per context.
+    The active context's log survives a rejected entry intact, and only
+    the opening thread's traces are recorded into it.
     """
-    global _LOG
-    prev, _LOG = _LOG, []
+    global _LOG, _OWNER
+    with _LOCK:
+        if _LOG is not None:
+            raise RuntimeError(
+                "record_traffic() does not nest (and allows one session "
+                "at a time): the second context would steal the active "
+                "one's records — trace one program per context"
+            )
+        _LOG = log = []
+        _OWNER = threading.get_ident()
     try:
-        yield _LOG
+        yield log
     finally:
-        _LOG = prev
+        with _LOCK:
+            _LOG = None
+            _OWNER = None
+
+
+@contextmanager
+def _cond_branch(name: str) -> Iterator[None]:
+    """Tag the records noted while tracing one arm of a ``lax.cond``
+    (both arms trace exactly once, at cond-construction time).
+    Thread-local, so another thread's trace cannot mislabel records."""
+    prev = getattr(_TLS, "branch", "")
+    _TLS.branch = name
+    try:
+        yield
+    finally:
+        _TLS.branch = prev
 
 
 def _note(op: str, recv_bytes: int) -> None:
-    if _LOG is not None:
-        _LOG.append(Traffic(op, int(recv_bytes)))
+    with _LOCK:
+        if _LOG is not None and _OWNER == threading.get_ident():
+            _LOG.append(
+                Traffic(op, int(recv_bytes), getattr(_TLS, "branch", ""))
+            )
 
 
 def _nbytes(x: Array) -> int:
@@ -144,11 +200,19 @@ class RangeShardedVertices:
     zeros, completed stats there are 0), so they can never enter a mask
     or a level computation — everything vertex-global (``place_block``,
     ``renumber``) runs on the exact ``[:n]`` prefix.
+
+    ``frontier_cap`` (static, ``None`` = off) switches ``gather_mask``
+    to the sparse compacted-index exchange of docs/DESIGN.md §4.3: the
+    wire payload becomes O(frontier_cap * n_shards) words per round
+    instead of O(n_pad / 8 * n_shards) bitmask bytes, with a per-round
+    ``lax.cond`` falling back to the bitmask whenever any shard's
+    frontier overflows the cap — bit-identical results either way.
     """
 
     n: int
     axis: str
     n_shards: int
+    frontier_cap: Optional[int] = None
     kind: str = dataclasses.field(default="range", init=False)
 
     @property
@@ -196,14 +260,65 @@ class RangeShardedVertices:
         return jax.lax.all_gather(owned, self.axis, tiled=True)[: self.n]
 
     def gather_mask(self, owned_mask: Array) -> Array:
-        """Owned bool mask -> full replicated ``[n]`` mask, BIT-packed on
-        the wire: each device receives ``n_shards * ceil(n_owned / 8)``
-        bytes — the frontier bitmask exchange of docs/DESIGN.md §4.2."""
+        """Owned bool mask -> full replicated ``[n]`` mask.
+
+        With ``frontier_cap`` unset: BIT-packed on the wire — each
+        device receives ``n_shards * ceil(n_owned / 8)`` bytes (the
+        frontier bitmask exchange of docs/DESIGN.md §4.2). With it set:
+        the sparse compacted-index exchange of §4.3, O(cap * n_shards)
+        words, falling back to the bitmask per round on overflow."""
+        if self.frontier_cap is None:
+            return self._gather_mask_bits(owned_mask)
+        return self._gather_mask_sparse(owned_mask)
+
+    def _gather_mask_bits(self, owned_mask: Array) -> Array:
         packed = jnp.packbits(owned_mask)  # [ceil(n_owned / 8)] uint8
         _note("gather_mask", self.n_shards * int(packed.shape[0]))
         g = jax.lax.all_gather(packed, self.axis)  # [n_shards, bytes]
         bits = jnp.unpackbits(g, axis=1, count=self.n_owned)
         return bits.reshape(-1)[: self.n].astype(jnp.bool_)
+
+    def _gather_mask_sparse(self, owned_mask: Array) -> Array:
+        """Compacted-index frontier exchange (docs/DESIGN.md §4.3).
+
+        Each device compacts its owned changed vertices to GLOBAL
+        indices inside one fixed-capacity int32 buffer — element 0 is
+        the exact owned count, the remaining ``cap`` slots hold indices
+        (``n_pad`` sentinels past the count, dropped out-of-bounds at
+        reconstruction) — and ONE all_gather moves ``(cap + 1) * 4``
+        bytes per shard instead of the ``ceil(n_owned / 8)`` bitmask
+        bytes: O(|frontier| * d) words per round, independent of n.
+        The gathered count column is replicated, so every device takes
+        the same ``lax.cond`` arm: indices when every shard fit under
+        the cap, the bitmask fallback (a SECOND gather, recorded under
+        branch="overflow") when any shard overflowed — the compaction
+        above dropped indices past the cap, so the sparse buffer is
+        unusable and the bitmask restores exactness. Either arm yields
+        the identical replicated mask, which is why the cap can be
+        planned heuristically (api.py) without any correctness risk."""
+        cap = self.frontier_cap
+        count = jnp.sum(owned_mask, dtype=jnp.int32)
+        pos = jnp.cumsum(owned_mask.astype(jnp.int32)) - 1
+        gidx = (self._offset() +
+                jnp.arange(self.n_owned, dtype=jnp.int32)).astype(jnp.int32)
+        safe = jnp.where(owned_mask & (pos < cap), pos, cap)
+        buf = jnp.full((cap,), self.n_pad, dtype=jnp.int32)
+        buf = buf.at[safe].set(gidx, mode="drop")
+        payload = jnp.concatenate([count[None], buf])  # [cap + 1] int32
+        _note("gather_frontier", self.n_shards * (cap + 1) * 4)
+        g = jax.lax.all_gather(payload, self.axis)  # [n_shards, cap + 1]
+        overflow = jnp.max(g[:, 0]) > cap
+
+        def from_indices(_):
+            flat = g[:, 1:].reshape(-1)  # sentinels drop out-of-bounds
+            full = jnp.zeros(self.n_pad, dtype=jnp.bool_)
+            return full.at[flat].set(True, mode="drop")[: self.n]
+
+        def from_bitmask(_):
+            with _cond_branch("overflow"):
+                return self._gather_mask_bits(owned_mask)
+
+        return jax.lax.cond(overflow, from_bitmask, from_indices, None)
 
     def any_owned(self, owned_mask: Array) -> Array:
         """Replicated ``any`` over the disjoint owned slices (scalar
@@ -230,12 +345,37 @@ VertexLayout = ReplicatedVertices | RangeShardedVertices
 
 
 def make_layout(kind: str, n: int, axis: Optional[str],
-                n_shards: int = 1) -> VertexLayout:
-    """Factory keyed by the public ``vertex_sharding`` name."""
+                n_shards: int = 1,
+                frontier_cap: Optional[int] = None) -> VertexLayout:
+    """Factory keyed by the public ``vertex_sharding`` name.
+
+    Misconfiguration raises HERE, at construction — not as an opaque
+    trace-time error three layers down: the replicated layout has no
+    shard ranges (``n_shards``) and exchanges no frontier
+    (``frontier_cap``), so silently accepting either would hide a
+    caller that believes it configured a sharded/sparse layout."""
     if kind == "replicated":
+        if n_shards != 1:
+            raise ValueError(
+                f"n_shards={n_shards} is meaningless for the replicated "
+                "vertex layout (every device keeps the full state; only "
+                "kind='range' owns per-shard ranges) — pass n_shards=1 "
+                "or use kind='range'"
+            )
+        if frontier_cap is not None:
+            raise ValueError(
+                f"frontier_cap={frontier_cap} applies only to "
+                "kind='range' (the replicated layout exchanges no "
+                "frontier masks)"
+            )
         return ReplicatedVertices(n, axis)
     if kind == "range":
         if axis is None:
             raise ValueError("range-sharded vertex state needs a mesh axis")
-        return RangeShardedVertices(n, axis, n_shards)
+        if frontier_cap is not None and frontier_cap < 1:
+            raise ValueError(
+                f"frontier_cap must be >= 1 (or None for the bitmask "
+                f"exchange), got {frontier_cap}"
+            )
+        return RangeShardedVertices(n, axis, n_shards, frontier_cap)
     raise ValueError(f"unknown vertex layout {kind!r}")

@@ -1,10 +1,11 @@
 """Cross-engine churn harness: long balanced insert/remove/re-insert
 streams through EVERY engine configuration — host / unified / sharded,
-plus the sharded engine's range-sharded vertex layout and hierarchical
-free-list variants — pinned bit-identical to each other and to the
-sequential oracle. This is the differential lockdown of the in-program
-free-list slot recycler, the per-shard high-water window, and the
-vertex-layout layer.
+plus the sharded engine's range-sharded vertex layout, hierarchical
+free-list, and sparse frontier-exchange variants — pinned bit-identical
+to each other and to the sequential oracle. This is the differential
+lockdown of the in-program free-list slot recycler, the per-shard
+high-water window, and the vertex-layout layer (sparse frontier
+overflow fallback included — see the triangle boundary test).
 
 The claims under test (docs/DESIGN.md §4.1–§4.2):
 
@@ -51,14 +52,16 @@ from repro.graph.stream import churn_stream
 ENGINES = ("host", "unified", "sharded")
 
 # every engine CONFIGURATION the differential harness pins bit-identical:
-# the three engines plus the sharded engine's vertex-layout / free-list
-# variants (CoreMaintainer kwargs per name)
+# the three engines plus the sharded engine's vertex-layout / free-list /
+# frontier-exchange variants (CoreMaintainer kwargs per name)
 CONFIGS = {
     "host": dict(engine="host"),
     "unified": dict(engine="unified"),
     "sharded": dict(engine="sharded"),
     "vertex_range": dict(engine="sharded", vertex_sharding="range"),
     "freelist_hier": dict(engine="sharded", freelist="hierarchical"),
+    "frontier_sparse": dict(engine="sharded", vertex_sharding="range",
+                            frontier_exchange="sparse"),
 }
 
 
@@ -134,7 +137,8 @@ def _run_churn_differential(m0, graph_seed, stream_seed, n_batches,
         assert int(u.n_edges) == u.live_edges == len(live)
         # both free-list rankings allocate the identical live set (slot
         # POSITIONS may differ across shards; the keys may not)
-        for e in ("sharded", "vertex_range", "freelist_hier"):
+        for e in ("sharded", "vertex_range", "freelist_hier",
+                  "frontier_sparse"):
             assert ms[e].edge_slot.keys() == u.edge_slot.keys(), e
     # balanced stream + generous initial capacity: nothing may grow
     for e, m in ms.items():
@@ -226,7 +230,9 @@ def test_capacity_flat_under_balanced_churn(config):
     np.testing.assert_array_equal(m.cores(), expect)
 
 
-@pytest.mark.parametrize("config", ("unified", "sharded", "vertex_range"))
+@pytest.mark.parametrize(
+    "config", ("unified", "sharded", "vertex_range", "frontier_sparse")
+)
 def test_masked_rows_consume_nothing(config):
     """validate=False drops out-of-range rows BEFORE they can touch the
     device: no slot is consumed, live_edges and n_edges are unchanged,
@@ -251,6 +257,53 @@ def test_masked_rows_consume_nothing(config):
     assert int(st_.n_inserted) == (0 if already else 1)
     assert m.live_edges == live0 + int(st_.n_inserted)
     assert int(m.n_edges) == m.live_edges
+
+
+@pytest.mark.parametrize("n_triangles", (3, 4, 5))
+def test_frontier_sparse_across_overflow_boundary(n_triangles):
+    """ACCEPTANCE: the sparse frontier exchange straddling its overflow
+    fallback. Removing one edge from each of T disjoint triangles makes
+    the FIRST removal round drop exactly 2T vertices (both endpoints of
+    every removed edge; the third vertex follows in round 2, and the
+    terminating rounds of both fixpoints have EMPTY frontiers). With the
+    cap forced to 8, T = 3 / 4 / 5 puts that round's frontier below /
+    exactly at / above the cap — the overflowing round takes the
+    in-program bitmask fallback — and every regime must stay
+    bit-identical (cores AND labels) to the unified engine and the BZ
+    oracle, through the re-inserting promotion batch too."""
+    T = n_triangles
+    n = 3 * T
+    edges = np.asarray(
+        [e for t in range(T)
+         for e in ((3 * t, 3 * t + 1), (3 * t, 3 * t + 2),
+                   (3 * t + 1, 3 * t + 2))],
+        dtype=np.int64,
+    )
+    g = build_csr(n, edges)
+    mk = dict(capacity=4 * len(edges) + 16)
+    mu = CoreMaintainer.from_graph(g, **mk)
+    mf = CoreMaintainer.from_graph(
+        g, engine="sharded", vertex_sharding="range",
+        frontier_exchange="sparse", frontier_cap=8, **mk,
+    )
+    rm = np.asarray([(3 * t, 3 * t + 1) for t in range(T)], dtype=np.int64)
+    for m in (mu, mf):
+        m.apply_batch(remove_edges=rm)
+    np.testing.assert_array_equal(mu.cores(), mf.cores())
+    np.testing.assert_array_equal(mu.labels(), mf.labels())
+    gone = set(map(tuple, rm.tolist()))
+    live = np.asarray(
+        [e for e in map(tuple, edges.tolist()) if e not in gone],
+        dtype=np.int64,
+    )
+    np.testing.assert_array_equal(mu.cores(), bz_from_csr(build_csr(n, live)))
+    # re-insert: T whole triangles promote back 1 -> 2 (3T candidates —
+    # above the cap again at T=3 already), same bit-identity demands
+    for m in (mu, mf):
+        m.apply_batch(insert_edges=rm)
+    np.testing.assert_array_equal(mu.cores(), mf.cores())
+    np.testing.assert_array_equal(mu.labels(), mf.labels())
+    np.testing.assert_array_equal(mu.cores(), bz_from_csr(build_csr(n, edges)))
 
 
 def test_save_load_after_recycling_roundtrip(tmp_path):
@@ -403,6 +456,13 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
                                    vertex_sharding="range")
     mh = CoreMaintainer.from_graph(g, capacity=645, engine="sharded",
                                    freelist="hierarchical")
+    # sparse frontier exchange with a deliberately TINY forced cap: the
+    # per-round frontiers of a 24-edit churn batch straddle it, so the
+    # stream exercises both cond arms on a real 8-shard mesh
+    mf = CoreMaintainer.from_graph(g, capacity=645, engine="sharded",
+                                   vertex_sharding="range",
+                                   frontier_exchange="sparse",
+                                   frontier_cap=4)
     assert ms.capacity % 8 == 0, ms.capacity
     assert mv.core.shape == (88,)  # padded to the shard multiple
 
@@ -412,19 +472,22 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
     live = set(norm(g.edge_array()))
     events = list(churn_stream(g, 8, 24, seed=5))
     for ev in events[:6]:
-        for m in (ms, mu, mv, mh):
+        for m in (ms, mu, mv, mh, mf):
             m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
         for e in norm(ev.removals):
             live.discard(e)
         for e in norm(ev.edges):
             if e[0] != e[1]:
                 live.add(e)
-        # range-sharded vertex state and the hierarchical free-list stay
+        # range-sharded vertex state, the hierarchical free-list, and
+        # the overflow-straddling sparse frontier exchange stay
         # bit-identical to the replicated interleaved engine mid-stream
         np.testing.assert_array_equal(mu.cores(), mv.cores())
         np.testing.assert_array_equal(mu.labels(), mv.labels())
         np.testing.assert_array_equal(mu.cores(), mh.cores())
         np.testing.assert_array_equal(mu.labels(), mh.labels())
+        np.testing.assert_array_equal(mu.cores(), mf.cores())
+        np.testing.assert_array_equal(mu.labels(), mf.labels())
         # hierarchical ranks (shard, slot): slot POSITIONS may differ
         # from the interleaved engines, the LIVE SET may not
         assert mh.edge_slot.keys() == mu.edge_slot.keys()
@@ -451,7 +514,7 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
         tuple(e) for e in live
     }
     for ev in events[6:]:
-        for m in (ms, mu, mv, mh, m2, m3, m4, m5):
+        for m in (ms, mu, mv, mh, mf, m2, m3, m4, m5):
             m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
         for e in norm(ev.removals):
             live.discard(e)
@@ -462,6 +525,7 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
                                                    dtype=np.int64)))
     for name, m in (("sharded", ms), ("unified", mu),
                     ("vertex-range", mv), ("freelist-hier", mh),
+                    ("frontier-sparse", mf),
                     ("reload-sharded", m2), ("reload-unified", m3),
                     ("reload-vertex-range", m4), ("reload-vs-unified", m5)):
         np.testing.assert_array_equal(m.cores(), expect, err_msg=name)

@@ -61,10 +61,60 @@ def test_make_layout_factory():
     assert make_layout("replicated", 5, None).kind == "replicated"
     lay = make_layout("range", 10, "data", 4)
     assert lay.kind == "range" and lay.n_owned == 3 and lay.n_pad == 12
+    assert lay.frontier_cap is None
+    assert make_layout("range", 10, "data", 4, 8).frontier_cap == 8
     with pytest.raises(ValueError):
         make_layout("range", 5, None)
     with pytest.raises(ValueError):
         make_layout("diagonal", 5, "data")
+
+
+def test_make_layout_rejects_misconfiguration_at_construction():
+    """The replicated layout has no shard ranges and no frontier: a
+    silently ignored n_shards/frontier_cap would hide a caller that
+    believes it built a sharded or sparse layout — both raise HERE, not
+    three layers down at trace time."""
+    with pytest.raises(ValueError, match="n_shards"):
+        make_layout("replicated", 10, "data", 8)
+    with pytest.raises(ValueError, match="frontier_cap"):
+        make_layout("replicated", 10, "data", 1, 16)
+    # the sparse bucket must be able to hold at least one index
+    with pytest.raises(ValueError, match="frontier_cap"):
+        make_layout("range", 10, "data", 2, 0)
+    with pytest.raises(ValueError, match="frontier_cap"):
+        make_layout("range", 10, "data", 2, -4)
+
+
+def test_record_traffic_nesting_raises_and_outer_survives():
+    """Nested record_traffic() used to silently steal the outer
+    context's records; now the inner entry raises and the outer log
+    keeps accumulating afterwards, intact."""
+    lay = RangeShardedVertices(16, "data", 1)
+    mesh = jax.make_mesh((1,), ("data",))
+
+    def kernel(stats):
+        return lay.complete(stats)
+
+    sm = shard_map(kernel, mesh=mesh, in_specs=(P(),),
+                   out_specs=P("data"), check_vma=False)
+    with record_traffic() as outer:
+        jax.make_jaxpr(sm)(jnp.zeros(16, jnp.int32))
+        n_before = len(outer)
+        assert n_before == 1
+        with pytest.raises(RuntimeError, match="nest"):
+            with record_traffic():
+                pass  # pragma: no cover — entry must raise
+        # the outer context still owns the log: more records land in it
+        # (a different dtype forces a genuinely fresh trace — an
+        # identical call could be served from the trace cache)
+        jax.make_jaxpr(sm)(jnp.zeros(16, jnp.int64))
+        assert len(outer) == n_before + 1
+        assert all(t.op == "reduce_scatter" for t in outer)
+    # fully unwound: a fresh context starts empty and records again
+    # (again a fresh dtype, to dodge the trace cache)
+    with record_traffic() as log2:
+        jax.make_jaxpr(sm)(jnp.zeros(16, jnp.float32))
+    assert [t.op for t in log2] == ["reduce_scatter"]
 
 
 def test_range_layout_roundtrips_one_shard():
@@ -119,14 +169,15 @@ def _primitive_names(closed) -> set:
 
 
 def _trace_removal_round(vertex_sharding: str, n: int, cap: int,
-                         mesh) -> list:
+                         mesh, frontier_cap=None) -> list:
     """Trace (not run) the removal fixpoint under shard_map and return
     the layout collectives recorded for ONE loop round."""
     axis = "data"
     n_shards = dict(mesh.shape)[axis]
-    layout = make_layout(
-        "range" if vertex_sharding == "range" else "replicated",
-        n, axis, n_shards,
+    layout = (
+        make_layout("range", n, axis, n_shards, frontier_cap)
+        if vertex_sharding == "range"
+        else make_layout("replicated", n, axis)
     )
     stat_spec = P(axis) if vertex_sharding == "range" else P()
 
@@ -183,6 +234,60 @@ def test_per_round_traffic_replicated_vs_range():
     assert "psum" not in rng_prims
 
 
+def test_sparse_mask_roundtrip_across_overflow_boundary():
+    """The compacted-index exchange reproduces the mask EXACTLY at every
+    frontier size — empty, below, exactly at, and above the cap (where
+    the in-program lax.cond falls back to the bitmask)."""
+    mesh = jax.make_mesh((1,), ("data",))
+    n, cap = 13, 4
+    lay = RangeShardedVertices(n, "data", 1, frontier_cap=cap)
+
+    f = jax.jit(shard_map(
+        lambda m: lay.gather_mask(lay.own(m)), mesh=mesh,
+        in_specs=(P(),), out_specs=P(), check_vma=False,
+    ))
+    rng = np.random.default_rng(3)
+    for k in (0, cap - 1, cap, cap + 1, n):  # straddle the fallback
+        mask = np.zeros(n, dtype=bool)
+        mask[rng.choice(n, size=k, replace=False)] = True
+        got = np.asarray(f(jnp.asarray(mask)))
+        np.testing.assert_array_equal(got, mask, err_msg=f"frontier={k}")
+
+
+def test_per_round_traffic_sparse_frontier():
+    """ACCEPTANCE (docs/DESIGN.md §4.3): a sparse range-sharded removal
+    round moves ONE reduce_scatter (owned stat words) + ONE
+    O(cap * n_shards)-word index gather, and NO vertex-sized collective
+    on the non-overflow branch — the bitmask gather exists only inside
+    the overflow arm of the per-round lax.cond (branch="overflow").
+    (The 8-shard byte counts are pinned by the subprocess test.)"""
+    n, cap, fcap = 24, 32, 8
+    mesh = jax.make_mesh((1,), ("data",))
+    log, prims = _trace_removal_round("range", n, cap, mesh,
+                                      frontier_cap=fcap)
+
+    lay = RangeShardedVertices(n, "data", 1, frontier_cap=fcap)
+    main = [t for t in log if t.branch != "overflow"]
+    fallback = [t for t in log if t.branch == "overflow"]
+    # non-overflow round budget: stats in by reduce_scatter, frontier
+    # out as count-prefixed indices — O(cap * d) words, n-independent
+    assert [t.op for t in main] == ["reduce_scatter", "gather_frontier"]
+    rs, gf = main
+    assert rs.recv_bytes == lay.n_owned * 3 * 4
+    assert gf.recv_bytes == 1 * (fcap + 1) * 4  # n_shards * (cap+1) words
+    # nothing on the main branch scales with n beyond the owned stats:
+    # the frontier payload must be strictly smaller than even ONE
+    # vertex-sized int column would be at scale (here: it is cap-sized)
+    assert all(t.recv_bytes <= max(rs.recv_bytes, gf.recv_bytes)
+               for t in main)
+    # the ONLY bitmask gather lives on the overflow branch
+    assert [t.op for t in fallback] == ["gather_mask"]
+    assert fallback[0].recv_bytes == 1 * -(-lay.n_owned // 8)
+    # jaxpr cross-check: still reduce_scatter + all_gathers, no psum
+    assert {"reduce_scatter", "all_gather"} <= prims
+    assert "psum" not in prims
+
+
 _TRAFFIC_8DEV = textwrap.dedent(
     """
     import os
@@ -192,10 +297,12 @@ _TRAFFIC_8DEV = textwrap.dedent(
     import repro  # enables x64
     from test_vertex_layout import _trace_removal_round
 
-    n, cap, d = 240, 512, 8
+    n, cap, d, fcap = 240, 512, 8, 8
     mesh = jax.make_mesh((8,), ("data",))
     rep_log, _ = _trace_removal_round("replicated", n, cap, mesh)
     rng_log, _ = _trace_removal_round("range", n, cap, mesh)
+    sp_log, _ = _trace_removal_round("range", n, cap, mesh,
+                                     frontier_cap=fcap)
 
     [psum] = rep_log
     rs, gm = rng_log
@@ -212,7 +319,23 @@ _TRAFFIC_8DEV = textwrap.dedent(
     mesh_rep = psum.recv_bytes * d
     mesh_rng = rs.recv_bytes * d + gm.recv_bytes * d
     assert mesh_rng * 4 < mesh_rep, (mesh_rng, mesh_rep)
-    print("traffic-8dev OK", mesh_rep, mesh_rng)
+
+    # sparse frontier exchange (docs/DESIGN.md S4.3): the non-overflow
+    # round is ONE reduce_scatter + ONE O(cap * d)-word index gather —
+    # NO vertex-sized collective; the bitmask gather exists only on the
+    # overflow arm of the per-round lax.cond. The gather payload is
+    # d * (cap + 1) words, INDEPENDENT of n — on this toy n=240 the
+    # bitmask is still cheaper (crossover at frontier < n/256), which
+    # is exactly why the cap is a knob and the bitmask the fallback.
+    main = [t for t in sp_log if t.branch != "overflow"]
+    over = [t for t in sp_log if t.branch == "overflow"]
+    assert [t.op for t in main] == ["reduce_scatter", "gather_frontier"], main
+    assert main[0].recv_bytes == (n // d) * 3 * 4, main
+    assert main[1].recv_bytes == d * (fcap + 1) * 4, main
+    assert [t.op for t in over] == ["gather_mask"], over
+    assert over[0].recv_bytes == gm.recv_bytes, over
+    print("traffic-8dev OK", mesh_rep, mesh_rng,
+          main[1].recv_bytes * d)
     """
 )
 
@@ -253,3 +376,93 @@ def test_vertex_sharding_needs_sharded_engine():
     with pytest.raises(ValueError, match="hierarchical"):
         CoreMaintainer.from_graph(g, capacity=128, engine="unified",
                                   freelist="hierarchical")
+
+
+def test_engine_config_matrix_rejected_at_construction():
+    """Every invalid engine-configuration combination raises a
+    construction-time ValueError NAMING the offending field — none may
+    survive to a deep trace-time error or be silently ignored."""
+    from repro.core.api import CoreMaintainer
+    from repro.graph.generators import erdos_renyi
+
+    g = erdos_renyi(20, 40, seed=0)
+    bad = [
+        (dict(engine="warp"), "engine"),
+        (dict(vertex_sharding="diagonal"), "vertex_sharding"),
+        (dict(freelist="magic"), "freelist"),
+        (dict(frontier_exchange="rle"), "frontier_exchange"),
+        # a mesh passed to an engine that never reads it
+        (dict(engine="unified", mesh=jax.make_mesh((1,), ("data",))),
+         "mesh"),
+        (dict(engine="host", mesh=jax.make_mesh((1,), ("data",))),
+         "mesh"),
+        # combinations whose silent acceptance would do nothing
+        (dict(engine="unified", vertex_sharding="range"),
+         "vertex_sharding"),
+        (dict(engine="host", freelist="hierarchical"), "hierarchical"),
+        (dict(engine="sharded", frontier_exchange="sparse"),
+         "frontier_exchange"),  # sparse without range vertex state
+        (dict(engine="unified", frontier_exchange="sparse"),
+         "frontier_exchange"),
+        (dict(engine="sharded", vertex_sharding="range",
+              frontier_cap=64), "frontier_cap"),  # cap without sparse
+        (dict(engine="sharded", vertex_sharding="range",
+              frontier_exchange="sparse", frontier_cap=-2),
+         "frontier_cap"),
+    ]
+    for kw, field in bad:
+        with pytest.raises(ValueError, match=field):
+            CoreMaintainer.from_graph(g, capacity=128, **kw)
+    # the valid corners of the matrix still construct
+    CoreMaintainer.from_graph(g, capacity=128, engine="sharded",
+                              vertex_sharding="range",
+                              frontier_exchange="sparse")
+    CoreMaintainer.from_graph(g, capacity=128, engine="sharded",
+                              vertex_sharding="range",
+                              frontier_exchange="sparse", frontier_cap=16)
+
+
+def test_make_sharded_apply_rejects_bad_frontier_config():
+    from repro.core.sharded import make_sharded_apply
+
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="frontier_exchange"):
+        make_sharded_apply(mesh, 16, 18, frontier_exchange="rle")
+    with pytest.raises(ValueError, match="frontier_exchange"):
+        make_sharded_apply(mesh, 16, 18, frontier_exchange="sparse")
+    with pytest.raises(ValueError, match="frontier_cap"):
+        make_sharded_apply(mesh, 16, 18, vertex_sharding="range",
+                           frontier_exchange="sparse", frontier_cap=0)
+    # a cap the bitmask exchange would silently ignore must raise too
+    with pytest.raises(ValueError, match="frontier_cap"):
+        make_sharded_apply(mesh, 16, 18, vertex_sharding="range",
+                           frontier_cap=64)
+
+
+def test_local_active_window_cannot_outrun_the_shard():
+    """An oversized per-shard window (e.g. sized from the GLOBAL
+    high-water mark) used to slice past the local shard and silently
+    splice a SHORT slot table back together; it must raise loudly at
+    the window boundary instead. The exact-boundary window still runs."""
+    from repro.core.sharded import make_sharded_apply
+
+    mesh = jax.make_mesh((1,), ("data",))
+    n, cap = 8, 16
+
+    def fresh_args():  # the engine donates its buffers — one set per call
+        b = jnp.zeros(4, jnp.int32)
+        ok = jnp.zeros(4, bool)
+        return (jnp.zeros(cap, jnp.int32), jnp.zeros(cap, jnp.int32),
+                jnp.zeros(cap, bool), jnp.zeros(n, jnp.int32),
+                jnp.zeros(n, jnp.int64), jnp.int32(0),
+                b, b, ok, b, b, ok)
+
+    # window == per-shard capacity: legal, runs
+    fn = make_sharded_apply(mesh, n, n + 2, local_active=cap)
+    out = fn(*fresh_args())
+    assert out[0].shape == (cap,)
+
+    # one past the shard: loud ValueError naming the misconfiguration
+    fn = make_sharded_apply(mesh, n, n + 2, local_active=cap + 1)
+    with pytest.raises(ValueError, match="local_active"):
+        fn(*fresh_args())
