@@ -1,0 +1,81 @@
+"""Coherence check of the committed BENCH_stream.json artifact.
+
+Replaces the inline heredoc CI used to carry: same assertions, but
+emitted as one ``repro.analysis/report/v1`` check (rule
+``bench_coherence``) so the bench gate and the static audit share a
+report schema. Deliberately dependency-free (no jax import) — CI runs
+it before anything heavy.
+"""
+from __future__ import annotations
+
+import json
+from typing import List
+
+# a --quick benchmarks.run skips the device-scaling sweeps (and writes
+# BENCH_stream.quick.json instead for that reason) — the committed
+# artifact must carry all of these
+REQUIRED_KEYS = (
+    "vertex_sharded",
+    "frontier_sparse",
+    "sharded_scaling",
+    "vertex_scaling",
+    "frontier_scaling",
+)
+
+
+def _finding(message: str) -> dict:
+    return {"rule": "bench_coherence", "engine": "bench",
+            "program": "", "message": message}
+
+
+def check_bench(path: str) -> dict:
+    """Audit one BENCH_stream.json; returns a report check dict."""
+    findings: List[dict] = []
+    try:
+        with open(path) as fh:
+            blob = json.load(fh)
+    except (OSError, ValueError) as e:
+        findings.append(_finding(f"cannot load {path}: {e}"))
+        blob = None
+    if blob is not None:
+        # engines_agree covers EVERY recorded engine row (incl. the
+        # frontier_sparse configuration): final cores were compared
+        # against the host engine on the same stream when recorded
+        if blob.get("engines_agree") is not True:
+            findings.append(_finding("stream engines diverged "
+                                     "(engines_agree is not true)"))
+        if blob.get("churn", {}).get("engines_agree") is not True:
+            findings.append(_finding("churn engines diverged "
+                                     "(churn.engines_agree is not true)"))
+        for key in REQUIRED_KEYS:
+            if key not in blob:
+                findings.append(_finding(
+                    f"BENCH_stream.json lacks {key!r}: regenerate with a "
+                    "full (non --quick) benchmarks.run, which records the "
+                    "device-scaling sweeps"
+                ))
+        if "speedup_frontier_sparse_vs_host" not in blob:
+            findings.append(_finding(
+                "missing speedup_frontier_sparse_vs_host"))
+        fs = blob.get("frontier_sparse")
+        if isinstance(fs, dict) and not fs.get("batches_per_s", 0) > 0:
+            findings.append(_finding(
+                "frontier_sparse.batches_per_s is not > 0"))
+        for i, row in enumerate(blob.get("vertex_scaling") or []):
+            if "n_devices" not in row:
+                findings.append(_finding(
+                    f"vertex_scaling[{i}] lacks n_devices"))
+        for i, row in enumerate(blob.get("frontier_scaling") or []):
+            if "n_devices" not in row:
+                findings.append(_finding(
+                    f"frontier_scaling[{i}] lacks n_devices"))
+            if row.get("frontier_exchange") != "sparse":
+                findings.append(_finding(
+                    f"frontier_scaling[{i}] is not a sparse-frontier row "
+                    f"(frontier_exchange={row.get('frontier_exchange')!r})"))
+    return {
+        "rule": "bench_coherence",
+        "engine": "bench",
+        "ok": not findings,
+        "findings": findings,
+    }

@@ -1,0 +1,161 @@
+"""AST lint: no device->host syncs in the sync-free planning path.
+
+``CoreMaintainer.apply_batch`` promises that the per-batch edit path
+never blocks on the device (docs/DESIGN.md §3/§5): planning runs off
+monotone host-side bounds (``hwm_ub`` / ``live_ub``) and the only syncs
+are the documented amortized ones (``_refresh_bounds``, ``_compact`` /
+``_defrag_to``, the lazy ``edge_slot`` mirror) plus the ``engine="host"``
+baseline path. That promise is enforced here syntactically, per
+function, over the SYNC-FREE set below:
+
+forbidden inside a sync-free function
+  * ``<expr>.block_until_ready(...)`` — always a sync
+  * ``<expr>.item()`` — always a sync
+  * ``int(...)`` / ``float(...)`` / ``bool(...)`` / ``np.asarray(...)``
+    / ``np.array(...)`` / ``jax.device_get(...)`` applied to an
+    expression that mentions a device-resident field
+    (``self.src`` etc. — DEVICE_FIELDS below)
+
+A line carrying a ``# sync: ok`` comment is exempt (use it to mark a
+deliberate, reviewed sync — none exist today). ``_refresh_bounds``,
+``_insert_edges_host``/``_remove_edges_host``, ``_defrag_to``,
+``_maybe_renumber``, ``edge_slot``, ``cores``/``labels`` are NOT in the
+sync-free set: they are the documented amortized/host/query sync points.
+
+Run as ``python -m repro.analysis.hostlint`` (CI) or through
+tests/test_analysis.py.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import sys
+from typing import List, Optional, Sequence
+
+API_PATH = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), os.pardir, "core", "api.py"
+))
+
+# the per-batch edit path + every planning helper it calls; a sync in
+# any of these lands on the critical path of EVERY batch
+SYNC_FREE_FUNCS = frozenset({
+    "apply_batch",
+    "insert_edges",
+    "remove_edges",
+    "_validated",
+    "_ensure_capacity",
+    "_window",
+    "_frontier_bucket",
+    "_get_sharded_fn",
+    "plan_window",
+    "plan_frontier_cap",
+    "bucket_lattice",
+})
+
+# fields of CoreMaintainer that live on device mid-stream — forcing any
+# of them to host blocks until the in-flight batch program finishes
+DEVICE_FIELDS = frozenset({
+    "src", "dst", "valid", "core", "label", "n_edges",
+    "last_batch_stats", "last_insert_stats", "last_remove_stats",
+})
+
+SYNC_BUILTINS = frozenset({"int", "float", "bool"})
+SYNC_ATTR_CALLS = frozenset({
+    ("np", "asarray"), ("np", "array"),
+    ("numpy", "asarray"), ("numpy", "array"),
+    ("jax", "device_get"),
+})
+ALLOW_MARK = "# sync: ok"
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    path: str
+    func: str
+    lineno: int
+    message: str
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.lineno}: in sync-free "
+                f"{self.func}(): {self.message}")
+
+
+def _touches_device_state(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Attribute)
+                and isinstance(sub.value, ast.Name)
+                and sub.value.id == "self"
+                and sub.attr in DEVICE_FIELDS):
+            return True
+    return False
+
+
+def _lint_func(fn: ast.AST, lines: Sequence[str],
+               path: str) -> List[LintFinding]:
+    out: List[LintFinding] = []
+
+    def hit(node: ast.AST, message: str) -> None:
+        out.append(LintFinding(path, fn.name, node.lineno, message))
+
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+        if ALLOW_MARK in line:
+            continue
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            if f.attr == "block_until_ready":
+                hit(node, "calls .block_until_ready() — an unconditional "
+                          "device sync")
+            elif f.attr == "item" and not node.args:
+                hit(node, "calls .item() — an unconditional device sync")
+            elif (isinstance(f.value, ast.Name)
+                    and (f.value.id, f.attr) in SYNC_ATTR_CALLS
+                    and any(_touches_device_state(a) for a in node.args)):
+                hit(node, f"{f.value.id}.{f.attr}(...) forces a "
+                          "device-resident field to host")
+        elif (isinstance(f, ast.Name) and f.id in SYNC_BUILTINS
+                and any(_touches_device_state(a) for a in node.args)):
+            hit(node, f"{f.id}(...) forces a device-resident field to "
+                      "host (blocks on the in-flight batch)")
+    return out
+
+
+def lint_file(path: Optional[str] = None,
+              funcs: frozenset = SYNC_FREE_FUNCS) -> List[LintFinding]:
+    """Lint one source file; returns findings for every forbidden sync
+    construct inside the named sync-free functions."""
+    path = path or API_PATH
+    with open(path) as fh:
+        src = fh.read()
+    tree = ast.parse(src, filename=path)
+    lines = src.splitlines()
+    findings: List[LintFinding] = []
+    for node in ast.walk(tree):
+        if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and node.name in funcs):
+            findings.extend(_lint_func(node, lines, path))
+    return findings
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    paths = list(argv if argv is not None else sys.argv[1:]) or [API_PATH]
+    findings: List[LintFinding] = []
+    for p in paths:
+        findings.extend(lint_file(p))
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"hostlint: {len(findings)} sync violation(s)")
+        return 1
+    print(f"hostlint: clean ({', '.join(os.path.basename(p) for p in paths)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,304 @@
+"""Trace the engine matrix's programs for static auditing.
+
+The repo's performance claims are STRUCTURAL properties of traced
+programs (one reduce_scatter per round, no vertex-sized psum under the
+sparse exchange, donated batch buffers, a bounded jit-variant lattice).
+This module produces the artifacts the audit rules inspect, without
+executing a single batch:
+
+* ``ENGINE_CONFIGS`` — the five bit-identical engine configurations
+  (host / unified / sharded / vertex_range / frontier_sparse), exactly
+  the matrix ``tests/test_churn_streams.py`` proves equivalent;
+* ``trace_removal_round`` / ``trace_promotion_round`` — shard_map-trace
+  ONE fixpoint under a vertex layout, returning both the trace-time
+  traffic log (``record_traffic``) and the closed jaxpr: a
+  ``lax.while_loop`` body traces exactly once, so either view IS the
+  per-round collective budget (and ``rules.cross_check_round`` verifies
+  they agree);
+* ``trace_engine`` — the full picture for one config: batch-program
+  jaxprs, lowered computations (for donation/aliasing checks), round
+  traces, the planned (window, frontier-cap) buckets, and the size
+  environment budget formulas evaluate in.
+
+Audit parameters are fixed and small (n=64, capacity=256, 8 batch
+lanes): collective COUNTS are device-count independent (shard_map
+traces one program regardless of mesh size) and every SIZE is checked
+against a closed-form formula in (n, d, cap, ...), so the same
+committed manifest gates 1-device and 8-device CI runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..compat import shard_map
+from ..core.api import plan_frontier_cap, plan_window
+from ..core.engine import DONATED_STATE_ARGS, apply_batch
+from ..core.insert import insert_batch, promotion_fixpoint
+from ..core.remove import remove_batch, removal_fixpoint
+from ..core.sharded import make_sharded_apply
+from ..core.vertex_layout import Traffic, make_layout, record_traffic
+
+EDGE_AXIS = "data"
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """One point of the engine matrix, keyed by its audit name."""
+
+    name: str
+    engine: str                       # "host" | "unified" | "sharded"
+    vertex_sharding: str = "replicated"
+    frontier_exchange: str = "bitmask"
+    frontier_cap: int = 0             # pinned sparse cap (sparse only)
+    freelist: str = "interleaved"
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.engine == "sharded"
+
+
+ENGINE_CONFIGS: Dict[str, EngineConfig] = {
+    c.name: c
+    for c in (
+        EngineConfig("host", "host"),
+        EngineConfig("unified", "unified"),
+        EngineConfig("sharded", "sharded"),
+        EngineConfig("vertex_range", "sharded", vertex_sharding="range"),
+        EngineConfig(
+            "frontier_sparse", "sharded", vertex_sharding="range",
+            frontier_exchange="sparse", frontier_cap=16,
+        ),
+    )
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditParams:
+    """Fixed trace-time sizes. ``n`` and ``capacity`` must be divisible
+    by every audited device count (1 and 8 in CI) so the range layout
+    pads nothing and the formulas stay exact."""
+
+    n: int = 64
+    capacity: int = 256
+    lanes: int = 8  # padded batch lanes (both insert and remove lists)
+
+    @property
+    def n_levels(self) -> int:
+        return self.n + 2
+
+
+def trace_removal_round(
+    vertex_sharding: str, n: int, cap: int, mesh,
+    frontier_cap: Optional[int] = None,
+) -> Tuple[List[Traffic], Any]:
+    """Trace (not run) the removal fixpoint under shard_map.
+
+    Returns ``(log, closed_jaxpr)``: the layout collectives recorded for
+    ONE loop round plus the traced program (walk it with
+    ``walker.primitive_names`` / ``walker.collectives``). This is the
+    one source of truth behind the traffic assertions in
+    ``tests/test_vertex_layout.py`` and the audit's round budgets.
+    """
+    axis = EDGE_AXIS
+    n_shards = dict(mesh.shape)[axis]
+    layout = (
+        make_layout("range", n, axis, n_shards, frontier_cap)
+        if vertex_sharding == "range"
+        else make_layout("replicated", n, axis)
+    )
+    stat_spec = P(axis) if vertex_sharding == "range" else P()
+
+    def kernel(src, dst, valid, core, label):
+        return removal_fixpoint(src, dst, valid, core, label, n, n + 2,
+                                layout=layout)
+
+    sm = shard_map(
+        kernel, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(), P()),
+        out_specs=(P(), P(), P(), stat_spec, stat_spec),
+        check_vma=False,
+    )
+    src = jnp.zeros(cap, jnp.int32)
+    dst = jnp.ones(cap, jnp.int32)
+    valid = jnp.zeros(cap, bool)
+    core = jnp.zeros(n, jnp.int32)
+    label = jnp.zeros(n, jnp.int64)
+    with record_traffic() as log:
+        jaxpr = jax.make_jaxpr(sm)(src, dst, valid, core, label)
+    return log, jaxpr
+
+
+def trace_promotion_round(
+    vertex_sharding: str, n: int, cap: int, mesh,
+    frontier_cap: Optional[int] = None, lanes: int = 8,
+) -> Tuple[List[Traffic], Any]:
+    """Trace the promotion fixpoint under shard_map — the insertion-side
+    counterpart of ``trace_removal_round``. Returns ``(log, jaxpr)``;
+    records cover one outer round (seed + forward waves + evictions +
+    the next-round statistics pass)."""
+    axis = EDGE_AXIS
+    n_shards = dict(mesh.shape)[axis]
+    layout = (
+        make_layout("range", n, axis, n_shards, frontier_cap)
+        if vertex_sharding == "range"
+        else make_layout("replicated", n, axis)
+    )
+    stat_spec = P(axis) if vertex_sharding == "range" else P()
+    n_stat = layout.n_pad if vertex_sharding == "range" else n
+
+    def kernel(src, dst, valid, core, label, nu, nv, nok, hi, dout):
+        return promotion_fixpoint(src, dst, valid, core, label,
+                                  nu, nv, nok, hi, dout, n, n + 2,
+                                  layout=layout)
+
+    sm = shard_map(
+        kernel, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(), P(),
+                  P(), P(), P(), stat_spec, stat_spec),
+        out_specs=(P(), P(), P(), P()),
+        check_vma=False,
+    )
+    src = jnp.zeros(cap, jnp.int32)
+    dst = jnp.ones(cap, jnp.int32)
+    valid = jnp.zeros(cap, bool)
+    core = jnp.zeros(n, jnp.int32)
+    label = jnp.zeros(n, jnp.int64)
+    nu = jnp.zeros(lanes, jnp.int32)
+    nv = jnp.ones(lanes, jnp.int32)
+    nok = jnp.zeros(lanes, bool)
+    hi = jnp.zeros(n_stat, jnp.int32)
+    dout = jnp.zeros(n_stat, jnp.int32)
+    with record_traffic() as log:
+        jaxpr = jax.make_jaxpr(sm)(src, dst, valid, core, label,
+                                   nu, nv, nok, hi, dout)
+    return log, jaxpr
+
+
+@dataclasses.dataclass
+class TracedEngine:
+    """Everything the audit rules inspect for one engine config."""
+
+    config: EngineConfig
+    params: AuditParams
+    n_devices: int
+    window: int           # planned per-shard active-window bucket
+    frontier_cap: int     # planned sparse-cap bucket (0 = exchange off)
+    programs: Dict[str, Any]        # name -> ClosedJaxpr (full program)
+    lowered: Dict[str, Any]         # name -> jax.stages.Lowered
+    donated: Dict[str, Tuple[int, ...]]  # name -> declared donated args
+    rounds: Dict[str, Tuple[List[Traffic], Any]]  # name -> (log, jaxpr)
+    sizes: Dict[str, int]           # env for budget recv_bytes formulas
+
+
+def _batch_args(params: AuditParams, n_state: int):
+    b = jnp.zeros(params.lanes, jnp.int32)
+    ok = jnp.zeros(params.lanes, bool)
+    return (
+        jnp.zeros(params.capacity, jnp.int32),
+        jnp.zeros(params.capacity, jnp.int32),
+        jnp.zeros(params.capacity, bool),
+        jnp.zeros(n_state, jnp.int32),
+        jnp.zeros(n_state, jnp.int64),
+        jnp.int32(0),
+        b, b, ok, b, b, ok,
+    )
+
+
+def trace_engine(name: str,
+                 params: Optional[AuditParams] = None) -> TracedEngine:
+    """Trace + lower every auditable program of one engine config on the
+    current device count."""
+    if name not in ENGINE_CONFIGS:
+        raise ValueError(
+            f"unknown engine config {name!r} "
+            f"(expected one of {sorted(ENGINE_CONFIGS)})"
+        )
+    cfg = ENGINE_CONFIGS[name]
+    params = params or AuditParams()
+    d = len(jax.devices()) if cfg.is_sharded else 1
+    n, cap, lanes = params.n, params.capacity, params.lanes
+    if cfg.is_sharded and (n % d or cap % d):
+        raise ValueError(
+            f"audit sizes n={n}, capacity={cap} must divide the device "
+            f"count {d} (pad-free range layout keeps formulas exact)"
+        )
+    local_cap = cap // d
+    n_owned = -(-n // d)
+    window = plan_window(0, lanes, local_cap)
+    fcap = plan_frontier_cap(cfg.frontier_exchange, cfg.frontier_cap,
+                             lanes, n_owned)
+
+    programs: Dict[str, Any] = {}
+    lowered: Dict[str, Any] = {}
+    donated: Dict[str, Tuple[int, ...]] = {}
+    rounds: Dict[str, Tuple[List[Traffic], Any]] = {}
+
+    if cfg.engine == "host":
+        # the seed two-program path: one jit per edit kind, no donation
+        # (the baseline copies per call — its manifest says so)
+        src, dst, valid, core, label, n_edges, iu, iv, iok, ru, rv, rok = (
+            _batch_args(params, n)
+        )
+        ins_args = (src, dst, valid, core, label, iu, iv, iok, n_edges)
+        programs["insert_batch"] = jax.make_jaxpr(
+            lambda *a: insert_batch(*a, n, params.n_levels)
+        )(*ins_args)
+        lowered["insert_batch"] = insert_batch.lower(
+            *ins_args, n=n, n_levels=params.n_levels
+        )
+        donated["insert_batch"] = ()
+        slots = jnp.full(lanes, -1, jnp.int32)
+        rm_args = (src, dst, valid, core, label, slots)
+        programs["remove_batch"] = jax.make_jaxpr(
+            lambda *a: remove_batch(*a, n, params.n_levels)
+        )(*rm_args)
+        lowered["remove_batch"] = remove_batch.lower(
+            *rm_args, n=n, n_levels=params.n_levels
+        )
+        donated["remove_batch"] = ()
+    elif cfg.engine == "unified":
+        args = _batch_args(params, n)
+        programs["apply_batch"] = jax.make_jaxpr(
+            lambda *a: apply_batch(*a, n, params.n_levels, window)
+        )(*args)
+        lowered["apply_batch"] = apply_batch.lower(
+            *args, n=n, n_levels=params.n_levels, active_cap=window
+        )
+        donated["apply_batch"] = DONATED_STATE_ARGS
+    else:
+        mesh = jax.make_mesh((d,), (EDGE_AXIS,))
+        fn = make_sharded_apply(
+            mesh, n, params.n_levels, axis=EDGE_AXIS,
+            local_active=window,
+            vertex_sharding=cfg.vertex_sharding,
+            freelist=cfg.freelist,
+            frontier_exchange=cfg.frontier_exchange,
+            frontier_cap=fcap,
+        )
+        n_state = n_owned * d if cfg.vertex_sharding == "range" else n
+        args = _batch_args(params, n_state)
+        programs["apply_batch"] = jax.make_jaxpr(fn)(*args)
+        lowered["apply_batch"] = fn.lower(*args)
+        donated["apply_batch"] = DONATED_STATE_ARGS
+        round_fcap = fcap if cfg.frontier_exchange == "sparse" else None
+        rounds["removal_round"] = trace_removal_round(
+            cfg.vertex_sharding, n, cap, mesh, round_fcap
+        )
+        rounds["promotion_round"] = trace_promotion_round(
+            cfg.vertex_sharding, n, cap, mesh, round_fcap, lanes
+        )
+
+    sizes = dict(
+        n=n, d=d, cap=fcap, n_owned=n_owned, n_pad=n_owned * d,
+        lanes=lanes, window=window, local_cap=local_cap,
+    )
+    return TracedEngine(
+        config=cfg, params=params, n_devices=d, window=window,
+        frontier_cap=fcap, programs=programs, lowered=lowered,
+        donated=donated, rounds=rounds, sizes=sizes,
+    )

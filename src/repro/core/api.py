@@ -86,6 +86,74 @@ def _pow2_roundup(need: int) -> int:
     return p
 
 
+def plan_window(hwm_ub: int, b_ins: int, local_cap: int) -> int:
+    """Pow2 bucket of the per-shard active window covering the high-water
+    bound plus a ``b_ins``-insert batch, clamped to the shard size.
+
+    Pure in its arguments — no maintainer state, no device sync — which
+    is what lets the recompile-surface audit rule (repro.analysis)
+    enumerate every window the planner can ever pick."""
+    return min(_pow2_roundup(max(16, hwm_ub + b_ins + 1)), local_cap)
+
+
+def plan_frontier_cap(frontier_exchange: str, pinned_cap: int,
+                      b_pad: int, n_owned: int) -> int:
+    """Static pow2 capacity of the sparse frontier index buffer for a
+    batch padded to ``b_pad`` lanes (0 when the exchange is off,
+    ``pinned_cap`` verbatim when the caller pinned one).
+
+    Deterministic in the batch BUCKET — which already keys a trace — so
+    a stream with stable batch sizes never recompiles mid-stream for the
+    frontier cap, exactly like the active-window bucket planning. The
+    heuristic covers a few cascade multiples of the batch (the paper's
+    Fig. 5: the affected set per edit is tiny, so per-round frontiers
+    rarely outrun the batch size); a miss-sized cap costs only the
+    in-program bitmask fallback round — never correctness — so no sync
+    or exact bound is needed here. Clamped to the pow2 roof of the owned
+    range, past which the sparse buffer cannot beat the bitmask anyway
+    (docs/DESIGN.md §4.3 crossover)."""
+    if frontier_exchange != "sparse":
+        return 0
+    if pinned_cap > 0:
+        return pinned_cap
+    cap = _pow2_roundup(max(32, 4 * b_pad))
+    while cap // 2 >= n_owned:
+        cap //= 2
+    return cap
+
+
+def bucket_lattice(local_cap: int, max_batch_lanes: int,
+                   frontier_exchange: str = "bitmask",
+                   pinned_cap: int = 0, n_owned: int = 1) -> list:
+    """Every (window, frontier_cap) static bucket pair the planners above
+    can reach for batches up to ``max_batch_lanes`` padded lanes.
+
+    Each pair keys exactly one jitted program variant
+    (``CoreMaintainer._get_sharded_fn``; the unified engine uses the
+    window alone), so the lattice size IS the worst-case compile count
+    over an entire stream — the quantity the recompile-surface audit
+    rule bounds. Enumerated exhaustively: ``plan_window`` is monotone in
+    ``hwm_ub + b_ins`` with image {pow2 p : 16 <= p < local_cap} plus
+    the ``local_cap`` clamp, and ``plan_frontier_cap`` only depends on
+    the pow2 batch bucket."""
+    windows = set()
+    p = 16
+    while p < local_cap:
+        windows.add(p)
+        p *= 2
+    windows.add(min(p, local_cap))
+    caps = set()
+    if frontier_exchange != "sparse":
+        caps.add(0)
+    else:
+        b = 1
+        while b <= max(1, max_batch_lanes):
+            caps.add(plan_frontier_cap(frontier_exchange, pinned_cap,
+                                       b, n_owned))
+            b *= 2
+    return sorted((w, c) for w in windows for c in caps)
+
+
 def _pad_pow2(x: np.ndarray, fill: int) -> np.ndarray:
     p = _pow2_roundup(max(1, len(x)))
     out = np.full(p, fill, dtype=np.int32)
@@ -306,36 +374,17 @@ class CoreMaintainer:
         return fn
 
     # -- capacity planning ---------------------------------------------------
+    # both buckets delegate to the module-level pure planners above, so
+    # the recompile-surface audit (repro.analysis) enumerates the exact
+    # lattice the live maintainer draws from
     def _window(self, b_ins: int) -> int:
-        """Pow2 bucket of the per-shard active window covering the
-        high-water bound plus this batch, clamped to the shard size."""
-        return min(_pow2_roundup(max(16, self.hwm_ub + b_ins + 1)),
-                   self._local_cap)
+        return plan_window(self.hwm_ub, b_ins, self._local_cap)
 
     def _frontier_bucket(self, b_pad: int) -> int:
-        """Static pow2 capacity of the sparse frontier index buffer for a
-        batch padded to ``b_pad`` lanes (0 when the exchange is off).
-
-        Deterministic in the batch BUCKET — which already keys a trace —
-        so a stream with stable batch sizes never recompiles mid-stream
-        for the frontier cap, exactly like ``active_cap``/``local_active``
-        bucket planning. The heuristic covers a few cascade multiples of
-        the batch (the paper's Fig. 5: the affected set per edit is tiny,
-        so per-round frontiers rarely outrun the batch size); a
-        miss-sized cap costs only the in-program bitmask fallback round —
-        never correctness — so no sync or exact bound is needed here.
-        Clamped to the pow2 roof of the owned range, past which the
-        sparse buffer cannot beat the bitmask anyway (docs/DESIGN.md
-        §4.3 crossover)."""
-        if self.frontier_exchange != "sparse":
-            return 0
-        if self.frontier_cap > 0:
-            return self.frontier_cap
-        cap = _pow2_roundup(max(32, 4 * b_pad))
-        n_owned = -(-self._n_vertex_pad // self._n_shards)
-        while cap // 2 >= n_owned:
-            cap //= 2
-        return cap
+        return plan_frontier_cap(
+            self.frontier_exchange, self.frontier_cap, b_pad,
+            -(-self._n_vertex_pad // self._n_shards),
+        )
 
     @property
     def _n_shards(self) -> int:

@@ -7,7 +7,7 @@ implementations.  The Order-Maintenance (OM) list is implemented as a
 linked list with integer gap labels and amortized per-level renumbering —
 the same O(1) ``Order(x, y)`` interface the paper's two-level OM provides
 (the two-level/group refinement only changes relabel constants; see
-docs/DESIGN.md §5).
+docs/DESIGN.md §6).
 
 All maintainers expose instrumentation: ``last_v_plus`` / ``last_v_star``
 (sizes of the searched and changed sets for the most recent edge), which

@@ -49,7 +49,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
-from .engine import batch_program
+from .engine import DONATED_STATE_ARGS, batch_program
 from .vertex_layout import make_layout
 
 Array = jax.Array
@@ -218,7 +218,7 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
         out_specs=(P(axis), P(axis), P(axis), vspec, vspec, P(), P()),
         check_vma=False,
     )
-    return jax.jit(shardmapped, donate_argnums=(0, 1, 2, 3, 4, 5))
+    return jax.jit(shardmapped, donate_argnums=DONATED_STATE_ARGS)
 
 
 def _seg_psum(data: Array, ids: Array, n: int, axis: str) -> Array:

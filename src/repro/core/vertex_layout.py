@@ -85,6 +85,15 @@ class Traffic:
     #                   the sparse exchange's lax.cond fallback arm
 
 
+# ``Traffic.branch`` value for each arm of the sparse exchange's
+# ``lax.cond(overflow, from_bitmask, from_indices, _)``, indexed by the
+# traced branch position: JAX stores cond branches as (false, true), so
+# branches[0] is the non-overflow index path ("") and branches[1] the
+# bitmask fallback ("overflow"). The static auditor (repro.analysis)
+# uses this to line jaxpr cond-branch attribution up with the
+# trace-time records below.
+SPARSE_COND_BRANCHES = ("", "overflow")
+
 _LOG: Optional[List[Traffic]] = None
 _OWNER: Optional[int] = None  # thread that opened the active session
 # the lock makes session entry/exit and appends atomic, so a second

@@ -31,8 +31,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.analysis import cross_check_round, primitive_names
+from repro.analysis.programs import trace_removal_round
 from repro.compat import shard_map
-from repro.core.remove import removal_fixpoint
 from repro.core.vertex_layout import (
     RangeShardedVertices,
     ReplicatedVertices,
@@ -149,58 +150,6 @@ def test_range_layout_roundtrips_one_shard():
     assert bool(some)
 
 
-def _primitive_names(closed) -> set:
-    """All primitive names in a (closed) jaxpr, nested jaxprs included."""
-    names = set()
-
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            names.add(eqn.primitive.name)
-            for val in eqn.params.values():
-                vals = val if isinstance(val, (list, tuple)) else [val]
-                for v in vals:
-                    if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
-                        walk(v.jaxpr)
-                    elif hasattr(v, "eqns"):
-                        walk(v)
-
-    walk(closed.jaxpr)
-    return names
-
-
-def _trace_removal_round(vertex_sharding: str, n: int, cap: int,
-                         mesh, frontier_cap=None) -> list:
-    """Trace (not run) the removal fixpoint under shard_map and return
-    the layout collectives recorded for ONE loop round."""
-    axis = "data"
-    n_shards = dict(mesh.shape)[axis]
-    layout = (
-        make_layout("range", n, axis, n_shards, frontier_cap)
-        if vertex_sharding == "range"
-        else make_layout("replicated", n, axis)
-    )
-    stat_spec = P(axis) if vertex_sharding == "range" else P()
-
-    def kernel(src, dst, valid, core, label):
-        return removal_fixpoint(src, dst, valid, core, label, n, n + 2,
-                                layout=layout)
-
-    sm = shard_map(
-        kernel, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(), P()),
-        out_specs=(P(), P(), P(), stat_spec, stat_spec),
-        check_vma=False,
-    )
-    src = jnp.zeros(cap, jnp.int32)
-    dst = jnp.ones(cap, jnp.int32)
-    valid = jnp.zeros(cap, bool)
-    core = jnp.zeros(n, jnp.int32)
-    label = jnp.zeros(n, jnp.int64)
-    with record_traffic() as log:
-        jaxpr = jax.make_jaxpr(sm)(src, dst, valid, core, label)
-    return log, _primitive_names(jaxpr)
-
-
 def test_per_round_traffic_replicated_vs_range():
     """The acceptance traffic model on a 1-shard mesh: the replicated
     layout psums the full [n, 3] stats each round; the range layout
@@ -211,8 +160,10 @@ def test_per_round_traffic_replicated_vs_range():
     n, cap = 24, 32
     mesh = jax.make_mesh((1,), ("data",))
 
-    rep_log, rep_prims = _trace_removal_round("replicated", n, cap, mesh)
-    rng_log, rng_prims = _trace_removal_round("range", n, cap, mesh)
+    rep_log, rep_jx = trace_removal_round("replicated", n, cap, mesh)
+    rng_log, rng_jx = trace_removal_round("range", n, cap, mesh)
+    rep_prims = primitive_names(rep_jx)
+    rng_prims = primitive_names(rng_jx)
 
     # replicated: exactly one vertex collective per round — the [n, 3]
     # int32 psum, every device receiving the full completed stats
@@ -232,6 +183,9 @@ def test_per_round_traffic_replicated_vs_range():
     # no full-stat psum
     assert {"reduce_scatter", "all_gather"} <= rng_prims
     assert "psum" not in rng_prims
+    # and the trace-time accounting above describes the REAL program,
+    # collective by collective (op mapping + payload bytes)
+    assert cross_check_round(rng_log, rng_jx) == []
 
 
 def test_sparse_mask_roundtrip_across_overflow_boundary():
@@ -263,8 +217,9 @@ def test_per_round_traffic_sparse_frontier():
     (The 8-shard byte counts are pinned by the subprocess test.)"""
     n, cap, fcap = 24, 32, 8
     mesh = jax.make_mesh((1,), ("data",))
-    log, prims = _trace_removal_round("range", n, cap, mesh,
-                                      frontier_cap=fcap)
+    log, jaxpr = trace_removal_round("range", n, cap, mesh,
+                                     frontier_cap=fcap)
+    prims = primitive_names(jaxpr)
 
     lay = RangeShardedVertices(n, "data", 1, frontier_cap=fcap)
     main = [t for t in log if t.branch != "overflow"]
@@ -283,9 +238,13 @@ def test_per_round_traffic_sparse_frontier():
     # the ONLY bitmask gather lives on the overflow branch
     assert [t.op for t in fallback] == ["gather_mask"]
     assert fallback[0].recv_bytes == 1 * -(-lay.n_owned // 8)
-    # jaxpr cross-check: still reduce_scatter + all_gathers, no psum
+    # jaxpr cross-check: still reduce_scatter + all_gathers, no psum,
+    # and the traffic notes match the program collective-by-collective
+    # (branch attribution included — the overflow gather must sit on the
+    # cond's overflow arm in the jaxpr too)
     assert {"reduce_scatter", "all_gather"} <= prims
     assert "psum" not in prims
+    assert cross_check_round(log, jaxpr) == []
 
 
 _TRAFFIC_8DEV = textwrap.dedent(
@@ -295,14 +254,15 @@ _TRAFFIC_8DEV = textwrap.dedent(
     import jax
 
     import repro  # enables x64
-    from test_vertex_layout import _trace_removal_round
+    from repro.analysis import cross_check_round
+    from repro.analysis.programs import trace_removal_round
 
     n, cap, d, fcap = 240, 512, 8, 8
     mesh = jax.make_mesh((8,), ("data",))
-    rep_log, _ = _trace_removal_round("replicated", n, cap, mesh)
-    rng_log, _ = _trace_removal_round("range", n, cap, mesh)
-    sp_log, _ = _trace_removal_round("range", n, cap, mesh,
-                                     frontier_cap=fcap)
+    rep_log, rep_jx = trace_removal_round("replicated", n, cap, mesh)
+    rng_log, rng_jx = trace_removal_round("range", n, cap, mesh)
+    sp_log, sp_jx = trace_removal_round("range", n, cap, mesh,
+                                        frontier_cap=fcap)
 
     [psum] = rep_log
     rs, gm = rng_log
@@ -334,6 +294,13 @@ _TRAFFIC_8DEV = textwrap.dedent(
     assert main[1].recv_bytes == d * (fcap + 1) * 4, main
     assert [t.op for t in over] == ["gather_mask"], over
     assert over[0].recv_bytes == gm.recv_bytes, over
+    # the accounting above must describe the traced programs exactly
+    # (op mapping, payload bytes, overflow-branch attribution) at 8
+    # shards too, not just on the 1-shard mesh of the fast tests
+    for log, jx in ((rep_log, rep_jx), (rng_log, rng_jx),
+                    (sp_log, sp_jx)):
+        mismatches = cross_check_round(log, jx)
+        assert mismatches == [], mismatches
     print("traffic-8dev OK", mesh_rep, mesh_rng,
           main[1].recv_bytes * d)
     """
