@@ -15,6 +15,10 @@ before any benchmark runs:
     (``dtype_policy``),
   * how many jit variants can the (window, frontier-cap) planners ever
     key (``recompile_surface``),
+  * what does each program keep live per device — symbolic peak /
+    per-round / at-rest / donated byte formulas, plus the
+    no-replicated-O(n)-buffer policy for the range layouts
+    (``memory_budget``, ``memory.py``),
 
 plus an AST lint of the sync-free planning path (``hostlint``) and the
 BENCH_stream.json coherence gate (``benchcheck``). CLI:
@@ -32,6 +36,12 @@ from .audit import (  # noqa: F401
 )
 from .benchcheck import check_bench  # noqa: F401
 from .hostlint import LintFinding, lint_file  # noqa: F401
+from .memory import (  # noqa: F401
+    generate_memory_section,
+    profile_program,
+    program_body,
+    replicated_vertex_sites,
+)
 from .programs import (  # noqa: F401
     ENGINE_CONFIGS,
     AuditParams,

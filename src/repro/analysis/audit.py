@@ -10,6 +10,7 @@ CI consumes exactly one report format).
 Usage:
     python -m repro.analysis.audit --engine all            # gate
     python -m repro.analysis.audit --engine all --devices 8
+    python -m repro.analysis.audit --engine all --memory   # memory only
     python -m repro.analysis.audit --write-budgets --devices 8
     python -m repro.analysis.audit --check-bench BENCH_stream.json
 
@@ -22,7 +23,10 @@ package imports jax, so the flag cannot be set in-process).
 Run it at ``--devices 8``: payload formulas are matched against the
 observed byte counts, and several candidates coincide numerically on 1
 device (``n_owned == n``) — a multi-device trace disambiguates them so
-the committed formula holds on EVERY device count.
+the committed formula holds on EVERY device count. The memory section
+goes further: each sharded engine is traced a SECOND time on an
+explicit 1-device mesh and every buffer dimension is solved against
+both size environments at once (see ``memory.generate_memory_section``).
 """
 from __future__ import annotations
 
@@ -35,7 +39,7 @@ import sys
 from typing import Dict, List, Optional, Sequence
 
 SCHEMA = "repro.analysis/report/v1"
-BUDGET_SCHEMA = "repro.analysis/budget/v1"
+BUDGET_SCHEMA = "repro.analysis/budget/v2"
 BUDGET_DIR = os.path.join(os.path.dirname(__file__), "budgets")
 _CHILD_GUARD = "_REPRO_AUDIT_REEXEC"
 
@@ -75,16 +79,29 @@ def load_budget(engine: str, budget_dir: Optional[str] = None) -> dict:
             "--write-budgets --devices 8` and commit it"
         )
     with open(path) as fh:
-        return json.load(fh)
+        budget = json.load(fh)
+    got = budget.get("schema")
+    if got != BUDGET_SCHEMA:
+        raise ValueError(
+            f"budget manifest {path} has schema {got!r} but this "
+            f"auditor expects {BUDGET_SCHEMA!r} — regenerate with "
+            "`python -m repro.analysis.audit --write-budgets "
+            "--devices 8` and commit the result"
+        )
+    return budget
 
 
-def generate_budget(traced) -> dict:
+def generate_budget(traced, paired=None) -> dict:
     """Build a budget manifest from a traced engine: exact collective
     histograms, ordered per-round op lists with payload formulas
-    (``rules.guess_formula``), the donated-arg sets, and the jit-variant
+    (``rules.guess_formula``), the donated-arg sets, the jit-variant
     bound computed at its 1-device maximum (the window lattice is
-    largest when one shard holds the whole table)."""
+    largest when one shard holds the whole table), and the symbolic
+    per-device memory section (``memory.generate_memory_section``;
+    ``paired`` is the same engine traced at a different mesh size, which
+    sharded engines need to disambiguate buffer-size formulas)."""
     from ..core.api import bucket_lattice
+    from .memory import generate_memory_section
     from .rules import guess_formula, split_round_collectives
     from .walker import count_collectives
 
@@ -136,14 +153,18 @@ def generate_budget(traced) -> dict:
         "max_jit_variants": max_variants,
         "large_output_bytes": 1024,
         "require_large_outputs_donated": cfg.engine != "host",
+        "memory": generate_memory_section(traced, paired),
     }
 
 
 def audit_engines(engines: Sequence[str],
                   budget_dir: Optional[str] = None,
-                  params=None) -> dict:
+                  params=None,
+                  rules: Optional[Sequence[str]] = None) -> dict:
     """Pytest-importable entry: trace + audit the given engine configs
-    against their committed budgets, returning one report dict."""
+    against their committed budgets, returning one report dict.
+    ``rules`` restricts the run to a subset of the registry (the CLI's
+    ``--memory`` flag passes ``["memory_budget"]``)."""
     import jax
 
     from .programs import AuditParams, trace_engine
@@ -154,7 +175,7 @@ def audit_engines(engines: Sequence[str],
     for name in engines:
         traced = trace_engine(name, params)
         budget = load_budget(name, budget_dir)
-        for rname, findings in run_rules(traced, budget).items():
+        for rname, findings in run_rules(traced, budget, rules).items():
             checks.append(make_check(rname, name, findings))
     return make_report(
         checks,
@@ -168,7 +189,7 @@ def audit_engines(engines: Sequence[str],
 def write_budgets(engines: Sequence[str],
                   budget_dir: Optional[str] = None,
                   params=None) -> List[str]:
-    from .programs import AuditParams, trace_engine
+    from .programs import ENGINE_CONFIGS, AuditParams, trace_engine
 
     params = params or AuditParams()
     out_dir = budget_dir or BUDGET_DIR
@@ -176,9 +197,17 @@ def write_budgets(engines: Sequence[str],
     written = []
     for name in engines:
         traced = trace_engine(name, params)
+        # second trace on an explicit 1-device mesh: shard_map traces
+        # one program regardless of mesh size, so the paired point
+        # sequences line up and buffer-size formulas get solved against
+        # two size environments at once (memory.generate_memory_section)
+        paired = (trace_engine(name, params, devices=1)
+                  if ENGINE_CONFIGS[name].is_sharded
+                  and traced.n_devices > 1 else None)
         path = budget_path(name, out_dir)
         with open(path, "w") as fh:
-            json.dump(generate_budget(traced), fh, indent=2, sort_keys=True)
+            json.dump(generate_budget(traced, paired), fh, indent=2,
+                      sort_keys=True)
             fh.write("\n")
         written.append(path)
     return written
@@ -241,6 +270,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--budget-dir", default=None,
                    help="manifest directory (default: the committed "
                         "package budgets/)")
+    p.add_argument("--memory", action="store_true",
+                   help="run only the memory_budget rule (symbolic "
+                        "per-device peak / at-rest / donation audit)")
     p.add_argument("--write-budgets", action="store_true",
                    help="regenerate the budget manifests instead of "
                         "checking (run with --devices 8)")
@@ -287,7 +319,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             print(f"wrote {path}")
         return 0
 
-    report = audit_engines(engines, args.budget_dir)
+    report = audit_engines(
+        engines, args.budget_dir,
+        rules=["memory_budget"] if args.memory else None,
+    )
     if args.out:
         with open(args.out, "w") as fh:
             json.dump(report, fh, indent=2)

@@ -11,6 +11,17 @@ from __future__ import annotations
 import json
 from typing import List
 
+# stamped into BENCH_stream.json by benchmarks.core_maintenance; bumped
+# whenever the artifact gains fields the audit relies on (v2: per-engine
+# max_frontier observability). An artifact with an older/missing stamp
+# predates the current manifests and must be regenerated, not trusted.
+BENCH_SCHEMA = "repro.analysis/bench/v2"
+
+REGEN_HINT = (
+    "regenerate with `PYTHONPATH=src python -m benchmarks.run` (no "
+    "--quick) and commit the refreshed BENCH_stream.json"
+)
+
 # a --quick benchmarks.run skips the device-scaling sweeps (and writes
 # BENCH_stream.quick.json instead for that reason) — the committed
 # artifact must carry all of these
@@ -34,8 +45,18 @@ def check_bench(path: str) -> dict:
     try:
         with open(path) as fh:
             blob = json.load(fh)
+    except FileNotFoundError:
+        findings.append(_finding(
+            f"no bench artifact at {path} — {REGEN_HINT}"))
+        blob = None
     except (OSError, ValueError) as e:
-        findings.append(_finding(f"cannot load {path}: {e}"))
+        findings.append(_finding(f"cannot load {path}: {e} — {REGEN_HINT}"))
+        blob = None
+    if blob is not None and blob.get("schema") != BENCH_SCHEMA:
+        findings.append(_finding(
+            f"{path} predates the current artifact schema (found "
+            f"{blob.get('schema')!r}, expected {BENCH_SCHEMA!r}) — "
+            + REGEN_HINT))
         blob = None
     if blob is not None:
         # engines_agree covers EVERY recorded engine row (incl. the

@@ -22,6 +22,13 @@ deliberate, reviewed sync — none exist today). ``_refresh_bounds``,
 ``_maybe_renumber``, ``edge_slot``, ``cores``/``labels`` are NOT in the
 sync-free set: they are the documented amortized/host/query sync points.
 
+Beyond api.py, the engine-level builders are linted too (LINT_TARGETS):
+``core/engine.py`` (``batch_program`` / ``apply_batch`` /
+``batch_dedup`` / ``table_lookup``) and ``core/sharded.py``
+(``make_sharded_apply`` including its nested shard_map kernel). Those
+are free functions, so device state is matched by bare parameter name
+(DEVICE_PARAMS) rather than ``self.<field>``.
+
 Run as ``python -m repro.analysis.hostlint`` (CI) or through
 tests/test_analysis.py.
 """
@@ -33,9 +40,12 @@ import os
 import sys
 from typing import List, Optional, Sequence
 
-API_PATH = os.path.normpath(os.path.join(
-    os.path.dirname(__file__), os.pardir, "core", "api.py"
+_CORE_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), os.pardir, "core"
 ))
+API_PATH = os.path.join(_CORE_DIR, "api.py")
+ENGINE_PATH = os.path.join(_CORE_DIR, "engine.py")
+SHARDED_PATH = os.path.join(_CORE_DIR, "sharded.py")
 
 # the per-batch edit path + every planning helper it calls; a sync in
 # any of these lands on the critical path of EVERY batch
@@ -53,11 +63,32 @@ SYNC_FREE_FUNCS = frozenset({
     "bucket_lattice",
 })
 
+# per-file sync-free sets: the engine-level batch builders and the
+# shard_map kernel constructor are traced code — ANY host coercion of a
+# device-array parameter there is a sync baked into every batch (and
+# usually a silent ConcretizationTypeError waiting for jit)
+LINT_TARGETS = {
+    API_PATH: SYNC_FREE_FUNCS,
+    ENGINE_PATH: frozenset({
+        "batch_program", "apply_batch", "batch_dedup", "table_lookup",
+    }),
+    SHARDED_PATH: frozenset({"make_sharded_apply"}),
+}
+
 # fields of CoreMaintainer that live on device mid-stream — forcing any
 # of them to host blocks until the in-flight batch program finishes
 DEVICE_FIELDS = frozenset({
     "src", "dst", "valid", "core", "label", "n_edges",
     "last_batch_stats", "last_insert_stats", "last_remove_stats",
+})
+
+# bare parameter names that carry device arrays through the engine-level
+# helpers (free functions — no `self.`); matched as plain Names so
+# `int(n_edges)` inside batch_program is flagged just like
+# `int(self.n_edges)` inside apply_batch
+DEVICE_PARAMS = frozenset({
+    "src", "dst", "valid", "core", "label", "n_edges", "stats",
+    "seed", "slots",
 })
 
 SYNC_BUILTINS = frozenset({"int", "float", "bool"})
@@ -90,6 +121,8 @@ def _touches_device_state(node: ast.AST) -> bool:
                 and isinstance(sub.value, ast.Name)
                 and sub.value.id == "self"
                 and sub.attr in DEVICE_FIELDS):
+            return True
+        if isinstance(sub, ast.Name) and sub.id in DEVICE_PARAMS:
             return True
     return False
 
@@ -127,10 +160,13 @@ def _lint_func(fn: ast.AST, lines: Sequence[str],
 
 
 def lint_file(path: Optional[str] = None,
-              funcs: frozenset = SYNC_FREE_FUNCS) -> List[LintFinding]:
+              funcs: Optional[frozenset] = None) -> List[LintFinding]:
     """Lint one source file; returns findings for every forbidden sync
-    construct inside the named sync-free functions."""
+    construct inside the named sync-free functions (default: the file's
+    ``LINT_TARGETS`` entry, or the api.py set)."""
     path = path or API_PATH
+    if funcs is None:
+        funcs = LINT_TARGETS.get(os.path.normpath(path), SYNC_FREE_FUNCS)
     with open(path) as fh:
         src = fh.read()
     tree = ast.parse(src, filename=path)
@@ -144,7 +180,8 @@ def lint_file(path: Optional[str] = None,
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
-    paths = list(argv if argv is not None else sys.argv[1:]) or [API_PATH]
+    paths = (list(argv if argv is not None else sys.argv[1:])
+             or sorted(LINT_TARGETS))
     findings: List[LintFinding] = []
     for p in paths:
         findings.extend(lint_file(p))

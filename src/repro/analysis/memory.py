@@ -1,0 +1,691 @@
+"""Symbolic per-device memory auditing — buffer lifetimes over jaxprs.
+
+The ROADMAP's billion-edge direction stands on a MEMORY claim ("O(n/d +
+halo) per device after the halo refactor") the way the traffic model
+stands on collective counts. This module makes that claim checkable
+before the refactor exists:
+
+* ``profile_program`` — a buffer-lifetime pass over the walked jaxpr
+  (the same nested pjit/while/cond/shard_map traversal as walker.py):
+  every equation is a program point whose live bytes are the deduped sum
+  of all buffers still referenced, in this frame and every enclosing
+  one. Non-donated program inputs are pinned to the end (the caller
+  still owns them); donated inputs die at their last use — which is
+  exactly how XLA donation frees them, so the donation credit falls out
+  of ordinary liveness instead of being bolted on.
+* symbolic formulas — the observed peak / per-round peak / at-rest
+  byte counts are re-expressed as closed forms in the audit size names
+  (n, d, cap, window, local_cap, …), like the collective budgets'
+  ``recv_bytes`` formulas. A single trace cannot disambiguate them (at
+  the audit point n_owned == lanes == d == 8), so sharded engines are
+  traced TWICE — at the current mesh size and at an explicit 1-device
+  mesh (``trace_engine(..., devices=1)``): shard_map traces one program
+  regardless of mesh size, so the paired point sequences are identical
+  and every buffer dimension is solved against two distinct size
+  environments at once.
+* the sharding-propagation rule — any vertex-sized O(n) buffer live
+  REPLICATED inside a shard_map body (a 1-D ``all_gather`` output with
+  >= n elements: tiled gathers that materialize full vertex-indexed
+  arrays; the 2-D ``[d, ...]`` gathers keep their shard dimension and
+  are bounded exchange buffers). Today this fires exactly twice per
+  range engine — the entry core/label gather in ``core/sharded.py`` —
+  committed as an explicit waiver (``ENTRY_GATHER_WAIVER``) that the
+  halo refactor must delete.
+
+Everything is static: no program executes; all byte counts come from
+equation avals, and ``tests/test_memory_audit.py`` cross-checks the
+d=1 formulas against real buffer sizes and the compiled program's
+``memory_analysis()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+from ..core.sharded import ENTRY_GATHER_WAIVER
+from .rules import Finding, eval_formula, rule
+from .walker import ROUND_TAG, iter_sites
+
+# per-program positions of the persistent state arguments, as seen by
+# the per-device program body (the at-rest working set of the engine)
+STATE_ARGS: Dict[str, Tuple[Tuple[str, int], ...]] = {
+    "apply_batch": (("src", 0), ("dst", 1), ("valid", 2),
+                    ("core", 3), ("label", 4), ("n_edges", 5)),
+    "insert_batch": (("src", 0), ("dst", 1), ("valid", 2),
+                     ("core", 3), ("label", 4), ("n_edges", 8)),
+    "remove_batch": (("src", 0), ("dst", 1), ("valid", 2),
+                     ("core", 3), ("label", 4)),
+}
+
+# per-dimension candidate formulas, most-specific first: a dimension is
+# committed as the FIRST candidate matching its value in BOTH paired
+# size environments, so a d=8/d=1 pair pins e.g. 64 to "n" (not
+# "n_owned", which is 8 on the 8-device side). A dimension equal in
+# both environments with no matching candidate folds into the literal
+# coefficient (constant across device counts by construction).
+DIM_CANDIDATES = (
+    "n + 2",
+    "cap + 1",
+    "local_cap - window",
+    "2 * local_cap",
+    "local_cap",
+    "window",
+    "cap",
+    "n",
+    "n_owned",
+    "lanes",
+    "d",
+    "ceil_div(n_owned, 8)",
+    "ceil_div(n, 8)",
+    "n_owned * d",
+)
+
+
+def _is_literal(v) -> bool:
+    return hasattr(v, "val") and not hasattr(v, "count")
+
+
+def _aval_bytes(aval) -> int:
+    size = 1
+    for d in getattr(aval, "shape", ()):
+        size *= int(d)
+    return size * aval.dtype.itemsize
+
+
+def _aval_elems(aval) -> int:
+    size = 1
+    for d in getattr(aval, "shape", ()):
+        size *= int(d)
+    return size
+
+
+def _raw(jx):
+    """ClosedJaxpr -> Jaxpr (identity on raw jaxprs)."""
+    inner = getattr(jx, "jaxpr", None)
+    if inner is not None and hasattr(inner, "eqns"):
+        return inner
+    return jx
+
+
+def _body_and_map(closed):
+    """The per-device program body plus the outer-arg -> body-invar map.
+
+    Sharded programs are profiled inside the shard_map (where every
+    shape is the device-local shard); host/unified programs are the
+    pjit-unwrapped top jaxpr. Argument positions are tracked by var
+    identity through both unwrappings because shard_map prepends
+    hoisted scalar constants to its body's invars — position ``i`` of
+    the public program is NOT invar ``i`` of the body."""
+    jaxpr = _raw(closed)
+    tracked = list(jaxpr.invars)
+    while len(jaxpr.eqns) == 1 and jaxpr.eqns[0].primitive.name == "pjit":
+        eqn = jaxpr.eqns[0]
+        sub = _raw(eqn.params["jaxpr"])
+        pos = {id(v): i for i, v in enumerate(eqn.invars)}
+        tracked = [
+            sub.invars[pos[id(v)]] if id(v) in pos else None
+            for v in tracked
+        ]
+        jaxpr = sub
+    sm = [e for e in jaxpr.eqns if e.primitive.name == "shard_map"]
+    if len(sm) == 1:
+        eqn = sm[0]
+        body = _raw(eqn.params["jaxpr"])
+        pos = {id(v): i for i, v in enumerate(eqn.invars)}
+        tracked = [
+            body.invars[pos[id(v)]] if id(v) in pos else None
+            for v in tracked
+        ]
+        jaxpr = body
+    by_id = {id(v): i for i, v in enumerate(jaxpr.invars)}
+    amap = {
+        i: by_id[id(v)]
+        for i, v in enumerate(tracked)
+        if v is not None and id(v) in by_id
+    }
+    return jaxpr, amap
+
+
+def program_body(closed):
+    """The per-device program body (see ``_body_and_map``)."""
+    return _body_and_map(closed)[0]
+
+
+def body_arg_map(closed) -> Dict[int, int]:
+    """Map public program argument index -> body invar index."""
+    return _body_and_map(closed)[1]
+
+
+class _Buf:
+    """One buffer: allocation order is the pairing key across traces."""
+
+    __slots__ = ("uid", "aval", "nbytes")
+
+    def __init__(self, uid: int, aval) -> None:
+        self.uid = uid
+        self.aval = aval
+        self.nbytes = _aval_bytes(aval)
+
+
+@dataclasses.dataclass
+class Profile:
+    """Program points of one liveness pass, in deterministic walk order.
+
+    ``point_bytes[i]`` is the deduped live-byte total at point ``i``;
+    ``in_round[i]`` marks points inside a ``lax.while_loop`` body (the
+    per-round working set). ``captured`` maps a requested point index to
+    the live avals there (allocation-ordered — the pairing contract).
+    """
+
+    point_bytes: List[int]
+    in_round: List[bool]
+    captured: Dict[int, Tuple[Any, ...]]
+
+    @property
+    def peak(self) -> int:
+        return max(self.point_bytes) if self.point_bytes else 0
+
+    @property
+    def peak_index(self) -> int:
+        return self.point_bytes.index(self.peak)
+
+    def round_peak_index(self) -> Optional[int]:
+        best = None
+        for i, (b, r) in enumerate(zip(self.point_bytes, self.in_round)):
+            if r and (best is None or b > self.point_bytes[best]):
+                best = i
+        return best
+
+    @property
+    def round_peak(self) -> int:
+        i = self.round_peak_index()
+        return 0 if i is None else self.point_bytes[i]
+
+
+def _sub_specs(eqn) -> Iterator[Tuple[str, Any, List[Any], bool]]:
+    """Yield ``(tag, sub_jaxpr, sub_invar_sources, alias_outs)`` for
+    every sub-jaxpr of an equation. ``sub_invar_sources[i]`` is the eqn
+    invar (or Literal) feeding sub invar ``i``; ``alias_outs`` marks
+    sub-jaxprs whose outvars ARE the equation's outvars (while carries,
+    pjit results)."""
+    prim = eqn.primitive.name
+    if prim == "while":
+        cn = eqn.params["cond_nconsts"]
+        bn = eqn.params["body_nconsts"]
+        ncar = len(eqn.invars) - cn - bn
+        ins = list(eqn.invars)
+        yield ("while:cond_jaxpr", _raw(eqn.params["cond_jaxpr"]),
+               ins[:cn] + ins[cn + bn:], False)
+        yield ("while:body_jaxpr", _raw(eqn.params["body_jaxpr"]),
+               ins[cn:], True)
+    elif prim == "cond":
+        ops = list(eqn.invars[1:])
+        for i, br in enumerate(eqn.params["branches"]):
+            yield f"cond:branches[{i}]", _raw(br), ops, False
+    else:
+        for name, val in eqn.params.items():
+            vals = val if isinstance(val, (list, tuple)) else [val]
+            many = isinstance(val, (list, tuple))
+            for i, v in enumerate(vals):
+                sub = _raw(v)
+                if not hasattr(sub, "eqns"):
+                    continue
+                tag = f"{prim}:{name}[{i}]" if many else f"{prim}:{name}"
+                srcs = (list(eqn.invars)
+                        if len(sub.invars) == len(eqn.invars) else
+                        [None] * len(sub.invars))
+                yield tag, sub, srcs, len(sub.outvars) == len(eqn.outvars)
+
+
+def profile_program(closed, donated: Sequence[int] = (),
+                    capture: Sequence[int] = ()) -> Profile:
+    """Run the buffer-lifetime pass over a traced program's body.
+
+    Models exactly the residency XLA enforces: every equation allocates
+    its outputs; a buffer stays live until its last reader (across
+    nested frames — a sub-jaxpr executes with every enclosing frame's
+    live buffers still resident); non-donated program inputs and all
+    program outputs are pinned to the end; donated inputs (``donated``,
+    in PUBLIC argument positions — remapped to body invars internally)
+    are freed at their last use. Aliasing is positional and
+    aval-checked: while-loop carries, pjit results, and pass-throughs
+    share one buffer instead of double counting.
+    """
+    body, amap = _body_and_map(closed)
+    uid = itertools.count()
+    want = frozenset(int(i) for i in capture)
+    prof = Profile(point_bytes=[], in_round=[], captured={})
+
+    def walk(jx, in_bufs: List[Optional[_Buf]],
+             outer: Dict[int, _Buf], path: Tuple[str, ...],
+             pin: Optional[frozenset]) -> List[Optional[_Buf]]:
+        env: Dict[Any, _Buf] = {}
+        for v, b in zip(jx.invars, in_bufs):
+            env[v] = b if b is not None else _Buf(next(uid), v.aval)
+        for v in getattr(jx, "constvars", ()):
+            env[v] = _Buf(next(uid), v.aval)
+
+        n_eq = len(jx.eqns)
+        last: Dict[Any, int] = {}
+        for i, eqn in enumerate(jx.eqns):
+            for v in eqn.invars:
+                if not _is_literal(v):
+                    last[v] = i
+        for v in jx.outvars:
+            if not _is_literal(v):
+                last[v] = n_eq
+        # pinned (non-donated) top-frame inputs are held for the
+        # caller; constvars are compile-time residents either way.
+        # Sub-frames pin nothing — their invars alias parent buffers
+        # whose lifetime the parent frame already tracks.
+        for v in getattr(jx, "constvars", ()):
+            last[v] = n_eq
+        if pin is not None:
+            for pos, v in enumerate(jx.invars):
+                if pos in pin:
+                    last[v] = n_eq
+
+        # refcounted frame-live set (a buffer may back several vars)
+        refs: Dict[int, int] = {}
+        bufs: Dict[int, _Buf] = {}
+        frame_bytes = 0
+
+        def add(b: _Buf) -> None:
+            nonlocal frame_bytes
+            refs[b.uid] = refs.get(b.uid, 0) + 1
+            if refs[b.uid] == 1:
+                bufs[b.uid] = b
+                if b.uid not in outer:
+                    frame_bytes += b.nbytes
+
+        def drop(b: _Buf) -> None:
+            nonlocal frame_bytes
+            refs[b.uid] -= 1
+            if refs[b.uid] == 0:
+                del refs[b.uid], bufs[b.uid]
+                if b.uid not in outer:
+                    frame_bytes -= b.nbytes
+
+        for v, b in env.items():
+            if v in last:
+                add(b)
+        outer_bytes = sum(b.nbytes for b in outer.values())
+        in_round = ROUND_TAG in path
+
+        death: List[List[Any]] = [[] for _ in range(n_eq + 1)]
+        for v, i in last.items():
+            if i < n_eq and v in env:
+                death[i].append(v)
+
+        for i, eqn in enumerate(jx.eqns):
+            out_bufs: Optional[List[Optional[_Buf]]] = None
+            subs = list(_sub_specs(eqn))
+            if subs:
+                snapshot = dict(outer)
+                snapshot.update(bufs)
+                for tag, sub, srcs, alias_outs in subs:
+                    sub_in: List[Optional[_Buf]] = []
+                    for sv, src in zip(sub.invars, srcs):
+                        b = (env.get(src) if src is not None
+                             and not _is_literal(src) else None)
+                        sub_in.append(
+                            b if b is not None and b.aval == sv.aval
+                            else None
+                        )
+                    ret = walk(sub, sub_in, snapshot, path + (tag,),
+                               pin=None)
+                    if alias_outs and len(ret) == len(eqn.outvars):
+                        out_bufs = [
+                            b if b is not None and b.aval == ov.aval
+                            else None
+                            for b, ov in zip(ret, eqn.outvars)
+                        ]
+            new: List[_Buf] = []
+            for k, ov in enumerate(eqn.outvars):
+                b = out_bufs[k] if out_bufs is not None else None
+                if b is None:
+                    b = _Buf(next(uid), ov.aval)
+                if ov in last:
+                    add(b)
+                    new.append(b)
+                env[ov] = b
+            idx = len(prof.point_bytes)
+            prof.point_bytes.append(outer_bytes + frame_bytes)
+            prof.in_round.append(in_round or ROUND_TAG in path)
+            if idx in want:
+                live = dict(outer)
+                live.update(bufs)
+                prof.captured[idx] = tuple(
+                    b.aval for b in sorted(live.values(),
+                                           key=lambda b: b.uid)
+                )
+            for v in death[i]:
+                drop(env[v])
+        return [None if _is_literal(v) else env.get(v)
+                for v in jx.outvars]
+
+    body_donated = {amap[i] for i in donated if i in amap}
+    in_bufs = [_Buf(next(uid), v.aval) for v in body.invars]
+    walk(body, in_bufs, {}, (), pin=frozenset(
+        i for i in range(len(body.invars)) if i not in body_donated))
+    return prof
+
+
+# -- symbolic formulas over paired traces ---------------------------------
+
+def _dim_formula(a: int, b: int, env_a: Dict[str, int],
+                 env_b: Dict[str, int]) -> Optional[str]:
+    """The first candidate matching dimension value ``a`` in env_a AND
+    ``b`` in env_b; None folds an env-constant dimension into the
+    coefficient; a device-varying dimension with no candidate raises."""
+    if a == b == 1:
+        # unit dims (squeezes, keepdims) are structure, not size — a
+        # symbolic match ("cap + 1" at cap=0) would claim a dependence
+        # the buffer doesn't have
+        return None
+    for cand in DIM_CANDIDATES:
+        if (eval_formula(cand, env_a) == a
+                and eval_formula(cand, env_b) == b):
+            return cand
+    if a == b:
+        return None
+    raise RuntimeError(
+        f"cannot express buffer dimension ({a} @ {env_a['d']} devices, "
+        f"{b} @ {env_b['d']} devices) with any DIM_CANDIDATES entry — "
+        "add a candidate to repro.analysis.memory"
+    )
+
+
+def _point_formula(avals_a: Sequence[Any], avals_b: Sequence[Any],
+                   env_a: Dict[str, int], env_b: Dict[str, int]) -> str:
+    """Closed form of one program point's live bytes, from the paired
+    live-aval lists (identical allocation order by construction)."""
+    if len(avals_a) != len(avals_b):
+        raise RuntimeError(
+            f"paired traces disagree on the live set: {len(avals_a)} "
+            f"vs {len(avals_b)} buffers — the program is not "
+            "mesh-size-independent"
+        )
+    terms: Dict[Tuple[str, ...], int] = {}
+    for aa, ab in zip(avals_a, avals_b):
+        if len(aa.shape) != len(ab.shape) or aa.dtype != ab.dtype:
+            raise RuntimeError(
+                f"paired live buffers disagree in rank/dtype: "
+                f"{aa.dtype}{list(aa.shape)} vs {ab.dtype}{list(ab.shape)}"
+            )
+        coeff = aa.dtype.itemsize
+        factors: List[str] = []
+        for da, db in zip(aa.shape, ab.shape):
+            f = _dim_formula(int(da), int(db), env_a, env_b)
+            if f is None:
+                coeff *= int(da)
+            else:
+                factors.append(f)
+        key = tuple(sorted(factors))
+        terms[key] = terms.get(key, 0) + coeff
+    parts = []
+    for key in sorted(terms, key=lambda k: (-len(k), k)):
+        factors = [f"({f})" if ("+" in f or "-" in f) else f for f in key]
+        parts.append(" * ".join([str(terms[key])] + list(factors)))
+    return " + ".join(parts) if parts else "0"
+
+
+def _verified(formula: str, envs_and_values) -> str:
+    for env, value in envs_and_values:
+        got = eval_formula(formula, env)
+        if got != value:
+            raise RuntimeError(
+                f"memory formula self-check failed: {formula!r} = {got} "
+                f"but the liveness pass observed {value} (env {env})"
+            )
+    return formula
+
+
+def _aval_formula(aval_a, aval_b, env_a, env_b) -> str:
+    return _verified(
+        _point_formula([aval_a], [aval_b], env_a, env_b),
+        [(env_a, _aval_bytes(aval_a)), (env_b, _aval_bytes(aval_b))],
+    )
+
+
+# -- the replicated-O(n)-buffer rule --------------------------------------
+
+def replicated_vertex_sites(closed, n: int) -> List[Tuple[Any, int]]:
+    """Sites materializing a full vertex-indexed array replicated inside
+    the (per-device) program body: 1-D ``all_gather`` outputs with
+    >= n elements. Tiled state/mask gathers reconstruct O(n) arrays on
+    every device; 2-D ``[d, ...]`` gathers keep their shard dimension
+    and are bounded exchange buffers, deliberately NOT flagged (the
+    sparse frontier payload ``[d, cap+1]`` may exceed n elements while
+    staying O(cap * d)). Returns ``(site, n_elems)`` pairs."""
+    body = program_body(closed)
+    out = []
+    for s in iter_sites(body):
+        if s.prim != "all_gather":
+            continue
+        for ov in s.eqn.outvars:
+            shape = getattr(ov.aval, "shape", ())
+            if len(shape) == 1 and int(shape[0]) >= n:
+                out.append((s, int(shape[0])))
+    return out
+
+
+# -- manifest generation --------------------------------------------------
+
+def generate_memory_section(traced, paired=None) -> dict:
+    """The budget manifest's ``memory`` section for one traced engine.
+
+    ``paired`` is the same engine traced at a different mesh size
+    (``trace_engine(name, params, devices=1)``) — required to
+    disambiguate size formulas for sharded engines; without it every
+    dimension is solved against one environment only and the committed
+    formula is valid only on the generating device count (the audit CLI
+    warns about exactly this for ``--write-budgets`` at 1 device).
+    """
+    paired = paired or traced
+    env_a, env_b = traced.sizes, paired.sizes
+    cfg = traced.config
+    programs: Dict[str, dict] = {}
+    waivers: List[dict] = []
+    forbid = cfg.vertex_sharding == "range"
+
+    for prog, closed in traced.programs.items():
+        donated = traced.donated.get(prog, ())
+        prof_a = profile_program(closed, donated)
+        prof_b = profile_program(paired.programs[prog], donated)
+        if len(prof_a.point_bytes) != len(prof_b.point_bytes):
+            raise RuntimeError(
+                f"{cfg.name}/{prog}: paired traces walk "
+                f"{len(prof_a.point_bytes)} vs {len(prof_b.point_bytes)} "
+                "program points — cannot pair buffer dimensions"
+            )
+        idx = {prof_a.peak_index, prof_b.peak_index}
+        ra, rb = prof_a.round_peak_index(), prof_b.round_peak_index()
+        ridx = {i for i in (ra, rb) if i is not None}
+        cap_a = profile_program(closed, donated, capture=idx | ridx)
+        cap_b = profile_program(paired.programs[prog], donated,
+                                capture=idx | ridx)
+
+        def point_form(i: int) -> str:
+            return _verified(
+                _point_formula(cap_a.captured[i], cap_b.captured[i],
+                               env_a, env_b),
+                [(env_a, prof_a.point_bytes[i]),
+                 (env_b, prof_b.point_bytes[i])],
+            )
+
+        def peak_form(ia: int, ib: int, pa: int, pb: int) -> str:
+            if ia == ib:
+                return point_form(ia)
+            fa, fb = point_form(ia), point_form(ib)
+            return _verified(f"max({fa}, {fb})",
+                             [(env_a, pa), (env_b, pb)])
+
+        body_a, amap_a = _body_and_map(closed)
+        body_b, amap_b = _body_and_map(paired.programs[prog])
+        at_rest = [
+            [name, _aval_formula(body_a.invars[amap_a[pos]].aval,
+                                 body_b.invars[amap_b[pos]].aval,
+                                 env_a, env_b)]
+            for name, pos in STATE_ARGS.get(prog, ())
+            # seeded test programs reuse engine program names with fewer
+            # args — budget only the positions that exist
+            if pos in amap_a and pos in amap_b
+        ]
+        dav_a = [body_a.invars[amap_a[i]].aval for i in donated]
+        dav_b = [body_b.invars[amap_b[i]].aval for i in donated]
+        donated_form = (
+            "0" if not donated else _verified(
+                _point_formula(dav_a, dav_b, env_a, env_b),
+                [(env_a, sum(map(_aval_bytes, dav_a))),
+                 (env_b, sum(map(_aval_bytes, dav_b)))],
+            )
+        )
+        programs[prog] = {
+            "at_rest": at_rest,
+            "peak": peak_form(prof_a.peak_index, prof_b.peak_index,
+                              prof_a.peak, prof_b.peak),
+            "round_peak": (
+                peak_form(ra, rb, prof_a.round_peak, prof_b.round_peak)
+                if ra is not None and rb is not None else "0"
+            ),
+            "donated": donated_form,
+        }
+        if forbid:
+            groups: Dict[bool, int] = {}
+            for s, _ in replicated_vertex_sites(closed, env_a["n"]):
+                groups[s.in_round] = groups.get(s.in_round, 0) + 1
+            for in_round, count in sorted(groups.items()):
+                waivers.append({
+                    "program": prog,
+                    "op": "all_gather",
+                    "in_round": in_round,
+                    "count": count,
+                    "reason": ENTRY_GATHER_WAIVER,
+                })
+    return {
+        "programs": programs,
+        "forbid_replicated_vertex_buffers": forbid,
+        "require_state_donated": cfg.engine != "host",
+        "waivers": waivers,
+    }
+
+
+# -- the check rule -------------------------------------------------------
+
+@rule("memory_budget")
+def check_memory(traced, budget: dict) -> List[Finding]:
+    cfg = traced.config
+    env = traced.sizes
+    findings: List[Finding] = []
+
+    def bad(msg: str, program: str = "") -> None:
+        findings.append(Finding("memory_budget", cfg.name, msg, program))
+
+    mem = budget.get("memory")
+    if mem is None:
+        bad(
+            "budget manifest has no memory section — regenerate with "
+            "`python -m repro.analysis.audit --write-budgets --devices 8`"
+        )
+        return findings
+
+    specs = mem.get("programs", {})
+    for prog, closed in traced.programs.items():
+        spec = specs.get(prog)
+        if spec is None:
+            bad(f"no memory budget for program {prog!r} — regenerate "
+                "with `audit --write-budgets`", prog)
+            continue
+        donated = traced.donated.get(prog, ())
+        prof = profile_program(closed, donated)
+        body, amap = _body_and_map(closed)
+
+        for key, observed in (("peak", prof.peak),
+                              ("round_peak", prof.round_peak)):
+            want = eval_formula(spec.get(key, "0"), env)
+            if want != observed:
+                bad(
+                    f"{key} live bytes drifted: budget formula "
+                    f"{spec.get(key)!r} = {want}B but the liveness pass "
+                    f"observes {observed}B per device",
+                    prog,
+                )
+        for name, pos in STATE_ARGS.get(prog, ()):
+            if pos not in amap:
+                continue
+            entry = dict(spec.get("at_rest", []) or []).get(name)
+            actual = _aval_bytes(body.invars[amap[pos]].aval)
+            if entry is None:
+                bad(f"at_rest entry for state arg {name!r} missing "
+                    "from the memory budget", prog)
+            elif eval_formula(entry, env) != actual:
+                bad(
+                    f"at_rest[{name}]: formula {entry!r} = "
+                    f"{eval_formula(entry, env)}B but the state buffer "
+                    f"holds {actual}B per device",
+                    prog,
+                )
+        don_actual = sum(_aval_bytes(body.invars[amap[i]].aval)
+                         for i in donated)
+        if eval_formula(spec.get("donated", "0"), env) != don_actual:
+            bad(
+                f"donated credit drifted: formula "
+                f"{spec.get('donated')!r} = "
+                f"{eval_formula(spec.get('donated', '0'), env)}B but "
+                f"the donated inputs hold {don_actual}B",
+                prog,
+            )
+
+        if mem.get("require_state_donated"):
+            thresh = env["n_owned"]
+            pool = [body.invars[amap[i]].aval for i in donated]
+            for k, ov in enumerate(body.outvars):
+                aval = getattr(ov, "aval", None)
+                if aval is None or _aval_elems(aval) < thresh:
+                    continue
+                if aval in pool:
+                    pool.remove(aval)
+                    continue
+                bad(
+                    f"output {k} ({aval.dtype}{list(aval.shape)}) is "
+                    "vertex-sized but aliases no donated input — an "
+                    "undonated state-sized output is a hidden per-batch "
+                    "copy",
+                    prog,
+                )
+
+        if mem.get("forbid_replicated_vertex_buffers"):
+            waived: Dict[Tuple[str, bool], int] = {}
+            for w in mem.get("waivers", []):
+                if w.get("program") == prog:
+                    key = (w.get("op"), bool(w.get("in_round")))
+                    waived[key] = waived.get(key, 0) + int(w["count"])
+            found: Dict[Tuple[str, bool], List] = {}
+            for s, elems in replicated_vertex_sites(closed, env["n"]):
+                found.setdefault((s.prim, s.in_round), []).append(
+                    (s, elems))
+            for key, sites in found.items():
+                allowed = waived.get(key, 0)
+                for s, elems in sites[allowed:]:
+                    bad(
+                        f"O(n)-replicated buffer inside the shard_map "
+                        f"body: 1-D {s.prim} output of {elems} elems "
+                        f"(>= n={env['n']}) at "
+                        f"{'/'.join(s.path) or '<top>'} with no "
+                        "committed waiver — vertex-sized state must "
+                        "stay owned slices",
+                        prog,
+                    )
+            for key, allowed in waived.items():
+                n_found = len(found.get(key, []))
+                if n_found < allowed:
+                    bad(
+                        f"stale waiver: {allowed} {key[0]} site(s) "
+                        f"(in_round={key[1]}) waived but only "
+                        f"{n_found} traced — delete the waiver "
+                        "(regenerate with `audit --write-budgets`)",
+                        prog,
+                    )
+    return findings

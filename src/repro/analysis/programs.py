@@ -120,7 +120,7 @@ def trace_removal_round(
     sm = shard_map(
         kernel, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(), P()),
-        out_specs=(P(), P(), P(), stat_spec, stat_spec),
+        out_specs=(P(), P(), P(), stat_spec, stat_spec, P()),
         check_vma=False,
     )
     src = jnp.zeros(cap, jnp.int32)
@@ -160,7 +160,7 @@ def trace_promotion_round(
         kernel, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(), P(),
                   P(), P(), P(), stat_spec, stat_spec),
-        out_specs=(P(), P(), P(), P()),
+        out_specs=(P(), P(), P(), P(), P()),
         check_vma=False,
     )
     src = jnp.zeros(cap, jnp.int32)
@@ -210,9 +210,18 @@ def _batch_args(params: AuditParams, n_state: int):
 
 
 def trace_engine(name: str,
-                 params: Optional[AuditParams] = None) -> TracedEngine:
+                 params: Optional[AuditParams] = None,
+                 devices: Optional[int] = None) -> TracedEngine:
     """Trace + lower every auditable program of one engine config on the
-    current device count."""
+    current device count.
+
+    ``devices`` forces a mesh size smaller than the process's device
+    count (sharded configs only — host/unified always trace at d=1).
+    The memory auditor uses this to trace each sharded program at TWO
+    mesh sizes in one process: shard_map traces one program regardless
+    of mesh size, so the paired jaxprs are structurally identical and a
+    lockstep walk can solve each buffer dimension against two distinct
+    size environments (repro.analysis.memory)."""
     if name not in ENGINE_CONFIGS:
         raise ValueError(
             f"unknown engine config {name!r} "
@@ -220,7 +229,17 @@ def trace_engine(name: str,
         )
     cfg = ENGINE_CONFIGS[name]
     params = params or AuditParams()
-    d = len(jax.devices()) if cfg.is_sharded else 1
+    if not cfg.is_sharded:
+        d = 1
+    elif devices is not None:
+        if devices > len(jax.devices()):
+            raise ValueError(
+                f"devices={devices} exceeds the process's "
+                f"{len(jax.devices())} devices"
+            )
+        d = devices
+    else:
+        d = len(jax.devices())
     n, cap, lanes = params.n, params.capacity, params.lanes
     if cfg.is_sharded and (n % d or cap % d):
         raise ValueError(

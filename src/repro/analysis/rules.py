@@ -719,3 +719,9 @@ def check_recompile_surface(traced, budget: dict) -> List[Finding]:
             f"lattice {lattice} — the trace used an unplanned variant",
         ))
     return findings
+
+
+# registers the memory_budget rule (import-cycle-safe: memory imports
+# Finding/eval_formula/rule from this module at its top, which is fully
+# defined by the time this line runs in either import order)
+from . import memory as _memory  # noqa: E402,F401

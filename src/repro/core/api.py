@@ -561,6 +561,8 @@ class CoreMaintainer:
                 renumbered=jnp.bool_(renumbered),
                 n_recycled=jnp.int32(0),  # host path reclaims via _compact
                 high_water=self.n_edges,  # == the host bump pointer
+                max_frontier=jnp.maximum(in_st.max_frontier,
+                                         rm_st.max_frontier),
             )
             self.last_batch_stats = stats
             return stats
@@ -568,7 +570,7 @@ class CoreMaintainer:
         if b_ins == 0 and rm.shape[0] == 0:
             z = jnp.int32(0)
             stats = BatchStats(z, z, z, z, z, z, z, jnp.bool_(False), z,
-                               jnp.int32(self.hwm_ub))
+                               jnp.int32(self.hwm_ub), z)
             self.last_batch_stats = stats
             return stats
         self._ensure_capacity(b_ins)
@@ -652,6 +654,7 @@ class CoreMaintainer:
             rounds=st.insert_rounds,
             n_promoted=st.n_promoted,
             v_plus=st.v_plus,
+            max_frontier=st.max_frontier,
         )
         return self.last_insert_stats
 
@@ -660,7 +663,8 @@ class CoreMaintainer:
             return self._remove_edges_host(edges)
         st = self.apply_batch(remove_edges=edges)
         self.last_remove_stats = RemoveStats(
-            rounds=st.remove_rounds, n_dropped=st.n_dropped
+            rounds=st.remove_rounds, n_dropped=st.n_dropped,
+            max_frontier=st.max_frontier,
         )
         return self.last_remove_stats
 
@@ -681,7 +685,8 @@ class CoreMaintainer:
             keep.append(key)
         if not keep:
             self.last_insert_stats = None
-            return InsertStats(jnp.int32(0), jnp.int32(0), jnp.int32(0))
+            return InsertStats(jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                               jnp.int32(0))
         arr = np.asarray(keep, dtype=np.int32)
         if int(self.n_edges) + arr.shape[0] + 1 >= self.capacity:
             self._compact()  # replaces slot_cache — re-read below
@@ -736,7 +741,7 @@ class CoreMaintainer:
                 slots.append(slot)
         if not slots:
             self.last_remove_stats = None
-            return RemoveStats(jnp.int32(0), jnp.int32(0))
+            return RemoveStats(jnp.int32(0), jnp.int32(0), jnp.int32(0))
         padded = _pad_pow2(np.asarray(slots, dtype=np.int32), -1)
         self.valid, self.core, self.label, stats = remove_batch(
             self.src,

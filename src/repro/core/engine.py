@@ -74,6 +74,7 @@ class BatchStats(NamedTuple):
     renumbered: Array      # True if the in-program label renumber fired
     n_recycled: Array      # inserts that reused a tombstoned slot
     high_water: Array      # post-batch max per-shard slot high-water mark
+    max_frontier: Array    # max per-shard exchanged-mask count (both phases)
 
 
 def edge_key(lo: Array, hi: Array, n: int) -> Array:
@@ -211,7 +212,7 @@ def batch_program(
     n_removed = allsum(jnp.sum(rm_mask, dtype=jnp.int32))
 
     core_pre_rm = core
-    core, label, rm_rounds, hi, dout_same = removal_fixpoint(
+    core, label, rm_rounds, hi, dout_same, rm_fmax = removal_fixpoint(
         src, dst, valid, core, label, n, n_levels, layout=layout
     )
     n_dropped = jnp.sum(core != core_pre_rm, dtype=jnp.int32)
@@ -256,7 +257,7 @@ def batch_program(
     dout_same = layout.add_at(dout_same, ihi, do_v.astype(jnp.int32))
 
     core_pre_ins = core
-    core, label, ins_rounds, v_plus = promotion_fixpoint(
+    core, label, ins_rounds, v_plus, ins_fmax = promotion_fixpoint(
         src, dst, valid, core, label, ilo, ihi, iok,
         hi, dout_same, n, n_levels, layout=layout,
     )
@@ -278,6 +279,9 @@ def batch_program(
         # exact post-batch bound the host refreshes its sync-free window
         # planning from (max over shards of the LOCAL high-water mark)
         high_water=G.slot_high_water(valid, axis),
+        # observed peak per-shard frontier across both fixpoints — the
+        # datum the sparse frontier_cap planner is tuned from (§4.3)
+        max_frontier=jnp.maximum(rm_fmax, ins_fmax),
     )
     return src, dst, valid, core, label, n_edges, stats
 

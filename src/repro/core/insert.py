@@ -38,9 +38,10 @@ Array = jax.Array
 
 
 class InsertStats(NamedTuple):
-    rounds: Array       # outer promotion rounds
-    n_promoted: Array   # |V*| over the whole batch
-    v_plus: Array       # |V+| — vertices ever reached by FORWARD
+    rounds: Array        # outer promotion rounds
+    n_promoted: Array    # |V*| over the whole batch
+    v_plus: Array        # |V+| — vertices ever reached by FORWARD
+    max_frontier: Array  # max per-shard exchanged-mask count over all rounds
 
 
 def freelist_alloc(
@@ -174,7 +175,7 @@ def promotion_fixpoint(
     n: int,
     n_levels: int,
     layout: VertexLayout | None = None,
-) -> Tuple[Array, Array, Array, Array]:
+) -> Tuple[Array, Array, Array, Array, Array]:
     """Promotion rounds for pending edges already written into the table.
 
     ``hi``/``dout_same`` must describe the CURRENT (core, label, valid)
@@ -196,7 +197,10 @@ def promotion_fixpoint(
     core/label stay replicated values, so the seed scatter and the label
     placement need no collective.
 
-    Returns ``(core, label, rounds, v_plus_mask)``.
+    Returns ``(core, label, rounds, v_plus_mask, max_frontier)``;
+    ``max_frontier`` is the max per-shard count over every exchanged mask
+    (``layout.frontier_peak``) — the observed datum the sparse
+    ``frontier_cap`` planner is tuned from (docs/DESIGN.md §4.3).
     """
     if layout is None:
         layout = ReplicatedVertices(n)
@@ -205,7 +209,8 @@ def promotion_fixpoint(
         return state[2]
 
     def round_body(state):
-        core, label, _, promoted_prev, rounds, v_plus, hi, dout_same = state
+        (core, label, _, promoted_prev, rounds, v_plus, hi, dout_same,
+         fmax) = state
 
         # SEED: roots of pending edges (order-min endpoint at current state)
         e_src_lt = (core[new_src] < core[new_dst]) | (
@@ -218,16 +223,18 @@ def promotion_fixpoint(
         )
         # certificate violators are potential hidden roots (the stats live
         # on their owners; only the violator bitmask crosses the mesh)
-        seed = seed | layout.gather_mask((hi + dout_same) > layout.own(core))
-        seed = seed | promoted_prev
+        viol = layout.gather_mask((hi + dout_same) > layout.own(core))
+        fmax = jnp.maximum(fmax, layout.frontier_peak(viol))
+        seed = seed | viol | promoted_prev
 
-        reach, passing = _forward_reach(
+        reach, passing, wave_fmax = _forward_reach(
             src, dst, valid, core, label, seed, hi, dout_same, n, layout
         )
         cand0 = reach & passing
-        cand, evict_round = _evict_fixpoint(
+        cand, evict_round, ev_fmax = _evict_fixpoint(
             src, dst, valid, core, cand0, hi, n, layout
         )
+        fmax = jnp.maximum(fmax, jnp.maximum(wave_fmax, ev_fmax))
 
         new_core = core + cand.astype(jnp.int32)
         # promoted -> head of O_{K+1} in old-label order
@@ -260,15 +267,17 @@ def promotion_fixpoint(
             v_plus | reach,
             new_hi,
             new_dout,
+            fmax,
         )
 
-    core, label, _, _, rounds, v_plus, _, _ = jax.lax.while_loop(
+    core, label, _, _, rounds, v_plus, _, _, fmax = jax.lax.while_loop(
         round_cond,
         round_body,
         (core, label, jnp.bool_(True), jnp.zeros(n, dtype=bool),
-         jnp.int32(0), jnp.zeros(n, dtype=bool), hi, dout_same),
+         jnp.int32(0), jnp.zeros(n, dtype=bool), hi, dout_same,
+         jnp.int32(0)),
     )
-    return core, label, rounds, v_plus
+    return core, label, rounds, v_plus, fmax
 
 
 def _forward_reach(
@@ -282,11 +291,12 @@ def _forward_reach(
     dout_same: Array,
     n: int,
     layout: VertexLayout | None = None,
-) -> Tuple[Array, Array]:
+) -> Tuple[Array, Array, Array]:
     """Monotone fixpoint of gated forward expansion.
 
-    Returns (reach, passing) boolean masks (full [n], replicated).
-    ``passing`` uses the optimistic test with din counted over
+    Returns (reach, passing, max_frontier) — boolean masks (full [n],
+    replicated) plus the max per-shard count over the exchanged wave
+    masks. ``passing`` uses the optimistic test with din counted over
     reached-and-passing predecessors only. Under a range-sharded layout
     each wave moves one reduce_scatter (din, owned) plus the two wave
     bitmasks; the loop state stays full/replicated so the edge pass can
@@ -297,11 +307,11 @@ def _forward_reach(
     core_own = layout.own(core)
 
     def cond(state):
-        _, _, changed = state
+        _, _, changed, _ = state
         return changed
 
     def body(state):
-        reach, passing, _ = state
+        reach, passing, _, fmax = state
         rp = reach & passing
         # one fused scatter per wave: din and frontier growth (C1)
         din, grow = G.din_and_expand(src, dst, valid, core, label, rp, n,
@@ -309,15 +319,20 @@ def _forward_reach(
         new_passing = layout.gather_mask(
             (hi + dout_same + din) > core_own
         )
-        new_reach = reach | layout.gather_mask(grow)
+        grow_full = layout.gather_mask(grow)
+        fmax = jnp.maximum(fmax, jnp.maximum(
+            layout.frontier_peak(new_passing), layout.frontier_peak(grow_full)
+        ))
+        new_reach = reach | grow_full
         changed = jnp.any(new_reach != reach) | jnp.any(new_passing != passing)
-        return new_reach, new_passing, changed
+        return new_reach, new_passing, changed, fmax
 
     init_pass = layout.gather_mask((hi + dout_same) > core_own)
-    reach, passing, _ = jax.lax.while_loop(
-        cond, body, (seed, init_pass, jnp.bool_(True))
+    reach, passing, _, fmax = jax.lax.while_loop(
+        cond, body,
+        (seed, init_pass, jnp.bool_(True), layout.frontier_peak(init_pass)),
     )
-    return reach, passing
+    return reach, passing, fmax
 
 
 def _evict_fixpoint(
@@ -329,38 +344,43 @@ def _evict_fixpoint(
     hi: Array,
     n: int,
     layout: VertexLayout | None = None,
-) -> Tuple[Array, Array]:
+) -> Tuple[Array, Array, Array]:
     """Greatest fixpoint of the candidate support test (sound + complete
     for any starting superset of V*).
 
-    Returns (surviving candidates, eviction round per vertex), both full
-    [n]. The round numbers order the Backward tail placement
-    (never-evicted keep 0); they are maintained replicated from the
-    gathered candidate masks, so no integer array crosses the mesh.
+    Returns (surviving candidates, eviction round per vertex,
+    max_frontier), masks full [n]. The round numbers order the Backward
+    tail placement (never-evicted keep 0); they are maintained
+    replicated from the gathered candidate masks, so no integer array
+    crosses the mesh.
     """
     if layout is None:
         layout = ReplicatedVertices(n)
     core_own = layout.own(core)
 
     def cond(state):
-        _, _, _, changed = state
+        _, _, _, changed, _ = state
         return changed
 
     def body(state):
-        cand, evict_round, rnd, _ = state
+        cand, evict_round, rnd, _, fmax = state
         support = hi + G.count_same_level_in(src, dst, valid, core, cand, n,
                                              layout)
-        new_cand = cand & layout.gather_mask(support > core_own)
+        keep = layout.gather_mask(support > core_own)
+        fmax = jnp.maximum(fmax, layout.frontier_peak(keep))
+        new_cand = cand & keep
         newly_evicted = cand & ~new_cand
         evict_round = jnp.where(newly_evicted, rnd, evict_round)
-        return new_cand, evict_round, rnd + 1, jnp.any(new_cand != cand)
+        return (new_cand, evict_round, rnd + 1, jnp.any(new_cand != cand),
+                fmax)
 
-    cand, evict_round, _, _ = jax.lax.while_loop(
+    cand, evict_round, _, _, fmax = jax.lax.while_loop(
         cond,
         body,
-        (cand, jnp.zeros(n, dtype=jnp.int32), jnp.int32(1), jnp.bool_(True)),
+        (cand, jnp.zeros(n, dtype=jnp.int32), jnp.int32(1), jnp.bool_(True),
+         jnp.int32(0)),
     )
-    return cand, evict_round
+    return cand, evict_round, fmax
 
 
 @partial(jax.jit, static_argnames=("n", "n_levels"))
@@ -389,7 +409,7 @@ def insert_batch(
     core0 = core
     # fused (hi, dout_same) — one scatter-add / one collective (C1)
     hi, dout_same = G.hi_and_dout_same(src, dst, valid, core, label, n)
-    core, label, rounds, v_plus = promotion_fixpoint(
+    core, label, rounds, v_plus, fmax = promotion_fixpoint(
         src, dst, valid, core, label, new_src, new_dst, new_ok,
         hi, dout_same, n, n_levels,
     )
@@ -397,5 +417,6 @@ def insert_batch(
         rounds=rounds,
         n_promoted=jnp.sum(core != core0, dtype=jnp.int32),
         v_plus=jnp.sum(v_plus, dtype=jnp.int32),
+        max_frontier=fmax,
     )
     return src, dst, valid, n_edges, core, label, stats

@@ -40,8 +40,9 @@ Array = jax.Array
 
 
 class RemoveStats(NamedTuple):
-    rounds: Array       # number of fixpoint rounds executed
-    n_dropped: Array    # |V*| — vertices whose core number decreased
+    rounds: Array        # number of fixpoint rounds executed
+    n_dropped: Array     # |V*| — vertices whose core number decreased
+    max_frontier: Array  # max per-shard drop-mask count over all rounds
 
 
 def removal_fixpoint(
@@ -54,10 +55,13 @@ def removal_fixpoint(
     n_levels: int,
     share_stats: bool = True,
     layout: VertexLayout | None = None,
-) -> Tuple[Array, Array, Array, Array, Array]:
+) -> Tuple[Array, Array, Array, Array, Array, Array]:
     """Run the decrease-only mcd fixpoint on an already-tombstoned table.
 
-    Returns ``(core, label, rounds, hi, dout_same)``. With ``share_stats``
+    Returns ``(core, label, rounds, hi, dout_same, max_frontier)``;
+    ``max_frontier`` is the max per-shard drop-mask count observed over
+    all rounds (``layout.frontier_peak`` — the datum the sparse
+    ``frontier_cap`` planner is tuned from). With ``share_stats``
     the (hi, dout_same) statistics come from the same packed scatter as
     the terminating mcd check, so they describe the FINAL state exactly
     (the last round drops nothing and therefore leaves core/label
@@ -85,7 +89,7 @@ def removal_fixpoint(
         return state[2]
 
     def body(state):
-        core, label, _, rounds, hi, dout_same = state
+        core, label, _, rounds, hi, dout_same, fmax = state
         if share_stats:
             mcd, hi, dout_same = G.mcd_hi_dout(
                 src, dst, valid, core, label, n, layout
@@ -94,18 +98,21 @@ def removal_fixpoint(
             mcd = G.count_ge(src, dst, valid, core, n, layout)
         core_own = layout.own(core)
         drop = layout.gather_mask((mcd < core_own) & (core_own > 0))
+        fmax = jnp.maximum(fmax, layout.frontier_peak(drop))
         new_core = core - drop.astype(jnp.int32)
         # place this round's droppers at the tail of their new level
         label = place_block(new_core, label, drop, at_head=False,
                             n_levels=n_levels)
-        return new_core, label, jnp.any(drop), rounds + 1, hi, dout_same
+        return (new_core, label, jnp.any(drop), rounds + 1, hi, dout_same,
+                fmax)
 
     z = layout.zeros()
     # rounds counts body executions (the final one observes no drops)
-    core, label, _, rounds, hi, dout_same = jax.lax.while_loop(
-        cond, body, (core, label, jnp.bool_(True), jnp.int32(0), z, z)
+    core, label, _, rounds, hi, dout_same, fmax = jax.lax.while_loop(
+        cond, body,
+        (core, label, jnp.bool_(True), jnp.int32(0), z, z, jnp.int32(0)),
     )
-    return core, label, rounds, hi, dout_same
+    return core, label, rounds, hi, dout_same, fmax
 
 
 @partial(jax.jit, static_argnames=("n", "n_levels"))
@@ -132,10 +139,11 @@ def remove_batch(
     valid = valid & ~rm
 
     core0 = core
-    core, label, rounds, _, _ = removal_fixpoint(
+    core, label, rounds, _, _, fmax = removal_fixpoint(
         src, dst, valid, core, label, n, n_levels, share_stats=False
     )
     stats = RemoveStats(
-        rounds=rounds, n_dropped=jnp.sum(core != core0, dtype=jnp.int32)
+        rounds=rounds, n_dropped=jnp.sum(core != core0, dtype=jnp.int32),
+        max_frontier=fmax,
     )
     return valid, core, label, stats

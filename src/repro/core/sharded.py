@@ -54,6 +54,19 @@ from .vertex_layout import make_layout
 
 Array = jax.Array
 
+# The ONE structural O(n)-replicated buffer the static memory auditor
+# waives (repro.analysis.memory): the kernel's entry state gather below
+# materializes full replicated core/label working copies from the owned
+# range slices, once per batch. Per-device memory is therefore O(n)
+# even under vertex_sharding="range" — the halo-local 2-axis refactor
+# (ROADMAP item 3) exists to delete this gather, and with it the waiver
+# entry in the committed budget manifests.
+ENTRY_GATHER_WAIVER = (
+    "entry state gather: owned core/label slices are all_gathered into "
+    "full replicated working copies once per batch (O(n) per device); "
+    "deleted by the halo-local 2-axis refactor (ROADMAP item 3)"
+)
+
 
 def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
                        axis: str = "data",
@@ -176,7 +189,9 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
         if layout is not None:
             # ONE state gather per batch: owned slices -> full replicated
             # working copies for the edge passes (per-ROUND traffic stays
-            # reduce_scatter + frontier masks; docs/DESIGN.md §4.2-§4.3)
+            # reduce_scatter + frontier masks; docs/DESIGN.md §4.2-§4.3).
+            # These two all_gathers are the waived O(n)-replicated
+            # buffers of the memory audit (ENTRY_GATHER_WAIVER above).
             core = layout.gather_state(core)
             label = layout.gather_state(label)
         if local_active is not None and local_active > src.shape[0]:

@@ -191,6 +191,14 @@ class ReplicatedVertices:
     def any_owned(self, owned_mask: Array) -> Array:
         return jnp.any(owned_mask)
 
+    def frontier_peak(self, full_mask: Array) -> Array:
+        """Frontier size of one exchanged mask — with one (replicated)
+        shard that is simply the popcount. Local compute, no collective;
+        the engines carry the running max through their fixpoints so
+        ``stats.max_frontier`` can tune the sparse-cap planner from
+        observed data (docs/DESIGN.md §4.3)."""
+        return jnp.sum(full_mask, dtype=jnp.int32)
+
     def zeros(self, dtype=jnp.int32) -> Array:
         return jnp.zeros(self.n, dtype=dtype)
 
@@ -336,6 +344,15 @@ class RangeShardedVertices:
         return jax.lax.psum(
             jnp.any(owned_mask).astype(jnp.int32), self.axis
         ) > 0
+
+    def frontier_peak(self, full_mask: Array) -> Array:
+        """Max per-shard owned count of one exchanged (replicated) full
+        mask — the quantity the sparse exchange's ``frontier_cap`` must
+        clear for the index path to be taken (docs/DESIGN.md §4.3). The
+        mask is already replicated, so the per-range popcounts are local
+        compute: no collective is added to the round."""
+        owned = self._pad(full_mask).reshape(self.n_shards, self.n_owned)
+        return jnp.max(jnp.sum(owned, axis=1, dtype=jnp.int32))
 
     def zeros(self, dtype=jnp.int32) -> Array:
         return jnp.zeros(self.n_owned, dtype=dtype)

@@ -357,11 +357,45 @@ def test_hostlint_real_api_is_clean():
     assert lint_file() == []
 
 
+def test_hostlint_all_targets_clean():
+    """The full lint surface — api.py plus the engine-level builders in
+    core/engine.py and core/sharded.py — is sync-free."""
+    from repro.analysis.hostlint import LINT_TARGETS
+
+    for path in LINT_TARGETS:
+        assert lint_file(path) == [], path
+
+
+def test_hostlint_bare_device_param_fires(tmp_path):
+    """Engine-level helpers are free functions: device state is a bare
+    parameter name, not self.<field> — the lint must still catch a host
+    coercion of it (and leave static python ints alone)."""
+    p = tmp_path / "engine_fixture.py"
+    p.write_text(textwrap.dedent(
+        """
+        def batch_program(src, dst, valid, core, label, n_edges, n):
+            rounds = int(n)           # static python int: fine
+            width = bool(n_edges)     # device scalar: sync
+            return core
+
+        def helper_outside_set(core):
+            return int(core)
+        """
+    ))
+    finds = lint_file(str(p), funcs=frozenset({"batch_program"}))
+    [f] = finds
+    assert f.func == "batch_program"
+    assert "bool(...)" in f.message
+
+
 # -- benchcheck -------------------------------------------------------------
 
 def test_benchcheck_flags_incoherent_artifact(tmp_path):
+    from repro.analysis.benchcheck import BENCH_SCHEMA
+
     p = tmp_path / "bench.json"
     p.write_text(json.dumps({
+        "schema": BENCH_SCHEMA,
         "engines_agree": False,
         "churn": {"engines_agree": True},
         "frontier_scaling": [{"frontier_exchange": "bitmask"}],
@@ -373,6 +407,35 @@ def test_benchcheck_flags_incoherent_artifact(tmp_path):
     assert any("lacks 'vertex_sharded'" in m for m in msgs)
     assert any("n_devices" in m for m in msgs)
     assert any("not a sparse-frontier row" in m for m in msgs)
+
+
+def test_benchcheck_missing_artifact_one_actionable_finding(tmp_path):
+    """A missing BENCH_stream.json must produce ONE finding telling the
+    user how to regenerate it — not a traceback, not a cascade of
+    lacks-key noise."""
+    check = check_bench(str(tmp_path / "nope.json"))
+    assert not check["ok"]
+    [f] = check["findings"]
+    assert "no bench artifact" in f["message"]
+    assert "benchmarks.run" in f["message"]
+
+
+def test_benchcheck_stale_schema_one_actionable_finding(tmp_path):
+    """An artifact predating the current schema stamp (e.g. recorded
+    before max_frontier observability) is rejected with a single
+    regenerate hint, even if its other fields look coherent."""
+    p = tmp_path / "bench.json"
+    p.write_text(json.dumps({
+        "schema": "repro.analysis/bench/v1",
+        "engines_agree": True,
+        "churn": {"engines_agree": True},
+    }))
+    check = check_bench(str(p))
+    assert not check["ok"]
+    [f] = check["findings"]
+    assert "predates the current artifact schema" in f["message"]
+    assert "repro.analysis/bench/v1" in f["message"]
+    assert "benchmarks.run" in f["message"]
 
 
 def test_benchcheck_accepts_committed_artifact():
