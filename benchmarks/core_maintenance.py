@@ -182,7 +182,7 @@ def fig7_stability(n_batches: int = 8, batch: int = 128) -> List[Row]:
 
 
 STREAM_ENGINES = ("host", "unified", "sharded", "vertex_sharded",
-                  "frontier_sparse")
+                  "frontier_sparse", "pallas")
 
 # engine NAME -> CoreMaintainer kwargs (the bench rows are engine
 # configurations, not just engine strings, since PR 4's vertex layouts)
@@ -193,7 +193,47 @@ ENGINE_SPECS: Dict[str, Dict[str, str]] = {
     "vertex_sharded": {"engine": "sharded", "vertex_sharding": "range"},
     "frontier_sparse": {"engine": "sharded", "vertex_sharding": "range",
                         "frontier_exchange": "sparse"},
+    "pallas": {"engine": "unified", "kernel_backend": "pallas"},
 }
+
+
+def round_launch_counts(n: int, cap: int) -> Dict[str, object]:
+    """Static per-round kernel-launch histograms, lax vs pallas.
+
+    Traces (never runs) the removal and promotion round bodies with both
+    kernel backends and counts launch-class primitives via the jaxpr
+    walker — the same counter the committed budget manifests pin
+    (``repro.analysis.walker.count_round_launches``). On CPU the timed
+    pallas rows run in interpret mode, so wall-clock does NOT show the
+    launch win; this section records the claim the fusion actually
+    makes: strictly fewer dispatches per fixpoint round on a real
+    accelerator backend. ``total`` sums both rounds per backend.
+    """
+    import jax
+
+    from repro.analysis.programs import (
+        EDGE_AXIS,
+        trace_promotion_round,
+        trace_removal_round,
+    )
+    from repro.analysis.walker import count_round_launches
+
+    mesh = jax.make_mesh((1,), (EDGE_AXIS,))
+    out: Dict[str, object] = {}
+    for backend in ("lax", "pallas"):
+        rounds: Dict[str, object] = {}
+        for rname, tracer in (("removal", trace_removal_round),
+                              ("promotion", trace_promotion_round)):
+            _, closed = tracer("replicated", n, cap, mesh,
+                               kernel_backend=backend)
+            rounds[rname] = count_round_launches(closed)
+        rounds["total"] = sum(
+            c
+            for rname in ("removal", "promotion")
+            for c in rounds[rname].values()  # type: ignore[union-attr]
+        )
+        out[backend] = rounds
+    return out
 
 
 def stream_bench(
@@ -209,10 +249,13 @@ def stream_bench(
     frontier_scaling_device_counts: Sequence[int] = (),
 ) -> Dict[str, object]:
     """Mixed insert+remove stream on the SAME events: the unified one-call
-    engine, the mesh-sharded engine (replicated AND range-sharded vertex
-    state, bitmask AND sparse frontier exchange) vs the seed two-call
-    path (host-dict dedup + separate insert/remove programs). Reports
-    batches/sec per engine and writes ``out_json``. With
+    engine (with both the lax and the fused-pallas kernel backends), the
+    mesh-sharded engine (replicated AND range-sharded vertex state,
+    bitmask AND sparse frontier exchange) vs the seed two-call path
+    (host-dict dedup + separate insert/remove programs). Reports
+    batches/sec per engine, a static lax-vs-pallas per-round
+    launch-count section (``launches_per_round``), and writes
+    ``out_json``. With
     ``scaling_device_counts`` / ``vertex_scaling_device_counts`` /
     ``frontier_scaling_device_counts`` the sharded / vertex-sharded /
     sparse-frontier engine is re-timed in subprocesses with that many
@@ -288,6 +331,11 @@ def stream_bench(
                     per_engine["host"]["seconds"]
                     / per_engine[engine]["seconds"]
                 )
+    # static launch-count roofline term: per-round dispatch histograms
+    # for both kernel backends (trace-only — cheap even when the timed
+    # sweep above was). The coherence gate requires the pallas rounds to
+    # launch strictly fewer kernels than lax.
+    result["launches_per_round"] = round_launch_counts(n, 4 * m)
     # write the artifact BEFORE the scaling subprocesses and BEFORE
     # asserting: on a divergence or a failed/timed-out scaling run the
     # JSON (with engines_agree and all per-engine timings) survives as

@@ -1,6 +1,13 @@
 """Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
 artifact. Also computes the roofline fraction (useful compute time /
-dominant term) used to pick hillclimb targets."""
+dominant term) used to pick hillclimb targets.
+
+``--launches`` instead renders the per-round kernel-launch roofline of
+the maintenance fixpoints (lax vs fused-pallas backends) from the
+``launches_per_round`` section of BENCH_stream.json: for the
+many-small-kernel lax rounds the dispatch-overhead floor
+``launches * LAUNCH_OVERHEAD_S`` dominates the bandwidth terms at these
+problem sizes, which is the term the fused kernels attack."""
 from __future__ import annotations
 
 import json
@@ -18,7 +25,16 @@ def fmt(x):
 
 
 def render(path: str = "dryrun_results.json", mesh: str = "16x16"):
-    cells = [c for c in json.load(open(path)) if c["mesh"] == mesh]
+    try:
+        with open(path) as f:
+            cells = json.load(f)
+    except FileNotFoundError:
+        raise SystemExit(
+            f"roofline artifact {path!r} not found — generate it with "
+            "`PYTHONPATH=src python -m launch.dryrun` (or pass the path "
+            "to an existing dryrun_results.json)"
+        )
+    cells = [c for c in cells if c["mesh"] == mesh]
     lines = []
     header = (
         "| arch | shape | t_compute | t_memory | t_coll | dominant | "
@@ -38,14 +54,68 @@ def render(path: str = "dryrun_results.json", mesh: str = "16x16"):
         rows.append((c["arch"], c["shape"], tc, tm, tx,
                      rf["dominant"].replace("t_", "").replace("_s", ""),
                      frac, ur, c["mem"]["peak_bytes"] / 2**30))
-    for r in sorted(rows):
+    # sort on the explicit (arch, shape) key: tied rows must not fall
+    # through to comparing a possibly-None model_vs_hlo column
+    for r in sorted(rows, key=lambda r: (r[0], r[1])):
         lines.append(
             f"| {r[0]} | {r[1]} | {fmt(r[2])} | {fmt(r[3])} | {fmt(r[4])} "
             f"| {r[5]} | {r[6]:.2f} | "
-            f"{('%.2f' % r[7]) if r[7] else '-'} | {r[8]:.2f} |"
+            f"{('%.2f' % r[7]) if r[7] is not None else '-'} | {r[8]:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+# Per-launch dispatch overhead for the launch-count roofline term
+# (t_launch = launches/round * LAUNCH_OVERHEAD_S). A few microseconds of
+# host->accelerator dispatch latency per kernel is the standard planning
+# number; it is a latency FLOOR per fixpoint round that pure bandwidth
+# modelling misses when a round is a train of tiny gathers/scatters over
+# a frontier of a handful of vertices.
+LAUNCH_OVERHEAD_S = 5e-6
+
+
+def render_launches(path: str = "BENCH_stream.json"):
+    """Markdown launch-count table, lax vs pallas per fixpoint round."""
+    try:
+        with open(path) as f:
+            blob = json.load(f)
+    except FileNotFoundError:
+        raise SystemExit(
+            f"bench artifact {path!r} not found — generate it with "
+            "`PYTHONPATH=src python -m benchmarks.run`"
+        )
+    lp = blob.get("launches_per_round")
+    if not lp:
+        raise SystemExit(
+            f"{path!r} has no launches_per_round section — regenerate "
+            "with a current `PYTHONPATH=src python -m benchmarks.run`"
+        )
+    lines = [
+        "| round | backend | launches | t_launch floor | histogram |",
+        "|" + "---|" * 5,
+    ]
+    for rnd in ("removal", "promotion"):
+        for backend in ("lax", "pallas"):
+            h = lp[backend][rnd]
+            tot = sum(h.values())
+            hist = ";".join(f"{k}={v}" for k, v in sorted(h.items()))
+            lines.append(
+                f"| {rnd} | {backend} | {tot} | "
+                f"{fmt(tot * LAUNCH_OVERHEAD_S)} | {hist} |"
+            )
+        lax_t = sum(lp["lax"][rnd].values())
+        pal_t = sum(lp["pallas"][rnd].values())
+        lines.append(
+            f"| {rnd} | fused saving | -{lax_t - pal_t} | "
+            f"-{fmt((lax_t - pal_t) * LAUNCH_OVERHEAD_S)} | "
+            f"{lax_t}->{pal_t} per round |"
         )
     return "\n".join(lines)
 
 
 if __name__ == "__main__":
-    print(render(*sys.argv[1:]))
+    argv = sys.argv[1:]
+    if argv and argv[0] == "--launches":
+        print(render_launches(*argv[1:]))
+    else:
+        print(render(*argv))

@@ -111,6 +111,20 @@ def main() -> None:
         f"{sb['speedup_frontier_sparse_vs_host']:.2f}x;"
         f"agree={sb['engines_agree']}",
     )
+    # static per-round kernel-launch counts (the fusion claim the
+    # coherence gate enforces: pallas strictly below lax per round)
+    lp = sb["launches_per_round"]
+    _emit(
+        "stream/launches_per_round",
+        0.0,
+        (
+            f"removal={sum(lp['lax']['removal'].values())}->"
+            f"{sum(lp['pallas']['removal'].values())};"
+            f"promotion={sum(lp['lax']['promotion'].values())}->"
+            f"{sum(lp['pallas']['promotion'].values())};"
+            f"total={lp['lax']['total']}->{lp['pallas']['total']}"
+        ),
+    )
     for key in ("sharded_scaling", "vertex_scaling", "frontier_scaling"):
         for row in sb.get(key, ()):
             _emit(

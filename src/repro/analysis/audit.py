@@ -39,7 +39,7 @@ import sys
 from typing import Dict, List, Optional, Sequence
 
 SCHEMA = "repro.analysis/report/v1"
-BUDGET_SCHEMA = "repro.analysis/budget/v2"
+BUDGET_SCHEMA = "repro.analysis/budget/v3"
 BUDGET_DIR = os.path.join(os.path.dirname(__file__), "budgets")
 _CHILD_GUARD = "_REPRO_AUDIT_REEXEC"
 
@@ -103,7 +103,7 @@ def generate_budget(traced, paired=None) -> dict:
     from ..core.api import bucket_lattice
     from .memory import generate_memory_section
     from .rules import guess_formula, split_round_collectives
-    from .walker import count_collectives
+    from .walker import count_collectives, count_round_launches
 
     cfg = traced.config
     env = traced.sizes
@@ -144,6 +144,13 @@ def generate_budget(traced, paired=None) -> dict:
             p: count_collectives(jx) for p, jx in traced.programs.items()
         },
         "rounds": rounds,
+        # launch-class primitives per fixpoint round (a fused pallas_call
+        # counts as ONE; rules.check_launch_budget pins these and, for
+        # pallas configs, proves the count strictly beats the lax twin)
+        "round_launches": {
+            rname: count_round_launches(closed)
+            for rname, (_, closed) in traced.rounds.items()
+        },
         "forbid_round_vertex_psum": cfg.vertex_sharding == "range",
         "donated_args": {
             p: list(traced.donated.get(p, ())) for p in traced.lowered

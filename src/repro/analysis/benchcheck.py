@@ -13,9 +13,11 @@ from typing import List
 
 # stamped into BENCH_stream.json by benchmarks.core_maintenance; bumped
 # whenever the artifact gains fields the audit relies on (v2: per-engine
-# max_frontier observability). An artifact with an older/missing stamp
-# predates the current manifests and must be regenerated, not trusted.
-BENCH_SCHEMA = "repro.analysis/bench/v2"
+# max_frontier observability; v3: the fused-pallas kernel-backend row
+# plus the static lax-vs-pallas ``launches_per_round`` section). An
+# artifact with an older/missing stamp predates the current manifests
+# and must be regenerated, not trusted.
+BENCH_SCHEMA = "repro.analysis/bench/v3"
 
 REGEN_HINT = (
     "regenerate with `PYTHONPATH=src python -m benchmarks.run` (no "
@@ -28,6 +30,7 @@ REGEN_HINT = (
 REQUIRED_KEYS = (
     "vertex_sharded",
     "frontier_sparse",
+    "pallas",
     "sharded_scaling",
     "vertex_scaling",
     "frontier_scaling",
@@ -82,6 +85,37 @@ def check_bench(path: str) -> dict:
         if isinstance(fs, dict) and not fs.get("batches_per_s", 0) > 0:
             findings.append(_finding(
                 "frontier_sparse.batches_per_s is not > 0"))
+        pal = blob.get("pallas")
+        if isinstance(pal, dict) and not pal.get("batches_per_s", 0) > 0:
+            findings.append(_finding("pallas.batches_per_s is not > 0"))
+        # the launch-count section IS the fusion claim: each fixpoint
+        # round must dispatch strictly fewer launch-class kernels under
+        # the pallas backend than under lax, and the pallas round must
+        # actually contain the fused pallas_call (else the backend knob
+        # silently fell back to the unfused path)
+        lp = blob.get("launches_per_round")
+        if not isinstance(lp, dict) or not {"lax", "pallas"} <= set(lp):
+            findings.append(_finding(
+                "missing launches_per_round lax/pallas section — "
+                + REGEN_HINT))
+        else:
+            for rnd in ("removal", "promotion"):
+                lax_h = lp["lax"].get(rnd) or {}
+                pal_h = lp["pallas"].get(rnd) or {}
+                if not lax_h or not pal_h:
+                    findings.append(_finding(
+                        f"launches_per_round lacks the {rnd} round — "
+                        + REGEN_HINT))
+                    continue
+                if "pallas_call" not in pal_h:
+                    findings.append(_finding(
+                        f"pallas {rnd} round traces no pallas_call — the "
+                        "fused kernel is absent from the round program"))
+                if sum(pal_h.values()) >= sum(lax_h.values()):
+                    findings.append(_finding(
+                        f"pallas {rnd} round launches "
+                        f"{sum(pal_h.values())} kernels, not strictly "
+                        f"fewer than lax's {sum(lax_h.values())}"))
         for i, row in enumerate(blob.get("vertex_scaling") or []):
             if "n_devices" not in row:
                 findings.append(_finding(

@@ -6,9 +6,13 @@ sparse exchange, donated batch buffers, a bounded jit-variant lattice).
 This module produces the artifacts the audit rules inspect, without
 executing a single batch:
 
-* ``ENGINE_CONFIGS`` — the five bit-identical engine configurations
-  (host / unified / sharded / vertex_range / frontier_sparse), exactly
-  the matrix ``tests/test_churn_streams.py`` proves equivalent;
+* ``ENGINE_CONFIGS`` — the six bit-identical engine configurations
+  (host / unified / sharded / vertex_range / frontier_sparse / pallas),
+  exactly the matrix ``tests/test_churn_streams.py`` proves equivalent.
+  The ``pallas`` config is the sharded engine with the fused COO stat
+  kernels (kernels/coremaint.py): the fusion swaps only LOCAL partials,
+  so its collective histogram and memory budgets must EQUAL the lax
+  sharded config's — an equality the audit enforces, not assumes;
 * ``trace_removal_round`` / ``trace_promotion_round`` — shard_map-trace
   ONE fixpoint under a vertex layout, returning both the trace-time
   traffic log (``record_traffic``) and the closed jaxpr: a
@@ -56,6 +60,7 @@ class EngineConfig:
     frontier_exchange: str = "bitmask"
     frontier_cap: int = 0             # pinned sparse cap (sparse only)
     freelist: str = "interleaved"
+    kernel_backend: str = "lax"       # "lax" | "pallas" stat kernels
 
     @property
     def is_sharded(self) -> bool:
@@ -73,6 +78,7 @@ ENGINE_CONFIGS: Dict[str, EngineConfig] = {
             "frontier_sparse", "sharded", vertex_sharding="range",
             frontier_exchange="sparse", frontier_cap=16,
         ),
+        EngineConfig("pallas", "sharded", kernel_backend="pallas"),
     )
 }
 
@@ -95,6 +101,7 @@ class AuditParams:
 def trace_removal_round(
     vertex_sharding: str, n: int, cap: int, mesh,
     frontier_cap: Optional[int] = None,
+    kernel_backend: str = "lax",
 ) -> Tuple[List[Traffic], Any]:
     """Trace (not run) the removal fixpoint under shard_map.
 
@@ -115,7 +122,8 @@ def trace_removal_round(
 
     def kernel(src, dst, valid, core, label):
         return removal_fixpoint(src, dst, valid, core, label, n, n + 2,
-                                layout=layout)
+                                layout=layout,
+                                kernel_backend=kernel_backend)
 
     sm = shard_map(
         kernel, mesh=mesh,
@@ -136,6 +144,7 @@ def trace_removal_round(
 def trace_promotion_round(
     vertex_sharding: str, n: int, cap: int, mesh,
     frontier_cap: Optional[int] = None, lanes: int = 8,
+    kernel_backend: str = "lax",
 ) -> Tuple[List[Traffic], Any]:
     """Trace the promotion fixpoint under shard_map — the insertion-side
     counterpart of ``trace_removal_round``. Returns ``(log, jaxpr)``;
@@ -154,7 +163,8 @@ def trace_promotion_round(
     def kernel(src, dst, valid, core, label, nu, nv, nok, hi, dout):
         return promotion_fixpoint(src, dst, valid, core, label,
                                   nu, nv, nok, hi, dout, n, n + 2,
-                                  layout=layout)
+                                  layout=layout,
+                                  kernel_backend=kernel_backend)
 
     sm = shard_map(
         kernel, mesh=mesh,
@@ -298,6 +308,7 @@ def trace_engine(name: str,
             freelist=cfg.freelist,
             frontier_exchange=cfg.frontier_exchange,
             frontier_cap=fcap,
+            kernel_backend=cfg.kernel_backend,
         )
         n_state = n_owned * d if cfg.vertex_sharding == "range" else n
         args = _batch_args(params, n_state)
@@ -306,10 +317,12 @@ def trace_engine(name: str,
         donated["apply_batch"] = DONATED_STATE_ARGS
         round_fcap = fcap if cfg.frontier_exchange == "sparse" else None
         rounds["removal_round"] = trace_removal_round(
-            cfg.vertex_sharding, n, cap, mesh, round_fcap
+            cfg.vertex_sharding, n, cap, mesh, round_fcap,
+            kernel_backend=cfg.kernel_backend,
         )
         rounds["promotion_round"] = trace_promotion_round(
-            cfg.vertex_sharding, n, cap, mesh, round_fcap, lanes
+            cfg.vertex_sharding, n, cap, mesh, round_fcap, lanes,
+            kernel_backend=cfg.kernel_backend,
         )
 
     sizes = dict(

@@ -22,6 +22,12 @@ Registry (``RULES``, decorated with ``@rule``):
   value-taint analysis from big integer literals, cut at boolean
   outputs and paired through ``sort`` operands (so argsort index
   columns never inherit their keys' taint).
+* ``launch_budget`` — the per-round kernel-launch histogram
+  (gather/scatter/sort, a fused ``pallas_call`` counting as ONE) stays
+  pinned to the manifest; pallas configs are additionally re-traced
+  against their lax twin, whose collective schedule must be identical
+  (that is what lets them share the lax traffic budgets) and whose
+  launch count they must strictly undercut.
 * ``recompile_surface`` — the (window, frontier-cap) static bucket
   lattice the planners can reach stays within the manifest's jit
   variant bound (the class of mid-stream recompile that halved unified
@@ -50,6 +56,7 @@ from .walker import (
     CollectiveSite,
     collectives,
     count_collectives,
+    count_round_launches,
     iter_sites,
 )
 
@@ -680,7 +687,104 @@ def check_dtype_policy(traced, budget: dict) -> List[Finding]:
     return findings
 
 
-# -- rule 5: recompile-surface auditor ------------------------------------
+# -- rule 5: per-round launch budget --------------------------------------
+
+@rule("launch_budget")
+def check_launch_budget(traced, budget: dict) -> List[Finding]:
+    """Pin the per-round kernel-launch histogram, and prove the pallas
+    backend's fusion claim against its lax twin.
+
+    Part 1 (every engine with round traces): the histogram of
+    launch-class primitives per fixpoint round (``LAUNCH_PRIMS``; a
+    fused ``pallas_call`` counts as ONE launch) must equal the committed
+    ``round_launches`` section — a drifted count is a silently
+    re-grown gather/scatter train.
+
+    Part 2 (``kernel_backend="pallas"`` only): re-trace the SAME rounds
+    with ``kernel_backend="lax"`` and require (a) the collective
+    schedules to be IDENTICAL — op by op, payload by payload, branch by
+    branch — which is what entitles the pallas config to share the lax
+    collective/traffic budgets rather than assume them, and (b) the
+    pallas round's launch total to be STRICTLY lower than the lax
+    twin's — the whole point of the fusion, checked structurally so a
+    refactor that quietly unfuses the hot path fails the audit, not
+    just a benchmark."""
+    cfg = traced.config
+    findings: List[Finding] = []
+
+    def bad(msg: str, program: str = "") -> None:
+        findings.append(Finding("launch_budget", cfg.name, msg, program))
+
+    want_rounds = budget.get("round_launches", {})
+    for rname, (_, closed) in traced.rounds.items():
+        got = count_round_launches(closed)
+        want = want_rounds.get(rname)
+        if want is None:
+            bad(
+                f"no round_launches budget for {rname!r} (observed "
+                f"{got or '{}'}) — regenerate with "
+                "`audit --write-budgets`",
+                rname,
+            )
+        elif {k: int(v) for k, v in want.items()} != got:
+            bad(
+                f"launch histogram drifted: budget {want} vs traced "
+                f"{got or '{}'}",
+                rname,
+            )
+
+    if cfg.kernel_backend == "lax" or not traced.rounds:
+        return findings
+
+    import jax
+
+    from .programs import (
+        EDGE_AXIS,
+        trace_promotion_round,
+        trace_removal_round,
+    )
+
+    mesh = jax.make_mesh((traced.n_devices,), (EDGE_AXIS,))
+    n, cap = traced.params.n, traced.params.capacity
+    fcap = (traced.frontier_cap
+            if cfg.frontier_exchange == "sparse" else None)
+    twins = {
+        "removal_round": lambda: trace_removal_round(
+            cfg.vertex_sharding, n, cap, mesh, fcap,
+            kernel_backend="lax",
+        ),
+        "promotion_round": lambda: trace_promotion_round(
+            cfg.vertex_sharding, n, cap, mesh, fcap,
+            traced.params.lanes, kernel_backend="lax",
+        ),
+    }
+    for rname, (_, closed) in traced.rounds.items():
+        _, lax_closed = twins[rname]()
+        mine = [(c.op, c.out_bytes, c.cond_branches)
+                for c in collectives(closed)]
+        twin = [(c.op, c.out_bytes, c.cond_branches)
+                for c in collectives(lax_closed)]
+        if mine != twin:
+            bad(
+                f"collective schedule diverged from the lax twin: "
+                f"pallas {mine} vs lax {twin} — the fused kernels may "
+                "only replace LOCAL partials, never a collective",
+                rname,
+            )
+        n_mine = sum(count_round_launches(closed).values())
+        n_twin = sum(count_round_launches(lax_closed).values())
+        if n_mine >= n_twin:
+            bad(
+                f"pallas round launches {n_mine} launch-class "
+                f"primitives but the lax twin launches {n_twin} — "
+                "fusion must STRICTLY reduce the per-round launch "
+                "count",
+                rname,
+            )
+    return findings
+
+
+# -- rule 6: recompile-surface auditor ------------------------------------
 
 @rule("recompile_surface")
 def check_recompile_surface(traced, budget: dict) -> List[Finding]:

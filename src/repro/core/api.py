@@ -43,6 +43,14 @@ in-program per-round fallback to the bitmask on overflow — bit-identical
 results in every regime (docs/DESIGN.md §4.3). ``freelist`` picks the
 slot-allocator ranking (``"interleaved"`` | ``"hierarchical"`` —
 `insert.freelist_alloc`).
+``kernel_backend="pallas"`` routes every per-round statistics pass of
+the device engines through the fused COO Pallas kernel
+(kernels/coremaint.py) — one launch per round instead of a
+gather/scatter train, with the removal drop decision + core commit
+folded into the same launch wherever the layout completes statistics
+locally. Bit-identical to ``"lax"`` (integer adds only), and the mesh
+collective schedule is unchanged, so the sharded variants share the
+committed collective/memory budgets.
 All engine configurations are bit-identical in cores AND k-order labels
 on the same streams (tests/test_churn_streams.py).
 
@@ -66,6 +74,7 @@ import numpy as np
 from ..graph.csr import CSRGraph, build_csr
 from .decomposition import peel_decomposition, rank_to_labels
 from .engine import BatchStats, apply_batch
+from .graph_ops import KERNEL_BACKENDS
 from .insert import InsertStats, insert_batch
 from .oracle import bz_core_decomposition
 from .order import needs_renumber, renumber
@@ -211,6 +220,8 @@ class CoreMaintainer:
     frontier_exchange: str = "bitmask"   # "bitmask" | "sparse" (range only)
     frontier_cap: int = 0       # sparse index-buffer capacity; 0 = planned
     #                             per batch as a static pow2 bucket
+    kernel_backend: str = "lax"  # "lax" | "pallas" per-round stat kernels
+    #                              (kernels/coremaint.py; device engines only)
     validate: bool = True       # raise on out-of-range endpoints (else mask)
     last_insert_stats: Optional[InsertStats] = None
     last_remove_stats: Optional[RemoveStats] = None
@@ -277,6 +288,17 @@ class CoreMaintainer:
                 f"frontier_cap={self.frontier_cap} is only consumed by "
                 "frontier_exchange='sparse' — the bitmask exchange "
                 "would silently ignore it"
+            )
+        if self.kernel_backend not in KERNEL_BACKENDS:
+            raise ValueError(
+                f"unknown kernel_backend {self.kernel_backend!r} "
+                f"(expected one of {KERNEL_BACKENDS})"
+            )
+        if self.kernel_backend != "lax" and self.engine == "host":
+            raise ValueError(
+                "kernel_backend='pallas' needs a device engine "
+                "('unified' | 'sharded') — the host path runs the seed "
+                "two-program kernels and would silently ignore it"
             )
         _require_x64()
         if self.live_ub < 0 or self.hwm_ub < 0:
@@ -369,6 +391,7 @@ class CoreMaintainer:
                 freelist=self.freelist,
                 frontier_exchange=self.frontier_exchange,
                 frontier_cap=frontier_cap,
+                kernel_backend=self.kernel_backend,
             )
             self._sharded_fns[key] = fn
         return fn
@@ -410,6 +433,7 @@ class CoreMaintainer:
         freelist: str = "interleaved",
         frontier_exchange: str = "bitmask",
         frontier_cap: int = 0,
+        kernel_backend: str = "lax",
         validate: bool = True,
     ) -> "CoreMaintainer":
         _require_x64()  # before any label math that would truncate quietly
@@ -460,6 +484,7 @@ class CoreMaintainer:
             freelist=freelist,
             frontier_exchange=frontier_exchange,
             frontier_cap=frontier_cap,
+            kernel_backend=kernel_backend,
             validate=validate,
             slot_cache=edge_slot,
             live_ub=m,
@@ -625,7 +650,8 @@ class CoreMaintainer:
                 fcap = self._frontier_bucket(max(len(iu), len(ru)))
                 out = self._get_sharded_fn(window, fcap)(*args)
             else:
-                out = apply_batch(*args, self.n, self.n_levels, window)
+                out = apply_batch(*args, self.n, self.n_levels, window,
+                                  kernel_backend=self.kernel_backend)
         (
             self.src,
             self.dst,
@@ -902,6 +928,7 @@ class CoreMaintainer:
         freelist: str = "interleaved",
         frontier_exchange: str = "bitmask",
         frontier_cap: int = 0,
+        kernel_backend: str = "lax",
         validate: bool = True,
     ) -> "CoreMaintainer":
         z = np.load(path)
@@ -921,6 +948,7 @@ class CoreMaintainer:
             freelist=freelist,
             frontier_exchange=frontier_exchange,
             frontier_cap=frontier_cap,
+            kernel_backend=kernel_backend,
             validate=validate,
             slot_cache=None,  # lazily rebuilt from the live table
             # live_ub / hwm_ub default to -1: __post_init__ recomputes

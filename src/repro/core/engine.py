@@ -149,6 +149,7 @@ def batch_program(
     axis: str | None = None,
     layout: VertexLayout | None = None,
     freelist: str = "interleaved",
+    kernel_backend: str = "lax",
 ) -> Tuple[Array, Array, Array, Array, Array, Array, BatchStats]:
     """The ONE mixed-batch program body, shared verbatim by the unified
     engine (``axis=None``: the table arrays are the global slot table)
@@ -213,7 +214,8 @@ def batch_program(
 
     core_pre_rm = core
     core, label, rm_rounds, hi, dout_same, rm_fmax = removal_fixpoint(
-        src, dst, valid, core, label, n, n_levels, layout=layout
+        src, dst, valid, core, label, n, n_levels, layout=layout,
+        kernel_backend=kernel_backend,
     )
     n_dropped = jnp.sum(core != core_pre_rm, dtype=jnp.int32)
 
@@ -260,6 +262,7 @@ def batch_program(
     core, label, ins_rounds, v_plus, ins_fmax = promotion_fixpoint(
         src, dst, valid, core, label, ilo, ihi, iok,
         hi, dout_same, n, n_levels, layout=layout,
+        kernel_backend=kernel_backend,
     )
     n_promoted = jnp.sum(core != core_pre_ins, dtype=jnp.int32)
 
@@ -288,7 +291,7 @@ def batch_program(
 
 @partial(
     jax.jit,
-    static_argnames=("n", "n_levels", "active_cap"),
+    static_argnames=("n", "n_levels", "active_cap", "kernel_backend"),
     donate_argnums=DONATED_STATE_ARGS,
 )
 def apply_batch(
@@ -307,6 +310,7 @@ def apply_batch(
     n: int,
     n_levels: int,
     active_cap: int,
+    kernel_backend: str = "lax",
 ) -> Tuple[Array, Array, Array, Array, Array, Array, BatchStats]:
     """Apply one mixed batch (removals first, then insertions) and restore
     core numbers + k-order labels.
@@ -328,7 +332,7 @@ def apply_batch(
         src[:active_cap], dst[:active_cap], valid[:active_cap],
         core, label, n_edges,
         ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok,
-        n, n_levels,
+        n, n_levels, kernel_backend=kernel_backend,
     )
     # splice the active region back into the full-capacity buffers (the
     # inactive tail is untouched: all-invalid headroom)

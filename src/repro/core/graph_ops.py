@@ -19,6 +19,15 @@ only the vertex range it owns). With ``layout=None`` (single-device /
 GSPMD) completion is the identity and the functions are unchanged. This
 is how the sharded engines reuse the exact fixpoint code of remove.py /
 insert.py regardless of where the vertex state lives.
+
+This module is also the KERNEL DISPATCH POINT: the round statistics
+accept ``backend="lax" | "pallas"``. The lax path (default) is the
+bit-exact reference above; the pallas path replaces the per-stat
+gather + two-segment-sum launch train with one fused ``pallas_call``
+(``kernels/coremaint.py``) producing the SAME local partial sums, then
+completes them with the layout exactly as before — so switching the
+backend changes kernel launches, never collectives, and the results
+stay bit-identical (integer adds in a different order).
 """
 from __future__ import annotations
 
@@ -27,9 +36,23 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .vertex_layout import VertexLayout
+from ..kernels import coremaint
+from .vertex_layout import ReplicatedVertices, VertexLayout
 
 Array = jax.Array
+
+KERNEL_BACKENDS = ("lax", "pallas")
+
+
+def completes_locally(layout: Optional[VertexLayout]) -> bool:
+    """True when ``layout.complete`` is the identity (single device /
+    GSPMD): partial statistics ARE the global statistics, so the fused
+    pallas kernels may commit per-vertex threshold decisions in the same
+    launch that produced the stat. Under a mesh axis the decision must
+    wait for the layout's collective."""
+    return layout is None or (
+        isinstance(layout, ReplicatedVertices) and layout.axis is None
+    )
 
 
 def _complete(x: Array, layout: Optional[VertexLayout]) -> Array:
@@ -71,8 +94,17 @@ def degree(src: Array, dst: Array, valid: Array, n: int,
 
 
 def count_ge(src: Array, dst: Array, valid: Array, vals: Array, n: int,
-             layout: Optional[VertexLayout] = None) -> Array:
+             layout: Optional[VertexLayout] = None,
+             backend: str = "lax") -> Array:
     """mcd (Def 3.8): per-vertex count of neighbors w with vals[w] >= vals[v]."""
+    if backend == "pallas":
+        # the "mcd" stat compares core only; the kernel's label input is
+        # unused by its predicates but fixed int64 — synthesize one
+        out = coremaint.coo_stat(
+            src, dst, valid, vals,
+            jnp.zeros(vals.shape[0], jnp.int64), n, stat="mcd",
+        )
+        return _complete(out, layout)[:, 0]
     to_src = (valid & (vals[dst] >= vals[src])).astype(jnp.int32)
     to_dst = (valid & (vals[src] >= vals[dst])).astype(jnp.int32)
     return _seg2(to_src, to_dst, src, dst, n, layout)
@@ -104,11 +136,18 @@ def hi_dout_indicators(
 
 def hi_and_dout_same(
     src: Array, dst: Array, valid: Array, core: Array, label: Array, n: int,
-    layout: Optional[VertexLayout] = None,
+    layout: Optional[VertexLayout] = None, backend: str = "lax",
 ):
     """Packed (hi, dout_same) for the insertion round: one [n, 2] result
     (single collective) carries both the higher-core neighbor count and
     the same-level k-order successor count (Defs 3.6/3.7 pieces)."""
+    if backend == "pallas":
+        out = _complete(
+            coremaint.coo_stat(src, dst, valid, core, label, n,
+                               stat="hi_dout"),
+            layout,
+        )
+        return out[:, 0], out[:, 1]
     hi_s, hi_d, do_s, do_d = hi_dout_indicators(core, label, src, dst, valid)
     to_src = jnp.stack(
         [hi_s.astype(jnp.int32), do_s.astype(jnp.int32)], axis=-1
@@ -126,13 +165,20 @@ def hi_and_dout_same(
 
 def mcd_hi_dout(
     src: Array, dst: Array, valid: Array, core: Array, label: Array, n: int,
-    layout: Optional[VertexLayout] = None,
+    layout: Optional[VertexLayout] = None, backend: str = "lax",
 ):
     """Packed (mcd, hi, dout_same) — one [n, 3] scatter carries the removal
     fixpoint's support count (Def 3.8) together with both promotion-seeding
     statistics (Defs 3.6/3.7 pieces). The unified engine runs this once per
     removal round; the terminating round's (hi, dout_same) columns are then
     reused to seed the promotion phase without a fresh O(m) pass."""
+    if backend == "pallas":
+        out = _complete(
+            coremaint.coo_stat(src, dst, valid, core, label, n,
+                               stat="mcd_hi_dout"),
+            layout,
+        )
+        return out[:, 0], out[:, 1], out[:, 2]
     hi_s, hi_d, do_s, do_d = hi_dout_indicators(core, label, src, dst, valid)
     to_src = jnp.stack(
         [
@@ -189,9 +235,15 @@ def count_same_level_before_in(
 
 def count_same_level_in(
     src: Array, dst: Array, valid: Array, core: Array, mask: Array, n: int,
-    layout: Optional[VertexLayout] = None,
+    layout: Optional[VertexLayout] = None, backend: str = "lax",
 ) -> Array:
     """Per-vertex count of same-level neighbors inside ``mask``."""
+    if backend == "pallas":
+        out = coremaint.coo_stat(
+            src, dst, valid, core, jnp.zeros(core.shape[0], jnp.int64), n,
+            stat="same_in", aux=mask,
+        )
+        return _complete(out, layout)[:, 0]
     same = valid & (core[src] == core[dst])
     to_src = (same & mask[dst]).astype(jnp.int32)
     to_dst = (same & mask[src]).astype(jnp.int32)
@@ -207,11 +259,18 @@ def din_and_expand(
     rp: Array,
     n: int,
     layout: Optional[VertexLayout] = None,
+    backend: str = "lax",
 ):
     """Fused FORWARD-wave statistics in ONE scatter-add: din counts
     reached-and-passing k-order predecessors, and frontier growth is
     exactly ``din > 0`` (a vertex is newly reachable iff it has an RP
     predecessor) — iteration C1."""
+    if backend == "pallas":
+        out = coremaint.coo_stat(
+            src, dst, valid, core, label, n, stat="din", aux=rp,
+        )
+        din = _complete(out, layout)[:, 0]
+        return din, din > 0
     same = valid & (core[src] == core[dst])
     fwd_to_dst = same & (label[src] < label[dst]) & rp[src]
     fwd_to_src = same & (label[dst] < label[src]) & rp[dst]

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from . import graph_ops as G
+from ..kernels import coremaint
 from .order import place_block
 from .vertex_layout import ReplicatedVertices, VertexLayout
 
@@ -175,6 +176,7 @@ def promotion_fixpoint(
     n: int,
     n_levels: int,
     layout: VertexLayout | None = None,
+    kernel_backend: str = "lax",
 ) -> Tuple[Array, Array, Array, Array, Array]:
     """Promotion rounds for pending edges already written into the table.
 
@@ -201,9 +203,18 @@ def promotion_fixpoint(
     ``max_frontier`` is the max per-shard count over every exchanged mask
     (``layout.frontier_peak``) — the observed datum the sparse
     ``frontier_cap`` planner is tuned from (docs/DESIGN.md §4.3).
+
+    ``kernel_backend="pallas"`` runs every wave/evict/terminating
+    statistic through the fused COO kernels (kernels/coremaint.py) —
+    bit-identical partials, fewer launches; where the layout completes
+    locally the terminating violator check folds into the same launch
+    as its statistics (``fused_promotion_stats``).
     """
     if layout is None:
         layout = ReplicatedVertices(n)
+    fuse_decision = (
+        kernel_backend == "pallas" and G.completes_locally(layout)
+    )
 
     def round_cond(state):
         return state[2]
@@ -228,11 +239,13 @@ def promotion_fixpoint(
         seed = seed | viol | promoted_prev
 
         reach, passing, wave_fmax = _forward_reach(
-            src, dst, valid, core, label, seed, hi, dout_same, n, layout
+            src, dst, valid, core, label, seed, hi, dout_same, n, layout,
+            kernel_backend=kernel_backend,
         )
         cand0 = reach & passing
         cand, evict_round, ev_fmax = _evict_fixpoint(
-            src, dst, valid, core, cand0, hi, n, layout
+            src, dst, valid, core, cand0, hi, n, layout,
+            kernel_backend=kernel_backend,
         )
         fmax = jnp.maximum(fmax, jnp.maximum(wave_fmax, ev_fmax))
 
@@ -245,19 +258,28 @@ def promotion_fixpoint(
         evicted = cand0 & ~cand
         label = place_block(new_core, label, evicted, at_head=False,
                             n_levels=n_levels, round_key=evict_round)
-        # fused (hi, dout_same) for the NEXT round — one scatter-add (C1)
-        new_hi, new_dout = G.hi_and_dout_same(
-            src, dst, valid, new_core, label, n, layout
-        )
+        # fused (hi, dout_same) for the NEXT round — one scatter-add (C1).
         # Continue only while the k-order certificate is violated somewhere:
         # the passing-set fixpoint bootstraps from ``hi + dout_same > core``
         # vertices, so with none of them the next round provably finds no
         # candidates (docs/DESIGN.md §2.3) — this skips the seed
         # implementation's trailing confirm round (a full forward + evict
         # + stats pass) entirely.
-        changed = layout.any_owned(
-            (new_hi + new_dout) > layout.own(new_core)
-        )
+        if fuse_decision:
+            # ONE pallas_call: stats + the violator threshold mask that
+            # decides fixpoint termination
+            new_hi, new_dout, viol_next = coremaint.fused_promotion_stats(
+                src, dst, valid, new_core, label, n
+            )
+            changed = jnp.any(viol_next)
+        else:
+            new_hi, new_dout = G.hi_and_dout_same(
+                src, dst, valid, new_core, label, n, layout,
+                backend=kernel_backend,
+            )
+            changed = layout.any_owned(
+                (new_hi + new_dout) > layout.own(new_core)
+            )
         return (
             new_core,
             label,
@@ -291,6 +313,7 @@ def _forward_reach(
     dout_same: Array,
     n: int,
     layout: VertexLayout | None = None,
+    kernel_backend: str = "lax",
 ) -> Tuple[Array, Array, Array]:
     """Monotone fixpoint of gated forward expansion.
 
@@ -315,7 +338,7 @@ def _forward_reach(
         rp = reach & passing
         # one fused scatter per wave: din and frontier growth (C1)
         din, grow = G.din_and_expand(src, dst, valid, core, label, rp, n,
-                                     layout)
+                                     layout, backend=kernel_backend)
         new_passing = layout.gather_mask(
             (hi + dout_same + din) > core_own
         )
@@ -344,6 +367,7 @@ def _evict_fixpoint(
     hi: Array,
     n: int,
     layout: VertexLayout | None = None,
+    kernel_backend: str = "lax",
 ) -> Tuple[Array, Array, Array]:
     """Greatest fixpoint of the candidate support test (sound + complete
     for any starting superset of V*).
@@ -365,7 +389,8 @@ def _evict_fixpoint(
     def body(state):
         cand, evict_round, rnd, _, fmax = state
         support = hi + G.count_same_level_in(src, dst, valid, core, cand, n,
-                                             layout)
+                                             layout,
+                                             backend=kernel_backend)
         keep = layout.gather_mask(support > core_own)
         fmax = jnp.maximum(fmax, layout.frontier_peak(keep))
         new_cand = cand & keep

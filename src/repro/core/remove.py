@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from . import graph_ops as G
+from ..kernels import coremaint
 from .order import place_block
 from .vertex_layout import ReplicatedVertices, VertexLayout
 
@@ -55,6 +56,7 @@ def removal_fixpoint(
     n_levels: int,
     share_stats: bool = True,
     layout: VertexLayout | None = None,
+    kernel_backend: str = "lax",
 ) -> Tuple[Array, Array, Array, Array, Array, Array]:
     """Run the decrease-only mcd fixpoint on an already-tombstoned table.
 
@@ -81,25 +83,47 @@ def removal_fixpoint(
     and the label tail placement — replays identically everywhere).
     Either way the working core/label stay replicated values, so all
     devices run the loop in lockstep.
+
+    ``kernel_backend="pallas"`` routes the statistics pass through the
+    fused COO kernel (kernels/coremaint.py): bit-identical partials, one
+    launch instead of a gather/scatter train. Where the layout completes
+    locally the drop decision + core commit fold into the same launch
+    (``fused_removal_round``); under a mesh the decision still runs after
+    the layout's collective, so the collective schedule never changes.
     """
     if layout is None:
         layout = ReplicatedVertices(n)
+    # decision fusion needs the GLOBAL mcd in-kernel: only where the
+    # layout completes statistics locally (single device / GSPMD)
+    fuse_decision = (
+        kernel_backend == "pallas" and G.completes_locally(layout)
+    )
 
     def cond(state):
         return state[2]
 
     def body(state):
         core, label, _, rounds, hi, dout_same, fmax = state
-        if share_stats:
-            mcd, hi, dout_same = G.mcd_hi_dout(
-                src, dst, valid, core, label, n, layout
+        if fuse_decision:
+            # ONE pallas_call: packed stats + drop threshold + core commit
+            _, k_hi, k_dout, new_core, drop = coremaint.fused_removal_round(
+                src, dst, valid, core, label, n
             )
+            if share_stats:
+                hi, dout_same = k_hi, k_dout
         else:
-            mcd = G.count_ge(src, dst, valid, core, n, layout)
-        core_own = layout.own(core)
-        drop = layout.gather_mask((mcd < core_own) & (core_own > 0))
+            if share_stats:
+                mcd, hi, dout_same = G.mcd_hi_dout(
+                    src, dst, valid, core, label, n, layout,
+                    backend=kernel_backend,
+                )
+            else:
+                mcd = G.count_ge(src, dst, valid, core, n, layout,
+                                 backend=kernel_backend)
+            core_own = layout.own(core)
+            drop = layout.gather_mask((mcd < core_own) & (core_own > 0))
+            new_core = core - drop.astype(jnp.int32)
         fmax = jnp.maximum(fmax, layout.frontier_peak(drop))
-        new_core = core - drop.astype(jnp.int32)
         # place this round's droppers at the tail of their new level
         label = place_block(new_core, label, drop, at_head=False,
                             n_levels=n_levels)

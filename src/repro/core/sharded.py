@@ -74,7 +74,8 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
                        vertex_sharding: str = "replicated",
                        freelist: str = "interleaved",
                        frontier_exchange: str = "bitmask",
-                       frontier_cap: int = 0):
+                       frontier_cap: int = 0,
+                       kernel_backend: str = "lax"):
     """Build the jitted sharded mixed-batch engine over ``mesh``.
 
     The returned function has the same signature and semantics as
@@ -111,6 +112,13 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
     shard's frontier overflows the cap — bit-identical either way).
     ``frontier_cap`` is STATIC: one jitted engine per cap bucket, like
     ``local_active`` (api.py plans the pow2 bucket).
+
+    ``kernel_backend`` picks the per-round statistics implementation
+    (``"lax"`` segment_sum scatters or the ``"pallas"`` fused COO kernel,
+    kernels/coremaint.py). Inside the shard_map kernel the pallas path
+    replaces only the LOCAL partial-statistic computation — the layout
+    completion collectives are identical — so the mesh collective
+    schedule (and the committed budget manifests) are shared with lax.
 
     ``local_active`` is the per-shard high-water window — the sharded
     analogue of the unified engine's ``active_cap``. Slicing a SHARDED
@@ -211,6 +219,7 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
             src[:w], dst[:w], valid[:w], core, label, n_edges,
             ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok,
             n, n_levels, axis=axis, layout=layout, freelist=freelist,
+            kernel_backend=kernel_backend,
         )
         src = jnp.concatenate([src, full_src[w:]])
         dst = jnp.concatenate([dst, full_dst[w:]])

@@ -1,0 +1,406 @@
+"""Fused Pallas kernels for the core-maintenance round hot path.
+
+The lax reference path (``core/graph_ops.py``) realizes every per-round
+neighborhood statistic as gather -> per-edge indicators -> two
+``segment_sum`` scatters (per direction), which XLA emits as separate
+scatter/gather kernels: one ``mcd_hi_dout`` pass alone launches 6+
+kernels, and the 1-core BENCH_stream.json rows show that *dispatch*
+overhead — not compute — dominates each round. These kernels collapse a
+whole statistics pass over the active-prefix COO slot table into ONE
+``pallas_call``:
+
+  HBM:  src/dst/valid [E]  (the active slot window), core [n] int32,
+        label [n] int64, aux [n] (rp / candidate mask, stat-dependent)
+  VMEM: edge block [BE] + the full per-vertex vectors
+  out:  [n, C] packed statistic columns
+
+Grid is ``(n/BN, E/BE)``; the edge axis accumulates into the revisited
+output row-block (the block/accumulator idiom of ``segment_ell.py``).
+Inside a cell the two directional scatter-adds become two one-hot
+matmuls — ``onehot[BN, BE] @ indicators[BE, C]`` — integer adds in a
+different order than ``segment_sum``, hence BIT-identical results (the
+churn differential harness pins this across every engine config).
+
+Decision fusion: when the caller's vertex layout completes statistics
+locally (single device / GSPMD — ``layout.complete`` is the identity),
+the per-vertex threshold decision and its commit fold into the same
+``pallas_call`` on the last edge block: ``fused_removal_round`` emits
+``(mcd, hi, dout_same, new_core, drop)`` and ``fused_promotion_stats``
+emits ``(hi, dout_same, viol)`` in one launch. Under a mesh the partial
+statistics still need the layout's collective first, so sharded callers
+use the stats-only ``coo_stat`` and keep the decision in lax after
+``layout.complete`` — which is exactly why the pallas backend changes
+LAUNCHES but not COLLECTIVES (the static auditor pins the pallas
+config's collective budget equal to the lax one's).
+
+All arithmetic is int32/int64 compares and adds — no floating point —
+so ``kernel_backend="pallas"`` is bit-exact against the lax reference,
+not merely allclose. ``interpret=True`` (the default off-TPU) lowers to
+plain JAX ops, which is how CPU CI runs these under ``shard_map``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+# stat name -> number of packed output columns; predicates mirror
+# graph_ops.hi_dout_indicators / din_and_expand / count_same_level_in
+# verbatim so the two backends cannot drift on tie-breaking
+_STAT_COLS = {
+    "mcd_hi_dout": 3,
+    "hi_dout": 2,
+    "mcd": 1,
+    "din": 1,
+    "same_in": 1,
+}
+
+
+def default_interpret() -> bool:
+    """Interpret mode off-TPU: the kernels lower to plain JAX ops (and so
+    compose with shard_map on forced host devices); on TPU they compile."""
+    return jax.default_backend() != "tpu"
+
+
+def _edge_columns(stat, valid, cs, cd, ls, ld, auxs, auxd):
+    """Per-edge indicator columns (to_src, to_dst) of one packed stat —
+    the in-kernel twin of ``graph_ops``' per-edge predicates."""
+    same = valid & (cs == cd)
+    if stat == "mcd_hi_dout":
+        to_src = (valid & (cd >= cs), valid & (cd > cs), same & (ld > ls))
+        to_dst = (valid & (cs >= cd), valid & (cs > cd), same & (ls > ld))
+    elif stat == "hi_dout":
+        to_src = (valid & (cd > cs), same & (ld > ls))
+        to_dst = (valid & (cs > cd), same & (ls > ld))
+    elif stat == "mcd":
+        to_src = (valid & (cd >= cs),)
+        to_dst = (valid & (cs >= cd),)
+    elif stat == "din":
+        # din_and_expand: reached-and-passing k-order predecessors
+        to_src = (same & (ld < ls) & auxd,)
+        to_dst = (same & (ls < ld) & auxs,)
+    elif stat == "same_in":
+        # count_same_level_in: same-level neighbors inside the aux mask
+        to_src = (same & auxd,)
+        to_dst = (same & auxs,)
+    else:
+        raise ValueError(f"stat {stat!r} not in {tuple(_STAT_COLS)}")
+    pack = lambda cols: jnp.stack(
+        [c.astype(jnp.int32) for c in cols], axis=-1
+    )
+    return pack(to_src), pack(to_dst)
+
+
+def _accumulate(src, dst, to_src, to_dst, row0, block_n):
+    """Scatter one edge block's columns into the [BN, C] row block via two
+    one-hot matmuls (the MXU-friendly form of a segment_sum)."""
+    be = src.shape[0]
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_n, be), 0)
+    onehot_s = (rows == src[None, :]).astype(jnp.int32)
+    onehot_d = (rows == dst[None, :]).astype(jnp.int32)
+    return (
+        jnp.dot(onehot_s, to_src, preferred_element_type=jnp.int32)
+        + jnp.dot(onehot_d, to_dst, preferred_element_type=jnp.int32)
+    ).astype(jnp.int32)
+
+
+def _gather_endpoint_state(src, dst, core, label, aux):
+    cs = jnp.take(core, src, axis=0, fill_value=0)
+    cd = jnp.take(core, dst, axis=0, fill_value=0)
+    ls = jnp.take(label, src, axis=0, fill_value=0)
+    ld = jnp.take(label, dst, axis=0, fill_value=0)
+    auxs = jnp.take(aux, src, axis=0, fill_value=0) != 0
+    auxd = jnp.take(aux, dst, axis=0, fill_value=0) != 0
+    return cs, cd, ls, ld, auxs, auxd
+
+
+def _stat_kernel(src_ref, dst_ref, valid_ref, core_ref, label_ref, aux_ref,
+                 out_ref, *, stat: str, block_n: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    src = src_ref[...]
+    dst = dst_ref[...]
+    valid = valid_ref[...] != 0
+    cs, cd, ls, ld, auxs, auxd = _gather_endpoint_state(
+        src, dst, core_ref[...], label_ref[...], aux_ref[...]
+    )
+    to_src, to_dst = _edge_columns(stat, valid, cs, cd, ls, ld, auxs, auxd)
+    partial = _accumulate(src, dst, to_src, to_dst, i * block_n, block_n)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + partial
+
+
+def _pad_inputs(src, dst, valid, aux, n, block_e):
+    e = src.shape[0]
+    e_pad = -e % block_e
+    src_p = jnp.pad(src, (0, e_pad))
+    dst_p = jnp.pad(dst, (0, e_pad))
+    valid_p = jnp.pad(valid.astype(jnp.int32), (0, e_pad))
+    aux_p = (
+        jnp.zeros((n,), jnp.int32) if aux is None else aux.astype(jnp.int32)
+    )
+    return src_p, dst_p, valid_p, aux_p
+
+
+def coo_stat(
+    src: Array,
+    dst: Array,
+    valid: Array,
+    core: Array,
+    label: Array,
+    n: int,
+    stat: str = "mcd_hi_dout",
+    aux: Optional[Array] = None,
+    block_n: int = 256,
+    block_e: int = 256,
+    interpret: Optional[bool] = None,
+) -> Array:
+    """LOCAL packed per-vertex statistics over a COO edge-slot window.
+
+    Returns ``[n, C]`` int32 partial sums — exactly what the lax path's
+    local ``segment_sum`` pair produces *before* ``layout.complete``, so
+    sharded callers psum / reduce_scatter the result unchanged and the
+    collective schedule is identical to the lax backend's.
+
+    ``aux`` is the stat-dependent per-vertex mask (``rp`` for "din", the
+    candidate mask for "same_in"); ignored by the other stats.
+    """
+    ncols = _STAT_COLS[stat]  # raises KeyError loudly on an unknown stat
+    if label.dtype != jnp.int64:
+        raise TypeError(
+            f"label must be int64 (k-order labels), got {label.dtype} — "
+            "is jax_enable_x64 off?"
+        )
+    if src.shape[0] == 0 or n == 0:
+        # zero grid = kernel never runs = uninitialized output
+        return jnp.zeros((n, ncols), jnp.int32)
+    if interpret is None:
+        interpret = default_interpret()
+    src_p, dst_p, valid_p, aux_p = _pad_inputs(
+        src, dst, valid, aux, n, block_e
+    )
+    np_ = n + (-n % block_n)
+    grid = (np_ // block_n, src_p.shape[0] // block_e)
+    out = pl.pallas_call(
+        functools.partial(_stat_kernel, stat=stat, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i, j: (j,)),
+            pl.BlockSpec((block_e,), lambda i, j: (j,)),
+            pl.BlockSpec((block_e,), lambda i, j: (j,)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, ncols), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, ncols), jnp.int32),
+        interpret=interpret,
+    )(src_p, dst_p, valid_p, core, label, aux_p)
+    return out[:n]
+
+
+def _removal_kernel(src_ref, dst_ref, valid_ref, core_ref, label_ref,
+                    aux_ref, coreblk_ref, out_ref, newcore_ref, drop_ref,
+                    *, block_n: int, n_eblocks: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    src = src_ref[...]
+    dst = dst_ref[...]
+    valid = valid_ref[...] != 0
+    cs, cd, ls, ld, auxs, auxd = _gather_endpoint_state(
+        src, dst, core_ref[...], label_ref[...], aux_ref[...]
+    )
+    to_src, to_dst = _edge_columns(
+        "mcd_hi_dout", valid, cs, cd, ls, ld, auxs, auxd
+    )
+    partial = _accumulate(src, dst, to_src, to_dst, i * block_n, block_n)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + partial
+
+    # the row block's mcd column is complete once the LAST edge block has
+    # accumulated (the grid's second axis is innermost): fold the removal
+    # round's threshold decision + core commit into the same launch
+    @pl.when(j == n_eblocks - 1)
+    def _decide():
+        mcd = out_ref[..., 0]
+        core_blk = coreblk_ref[...]
+        drop = (mcd < core_blk) & (core_blk > 0)
+        drop_ref[...] = drop.astype(jnp.int32)
+        newcore_ref[...] = core_blk - drop.astype(jnp.int32)
+
+
+def fused_removal_round(
+    src: Array,
+    dst: Array,
+    valid: Array,
+    core: Array,
+    label: Array,
+    n: int,
+    block_n: int = 256,
+    block_e: int = 256,
+    interpret: Optional[bool] = None,
+):
+    """One removal round — stat + drop decision + core commit — in ONE
+    ``pallas_call``. Valid only where the vertex layout completes
+    statistics locally (``graph_ops.completes_locally``): the drop test
+    needs the GLOBAL mcd. Returns ``(mcd, hi, dout_same, new_core,
+    drop)`` with ``drop`` boolean [n]; the label tail placement stays
+    outside (``order.place_block`` is a global sort-free relabel over
+    the committed mask).
+    """
+    if label.dtype != jnp.int64:
+        raise TypeError(
+            f"label must be int64 (k-order labels), got {label.dtype}"
+        )
+    if src.shape[0] == 0 or n == 0:
+        z = jnp.zeros((n,), jnp.int32)
+        return z, z, z, core, jnp.zeros((n,), bool)
+    if interpret is None:
+        interpret = default_interpret()
+    src_p, dst_p, valid_p, aux_p = _pad_inputs(
+        src, dst, valid, None, n, block_e
+    )
+    np_ = n + (-n % block_n)
+    core_p = jnp.pad(core, (0, np_ - n))
+    grid = (np_ // block_n, src_p.shape[0] // block_e)
+    stats, new_core, drop = pl.pallas_call(
+        functools.partial(
+            _removal_kernel, block_n=block_n, n_eblocks=grid[1]
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i, j: (j,)),
+            pl.BlockSpec((block_e,), lambda i, j: (j,)),
+            pl.BlockSpec((block_e,), lambda i, j: (j,)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, 3), jnp.int32),
+            jax.ShapeDtypeStruct((np_,), core.dtype),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(src_p, dst_p, valid_p, core, label, aux_p, core_p)
+    return (
+        stats[:n, 0],
+        stats[:n, 1],
+        stats[:n, 2],
+        new_core[:n],
+        drop[:n] != 0,
+    )
+
+
+def _promotion_kernel(src_ref, dst_ref, valid_ref, core_ref, label_ref,
+                      aux_ref, coreblk_ref, out_ref, viol_ref,
+                      *, block_n: int, n_eblocks: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    src = src_ref[...]
+    dst = dst_ref[...]
+    valid = valid_ref[...] != 0
+    cs, cd, ls, ld, auxs, auxd = _gather_endpoint_state(
+        src, dst, core_ref[...], label_ref[...], aux_ref[...]
+    )
+    to_src, to_dst = _edge_columns(
+        "hi_dout", valid, cs, cd, ls, ld, auxs, auxd
+    )
+    partial = _accumulate(src, dst, to_src, to_dst, i * block_n, block_n)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + partial
+
+    # certificate check fused onto the completed row block: a violator has
+    # hi + dout_same > core (docs/DESIGN.md §2.3) — the mask that seeds
+    # the next promotion round and decides fixpoint termination
+    @pl.when(j == n_eblocks - 1)
+    def _decide():
+        s = out_ref[...]
+        viol = (s[..., 0] + s[..., 1]) > coreblk_ref[...]
+        viol_ref[...] = viol.astype(jnp.int32)
+
+
+def fused_promotion_stats(
+    src: Array,
+    dst: Array,
+    valid: Array,
+    core: Array,
+    label: Array,
+    n: int,
+    block_n: int = 256,
+    block_e: int = 256,
+    interpret: Optional[bool] = None,
+):
+    """Promotion-round terminating statistics — (hi, dout_same) + the
+    certificate-violator mask — in ONE ``pallas_call``. Local-completion
+    layouts only (the threshold needs global statistics). Returns
+    ``(hi, dout_same, viol)`` with ``viol`` boolean [n]."""
+    if label.dtype != jnp.int64:
+        raise TypeError(
+            f"label must be int64 (k-order labels), got {label.dtype}"
+        )
+    if src.shape[0] == 0 or n == 0:
+        z = jnp.zeros((n,), jnp.int32)
+        return z, z, jnp.zeros((n,), bool)
+    if interpret is None:
+        interpret = default_interpret()
+    src_p, dst_p, valid_p, aux_p = _pad_inputs(
+        src, dst, valid, None, n, block_e
+    )
+    np_ = n + (-n % block_n)
+    core_p = jnp.pad(core, (0, np_ - n))
+    grid = (np_ // block_n, src_p.shape[0] // block_e)
+    stats, viol = pl.pallas_call(
+        functools.partial(
+            _promotion_kernel, block_n=block_n, n_eblocks=grid[1]
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i, j: (j,)),
+            pl.BlockSpec((block_e,), lambda i, j: (j,)),
+            pl.BlockSpec((block_e,), lambda i, j: (j,)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+            pl.BlockSpec((n,), lambda i, j: (0,)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, 2), jnp.int32),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(src_p, dst_p, valid_p, core, label, aux_p, core_p)
+    return stats[:n, 0], stats[:n, 1], viol[:n] != 0

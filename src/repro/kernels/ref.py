@@ -8,6 +8,8 @@ import jax.numpy as jnp
 # -- segment_ell ------------------------------------------------------------
 def ell_stat_ref(nbrs, vals, self_vals, op="count_ge"):
     n = nbrs.shape[0]
+    if n == 0 or nbrs.shape[1] == 0:
+        return jnp.zeros((n,), vals.dtype)
     vals_ext = jnp.concatenate([vals, jnp.zeros((1,), vals.dtype)])
     gathered = vals_ext[nbrs]  # [n, D]
     mask = nbrs < n
@@ -22,13 +24,18 @@ def ell_stat_ref(nbrs, vals, self_vals, op="count_ge"):
     if op == "sum":
         return jnp.sum(jnp.where(mask, gathered, 0), axis=1)
     if op == "max":
+        # empty-neighborhood identity is 0 (matches the kernel's post-
+        # reduce sentinel mask); rows with neighbors take the true max
         neg = jnp.asarray(-(2**30), vals.dtype)
-        return jnp.max(jnp.where(mask, gathered, neg), axis=1)
+        raw = jnp.max(jnp.where(mask, gathered, neg), axis=1)
+        return jnp.where(jnp.any(mask, axis=1), raw, 0)
     raise ValueError(op)
 
 
 def ell_aggregate_ref(nbrs, feats, op="sum"):
     n = nbrs.shape[0]
+    if n == 0 or nbrs.shape[1] == 0:
+        return jnp.zeros((n, feats.shape[1]), feats.dtype)
     feats_ext = jnp.concatenate(
         [feats, jnp.zeros((1, feats.shape[1]), feats.dtype)], axis=0
     )
@@ -37,7 +44,8 @@ def ell_aggregate_ref(nbrs, feats, op="sum"):
     if op == "sum":
         return jnp.sum(jnp.where(mask, gathered, 0.0), axis=1)
     if op == "max":
-        return jnp.max(jnp.where(mask, gathered, -1e30), axis=1)
+        raw = jnp.max(jnp.where(mask, gathered, -1e30), axis=1)
+        return jnp.where(jnp.any(mask, axis=1), raw, 0.0)
     raise ValueError(op)
 
 

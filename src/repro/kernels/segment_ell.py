@@ -29,7 +29,8 @@ from jax.experimental import pallas as pl
 _OPS = ("count_ge", "count_gt", "count_eq_gt_label", "sum", "max")
 
 
-def _kernel(nbrs_ref, vals_ref, self_ref, out_ref, *, op: str, n: int):
+def _kernel(nbrs_ref, vals_ref, self_ref, out_ref, cnt_ref, *, op: str,
+            n: int, n_dblocks: int):
     j = pl.program_id(1)
     idx = nbrs_ref[...]  # [BN, BD] int32 neighbor ids (pad = n)
     vals = vals_ref[...]  # [n + 1]
@@ -54,10 +55,12 @@ def _kernel(nbrs_ref, vals_ref, self_ref, out_ref, *, op: str, n: int):
     # under x64, integer reductions accumulate in int64 while out_ref keeps
     # the input dtype — cast back before the swap
     partial = partial.astype(out_ref.dtype)
+    ncnt = jnp.sum(mask.astype(jnp.int32), axis=1).astype(jnp.int32)
 
     @pl.when(j == 0)
     def _init():
         out_ref[...] = partial
+        cnt_ref[...] = ncnt
 
     @pl.when(j != 0)
     def _acc():
@@ -65,6 +68,17 @@ def _kernel(nbrs_ref, vals_ref, self_ref, out_ref, *, op: str, n: int):
             out_ref[...] = jnp.maximum(out_ref[...], partial)
         else:
             out_ref[...] = out_ref[...] + partial
+        cnt_ref[...] = cnt_ref[...] + ncnt
+
+    if op == "max":
+        # the running max of an all-pad row is still the init sentinel;
+        # replace it with the defined empty-neighborhood identity (0) once
+        # the row's last degree block has been accumulated
+        @pl.when(j == n_dblocks - 1)
+        def _mask_empty():
+            out_ref[...] = jnp.where(
+                cnt_ref[...] == 0, jnp.zeros_like(out_ref[...]), out_ref[...]
+            )
 
 
 def ell_stat(
@@ -82,10 +96,20 @@ def ell_stat(
     vals:      [n] per-vertex value (int32); a sentinel row is appended
     self_vals: [n] the per-vertex comparison value (usually == vals)
     op:        count_ge (mcd) | count_gt (hi) | sum | max
+
+    Rows with no valid neighbors (all-pad, including the ``max_deg == 0``
+    degenerate layout) return 0 for every op — ``max`` uses 0 as its
+    defined empty-neighborhood identity rather than leaking the internal
+    init sentinel.
     """
     if op not in _OPS:
         raise ValueError(f"op {op} not in {_OPS}")
     n, max_deg = nbrs.shape
+    if n == 0 or max_deg == 0:
+        # a zero grid dimension would skip every kernel invocation and
+        # return an UNINITIALIZED buffer — short-circuit to the correct
+        # empty-neighborhood result instead
+        return jnp.zeros((n,), vals.dtype)
     n_pad = -n % block_n
     d_pad = -max_deg % block_d
     nbrs_p = jnp.pad(nbrs, ((0, n_pad), (0, d_pad)), constant_values=n)
@@ -93,22 +117,29 @@ def ell_stat(
     vals_p = jnp.concatenate([vals, jnp.zeros((1,), vals.dtype)])
     np_, dp_ = nbrs_p.shape
     grid = (np_ // block_n, dp_ // block_d)
-    out = pl.pallas_call(
-        functools.partial(_kernel, op=op, n=n),
+    out, _ = pl.pallas_call(
+        functools.partial(_kernel, op=op, n=n, n_dblocks=grid[1]),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_n, block_d), lambda i, j: (i, j)),
             pl.BlockSpec((n + 1,), lambda i, j: (0,)),
             pl.BlockSpec((block_n,), lambda i, j: (i,)),
         ],
-        out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
-        out_shape=jax.ShapeDtypeStruct((np_,), vals.dtype),
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), vals.dtype),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+        ],
         interpret=interpret,
     )(nbrs_p, vals_p, self_p)
     return out[:n]
 
 
-def _agg_kernel(nbrs_ref, feat_ref, out_ref, *, op: str, n: int):
+def _agg_kernel(nbrs_ref, feat_ref, out_ref, cnt_ref, *, op: str, n: int,
+                n_dblocks: int):
     j = pl.program_id(1)
     idx = nbrs_ref[...]  # [BN, BD]
     feats = feat_ref[...]  # [n + 1, F]
@@ -121,10 +152,12 @@ def _agg_kernel(nbrs_ref, feat_ref, out_ref, *, op: str, n: int):
         partial = jnp.max(jnp.where(mask, gathered, neg), axis=1)
     else:
         raise ValueError(op)
+    ncnt = jnp.sum((idx < n).astype(jnp.int32), axis=1).astype(jnp.int32)
 
     @pl.when(j == 0)
     def _init():
         out_ref[...] = partial
+        cnt_ref[...] = ncnt
 
     @pl.when(j != 0)
     def _acc():
@@ -132,6 +165,18 @@ def _agg_kernel(nbrs_ref, feat_ref, out_ref, *, op: str, n: int):
             out_ref[...] = jnp.maximum(out_ref[...], partial)
         else:
             out_ref[...] = out_ref[...] + partial
+        cnt_ref[...] = cnt_ref[...] + ncnt
+
+    if op == "max":
+        # isolated-vertex rows would otherwise return the -1e30 init
+        # sentinel; commit the defined empty-neighborhood identity (0)
+        @pl.when(j == n_dblocks - 1)
+        def _mask_empty():
+            out_ref[...] = jnp.where(
+                (cnt_ref[...] == 0)[:, None],
+                jnp.zeros_like(out_ref[...]),
+                out_ref[...],
+            )
 
 
 def ell_aggregate(
@@ -146,10 +191,16 @@ def ell_aggregate(
 
     nbrs:  [n, max_deg] int32 (pad = n)
     feats: [n, F] float
-    Returns [n, F] aggregated features (sum or max).
+    Returns [n, F] aggregated features (sum or max); rows with no valid
+    neighbors return 0 for both ops (the ``max`` identity is pinned to 0,
+    not the internal -1e30 init sentinel).
     """
     n, max_deg = nbrs.shape
     f = feats.shape[1]
+    if n == 0 or max_deg == 0:
+        # zero grid dimension = kernel never runs = uninitialized output;
+        # short-circuit to the empty-neighborhood aggregate
+        return jnp.zeros((n, f), feats.dtype)
     n_pad = -n % block_n
     d_pad = -max_deg % block_d
     nbrs_p = jnp.pad(nbrs, ((0, n_pad), (0, d_pad)), constant_values=n)
@@ -158,15 +209,21 @@ def ell_aggregate(
     )
     np_, dp_ = nbrs_p.shape
     grid = (np_ // block_n, dp_ // block_d)
-    out = pl.pallas_call(
-        functools.partial(_agg_kernel, op=op, n=n),
+    out, _ = pl.pallas_call(
+        functools.partial(_agg_kernel, op=op, n=n, n_dblocks=grid[1]),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_n, block_d), lambda i, j: (i, j)),
             pl.BlockSpec((n + 1, f), lambda i, j: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_n, f), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((np_, f), feats.dtype),
+        out_specs=[
+            pl.BlockSpec((block_n, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, f), feats.dtype),
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+        ],
         interpret=interpret,
     )(nbrs_p, feats_p)
     return out[:n]

@@ -409,6 +409,42 @@ def test_benchcheck_flags_incoherent_artifact(tmp_path):
     assert any("not a sparse-frontier row" in m for m in msgs)
 
 
+def test_benchcheck_launch_section(tmp_path):
+    """The v3 launch checks: a pallas round with no pallas_call (silent
+    fallback to the unfused path) and a pallas round that does not beat
+    lax's launch count are both incoherent; a genuinely-fused strictly
+    smaller section passes those checks."""
+    from repro.analysis.benchcheck import BENCH_SCHEMA
+
+    base = {
+        "schema": BENCH_SCHEMA,
+        "engines_agree": True,
+        "churn": {"engines_agree": True},
+        "pallas": {"batches_per_s": 3.0},
+    }
+    p = tmp_path / "bench.json"
+    p.write_text(json.dumps({**base, "launches_per_round": {
+        "lax": {"removal": {"gather": 2}, "promotion": {"gather": 4}},
+        "pallas": {"removal": {"gather": 2},          # no pallas_call
+                   "promotion": {"pallas_call": 1, "gather": 4}},
+    }}))
+    msgs = [f["message"] for f in check_bench(str(p))["findings"]]
+    assert any("traces no pallas_call" in m for m in msgs)
+    assert any("not strictly fewer" in m for m in msgs)
+
+    p.write_text(json.dumps({**base, "launches_per_round": {
+        "lax": {"removal": {"gather": 9}, "promotion": {"gather": 9}},
+        "pallas": {"removal": {"pallas_call": 1, "scatter": 2},
+                   "promotion": {"pallas_call": 3, "scatter": 2}},
+    }}))
+    msgs = [f["message"] for f in check_bench(str(p))["findings"]]
+    assert not any("pallas" in m and "launch" in m for m in msgs)
+
+    p.write_text(json.dumps(base))  # section absent entirely
+    msgs = [f["message"] for f in check_bench(str(p))["findings"]]
+    assert any("launches_per_round" in m for m in msgs)
+
+
 def test_benchcheck_missing_artifact_one_actionable_finding(tmp_path):
     """A missing BENCH_stream.json must produce ONE finding telling the
     user how to regenerate it — not a traceback, not a cascade of

@@ -1,7 +1,8 @@
 """Cross-engine churn harness: long balanced insert/remove/re-insert
 streams through EVERY engine configuration — host / unified / sharded,
 plus the sharded engine's range-sharded vertex layout, hierarchical
-free-list, and sparse frontier-exchange variants — pinned bit-identical
+free-list, and sparse frontier-exchange variants, and the fused Pallas
+stat-kernel backend on both device engines — pinned bit-identical
 to each other and to the sequential oracle. This is the differential
 lockdown of the in-program free-list slot recycler, the per-shard
 high-water window, and the vertex-layout layer (sparse frontier
@@ -62,6 +63,10 @@ CONFIGS = {
     "freelist_hier": dict(engine="sharded", freelist="hierarchical"),
     "frontier_sparse": dict(engine="sharded", vertex_sharding="range",
                             frontier_exchange="sparse"),
+    # the fused Pallas stat kernels (kernels/coremaint.py) — interpret
+    # mode off-TPU, so this runs (and must stay bit-identical) everywhere
+    "pallas": dict(engine="unified", kernel_backend="pallas"),
+    "pallas_sharded": dict(engine="sharded", kernel_backend="pallas"),
 }
 
 
@@ -138,7 +143,7 @@ def _run_churn_differential(m0, graph_seed, stream_seed, n_batches,
         # both free-list rankings allocate the identical live set (slot
         # POSITIONS may differ across shards; the keys may not)
         for e in ("sharded", "vertex_range", "freelist_hier",
-                  "frontier_sparse"):
+                  "frontier_sparse", "pallas_sharded"):
             assert ms[e].edge_slot.keys() == u.edge_slot.keys(), e
     # balanced stream + generous initial capacity: nothing may grow
     for e, m in ms.items():
@@ -463,6 +468,11 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
                                    vertex_sharding="range",
                                    frontier_exchange="sparse",
                                    frontier_cap=4)
+    # the fused Pallas stat kernels under a REAL 8-shard mesh (interpret
+    # mode off-TPU): local partials swap in, the collective schedule does
+    # not change, so cores AND labels must track the lax engines exactly
+    mp = CoreMaintainer.from_graph(g, capacity=645, engine="sharded",
+                                   kernel_backend="pallas")
     assert ms.capacity % 8 == 0, ms.capacity
     assert mv.core.shape == (88,)  # padded to the shard multiple
 
@@ -472,7 +482,7 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
     live = set(norm(g.edge_array()))
     events = list(churn_stream(g, 8, 24, seed=5))
     for ev in events[:6]:
-        for m in (ms, mu, mv, mh, mf):
+        for m in (ms, mu, mv, mh, mf, mp):
             m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
         for e in norm(ev.removals):
             live.discard(e)
@@ -488,6 +498,8 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
         np.testing.assert_array_equal(mu.labels(), mh.labels())
         np.testing.assert_array_equal(mu.cores(), mf.cores())
         np.testing.assert_array_equal(mu.labels(), mf.labels())
+        np.testing.assert_array_equal(mu.cores(), mp.cores())
+        np.testing.assert_array_equal(mu.labels(), mp.labels())
         # hierarchical ranks (shard, slot): slot POSITIONS may differ
         # from the interleaved engines, the LIVE SET may not
         assert mh.edge_slot.keys() == mu.edge_slot.keys()
@@ -514,7 +526,7 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
         tuple(e) for e in live
     }
     for ev in events[6:]:
-        for m in (ms, mu, mv, mh, mf, m2, m3, m4, m5):
+        for m in (ms, mu, mv, mh, mf, mp, m2, m3, m4, m5):
             m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
         for e in norm(ev.removals):
             live.discard(e)
@@ -525,7 +537,7 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
                                                    dtype=np.int64)))
     for name, m in (("sharded", ms), ("unified", mu),
                     ("vertex-range", mv), ("freelist-hier", mh),
-                    ("frontier-sparse", mf),
+                    ("frontier-sparse", mf), ("pallas-sharded", mp),
                     ("reload-sharded", m2), ("reload-unified", m3),
                     ("reload-vertex-range", m4), ("reload-vs-unified", m5)):
         np.testing.assert_array_equal(m.cores(), expect, err_msg=name)
