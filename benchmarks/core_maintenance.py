@@ -182,7 +182,7 @@ def fig7_stability(n_batches: int = 8, batch: int = 128) -> List[Row]:
 
 
 STREAM_ENGINES = ("host", "unified", "sharded", "vertex_sharded",
-                  "frontier_sparse", "pallas")
+                  "frontier_sparse", "vertex_halo", "pallas")
 
 # engine NAME -> CoreMaintainer kwargs (the bench rows are engine
 # configurations, not just engine strings, since PR 4's vertex layouts)
@@ -193,6 +193,9 @@ ENGINE_SPECS: Dict[str, Dict[str, str]] = {
     "vertex_sharded": {"engine": "sharded", "vertex_sharding": "range"},
     "frontier_sparse": {"engine": "sharded", "vertex_sharding": "range",
                         "frontier_exchange": "sparse"},
+    # the 2-axis halo working set (degenerate (1, d) mesh on the bench
+    # host; the mesh_scaling sweep times the proper factorizations)
+    "vertex_halo": {"engine": "sharded", "vertex_sharding": "halo"},
     "pallas": {"engine": "unified", "kernel_backend": "pallas"},
 }
 
@@ -247,6 +250,7 @@ def stream_bench(
     scaling_device_counts: Sequence[int] = (),
     vertex_scaling_device_counts: Sequence[int] = (),
     frontier_scaling_device_counts: Sequence[int] = (),
+    mesh_scaling_shapes: Sequence = (),
 ) -> Dict[str, object]:
     """Mixed insert+remove stream on the SAME events: the unified one-call
     engine (with both the lax and the fused-pallas kernel backends), the
@@ -273,12 +277,18 @@ def stream_bench(
     batch after a bucket crossing). The sharded engine always runs full
     capacity passes, so it never recompiles mid-stream.
     """
+    from repro.core.api import plan_frontier_cap
+    from repro.kernels.coremaint import default_interpret
+
     g = erdos_renyi(n, m, seed=12)
+    # one extra untimed batch beyond warmup: see the post-harvest step
+    # in the engine loop below
     events = list(
-        mixed_stream(g, n_batches + warmup, batch_size, seed=17)
+        mixed_stream(g, n_batches + warmup + 1, batch_size, seed=17)
     )
     per_engine: Dict[str, Dict[str, float]] = {}
     finals = {}
+    overflow_per_batch: Dict[str, List[int]] = {}
     for engine in engines:
         mt = CoreMaintainer.from_graph(g, capacity=4 * m,
                                        **ENGINE_SPECS[engine])
@@ -287,29 +297,49 @@ def stream_bench(
             if engine == "host":  # seed path: one program per edit kind
                 rm_st = mt.remove_edges(ev.removals)
                 in_st = mt.insert_edges(ev.edges)
-                return (rm_st.max_frontier, in_st.max_frontier)
+                return (rm_st, in_st)
             st = mt.apply_batch(insert_edges=ev.edges,
                                 remove_edges=ev.removals)
-            return (st.max_frontier,)
+            return (st,)
 
+        # per-batch stats (device scalars — appending is free; the int()
+        # reads happen after the timed region). max_frontier is the datum
+        # the sparse frontier_cap planner is tuned from (§4.3), and
+        # n_overflow counts the rounds that fell back dense — the warmup
+        # batches are kept too, as the planner's blind "before" phase.
+        all_stats = []
         for ev in events[:warmup]:  # compile both programs
-            step(ev)
+            all_stats.extend(step(ev))
         mt.core.block_until_ready()
-        # per-batch max observed frontier (device scalars — appending is
-        # free; the int() reads happen after the timed region). This is
-        # the datum the sparse frontier_cap planner is tuned from (§4.3).
-        frontier_vals = []
+        # one more untimed batch AFTER the sync: the warmup stats are now
+        # ready, so the adaptive planners (the sparse frontier cap tuned
+        # from observed max_frontier) pick their steady-state bucket here
+        # and its compile stays out of the timed region, exactly like the
+        # warmup compiles
+        all_stats.extend(step(events[warmup]))
+        mt.core.block_until_ready()
         t0 = time.perf_counter()
-        for ev in events[warmup:]:
-            frontier_vals.extend(step(ev))
+        for ev in events[warmup + 1:]:
+            all_stats.extend(step(ev))
         mt.core.block_until_ready()
         dt = time.perf_counter() - t0
         per_engine[engine] = {
             "seconds": dt,
             "batches_per_s": n_batches / dt,
             "edges_per_s": n_batches * batch_size / dt,
-            "max_frontier": max(int(v) for v in frontier_vals),
+            "max_frontier": max(int(s.max_frontier) for s in all_stats),
         }
+        # the host path's per-kind stats carry no overflow counter (no
+        # halo exchange there) — treat those as zero
+        overflow_per_batch[engine] = [
+            int(getattr(s, "n_overflow", 0)) for s in all_stats
+        ]
+        if ENGINE_SPECS[engine].get("kernel_backend") == "pallas":
+            # off-TPU the fused kernels run in pallas interpret mode, so
+            # this wall-clock row measures the interpreter, not the
+            # fusion: stamp it explicitly so the coherence gate can keep
+            # the launch-count claim while ignoring the timing
+            per_engine[engine]["interpret_mode"] = bool(default_interpret())
         finals[engine] = mt.cores()
     agree = all(
         bool((finals[e] == finals[engines[0]]).all()) for e in engines
@@ -336,6 +366,25 @@ def stream_bench(
     # sweep above was). The coherence gate requires the pallas rounds to
     # launch strictly fewer kernels than lax.
     result["launches_per_round"] = round_launch_counts(n, 4 * m)
+    # the frontier_cap=0 auto-planner before/after: the blind pow2 cap
+    # undershoots this stream's removal cascades (max_frontier ~2x the
+    # batch multiple), so the early batches pay the dense overflow
+    # fallback until the running p95 of the harvested max_frontier
+    # grows the cap — the second half of the stream must overflow less
+    if "frontier_sparse" in per_engine:
+        ovf = overflow_per_batch["frontier_sparse"]
+        half = len(ovf) // 2
+        observed = per_engine["frontier_sparse"]["max_frontier"]
+        result["frontier_autoplan"] = {
+            "engine": "frontier_sparse",
+            "frontier_cap": 0,  # 0 = auto-planned from observed stats
+            "blind_cap": plan_frontier_cap("sparse", 0, batch_size, n),
+            "tuned_cap": plan_frontier_cap("sparse", 0, batch_size, n,
+                                           observed=observed),
+            "overflow_rounds_before": sum(ovf[:half]),
+            "overflow_rounds_after": sum(ovf[half:]),
+            "overflow_rounds_per_batch": ovf,
+        }
     # write the artifact BEFORE the scaling subprocesses and BEFORE
     # asserting: on a divergence or a failed/timed-out scaling run the
     # JSON (with engines_agree and all per-engine timings) survives as
@@ -366,6 +415,12 @@ def stream_bench(
             vertex_sharding="range", frontier_exchange="sparse",
         )
         _write()
+    if mesh_scaling_shapes:
+        result["mesh_scaling"] = halo_mesh_scaling(
+            mesh_scaling_shapes, n=n, m=m,
+            n_batches=min(n_batches, 10), batch_size=batch_size,
+        )
+        _write()
     assert agree, "engines diverged on the same stream"
     return result
 
@@ -381,11 +436,15 @@ from repro.graph.stream import mixed_stream
 n, m, n_batches, batch_size, warmup = map(int, sys.argv[1:6])
 vertex_sharding = sys.argv[6]
 frontier_exchange = sys.argv[7]
+mesh_shape = None
+if len(sys.argv) > 8 and sys.argv[8]:
+    mesh_shape = tuple(int(t) for t in sys.argv[8].split("x"))
 g = erdos_renyi(n, m, seed=12)
 events = list(mixed_stream(g, n_batches + warmup, batch_size, seed=17))
+kw = {} if mesh_shape is None else {"mesh_shape": mesh_shape}
 mt = CoreMaintainer.from_graph(g, capacity=4 * m, engine="sharded",
                                vertex_sharding=vertex_sharding,
-                               frontier_exchange=frontier_exchange)
+                               frontier_exchange=frontier_exchange, **kw)
 for ev in events[:warmup]:
     mt.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
 mt.core.block_until_ready()
@@ -394,14 +453,17 @@ for ev in events[warmup:]:
     mt.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
 mt.core.block_until_ready()
 dt = time.perf_counter() - t0
-print(json.dumps({
+row = {
     "n_devices": len(jax.devices()),
     "vertex_sharding": vertex_sharding,
     "frontier_exchange": frontier_exchange,
     "n_batches": n_batches,
     "seconds": dt,
     "batches_per_s": n_batches / dt,
-}))
+}
+if mesh_shape is not None:
+    row["mesh_shape"] = list(mesh_shape)
+print(json.dumps(row))
 """
 
 
@@ -450,6 +512,53 @@ def sharded_device_scaling(
         if out.returncode != 0:
             raise RuntimeError(
                 f"scaling run with {ndev} devices failed:\n"
+                f"{out.stdout}\n{out.stderr}"
+            )
+        rows.append(json.loads(out.stdout.strip().splitlines()[-1]))
+    return rows
+
+
+def halo_mesh_scaling(
+    mesh_shapes: Sequence = ((1, 1), (2, 2), (4, 2), (2, 4)),
+    n: int = 1500,
+    m: int = 6000,
+    n_batches: int = 10,
+    batch_size: int = 128,
+    warmup: int = 3,
+) -> List[Dict[str, float]]:
+    """Time the halo engine across 2-axis (edge x vertex) mesh
+    factorizations of forced host devices (one subprocess per shape —
+    d_e * d_v devices each). The same wall-clock caveat as
+    ``sharded_device_scaling`` applies on this 1-core container; what
+    the sweep pins everywhere is the SHAPE axis the flat engines don't
+    have: at fixed device count, trading edge lanes (d_e) against
+    vertex owners (d_v) moves per-device memory O(n/d_v + halo) and the
+    halo exchange O(d_v * hcap) in opposite directions
+    (docs/DESIGN.md §4.4)."""
+    src_path = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    rows: List[Dict[str, float]] = []
+    for d_e, d_v in mesh_shapes:
+        ndev = d_e * d_v
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={ndev}"
+        ).strip()
+        env["PYTHONPATH"] = src_path + os.pathsep + env.get("PYTHONPATH", "")
+        out = subprocess.run(
+            [sys.executable, "-c", _SCALING_SCRIPT,
+             str(n), str(m), str(n_batches), str(batch_size), str(warmup),
+             "halo", "bitmask", f"{d_e}x{d_v}"],
+            capture_output=True,
+            text=True,
+            env=env,
+            timeout=900,
+        )
+        if out.returncode != 0:
+            raise RuntimeError(
+                f"mesh scaling run {d_e}x{d_v} failed:\n"
                 f"{out.stdout}\n{out.stderr}"
             )
         rows.append(json.loads(out.stdout.strip().splitlines()[-1]))

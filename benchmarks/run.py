@@ -95,22 +95,43 @@ def main() -> None:
         scaling_device_counts=() if args.quick else (1, 2, 4),
         vertex_scaling_device_counts=() if args.quick else (1, 2, 4),
         frontier_scaling_device_counts=() if args.quick else (1, 2, 4),
+        # 2-axis halo factorizations: degenerate, square, and both
+        # proper edge x vertex splits of 8 devices
+        mesh_scaling_shapes=(
+            () if args.quick else ((1, 1), (2, 2), (4, 2), (2, 4))
+        ),
     )
     for eng in cm.STREAM_ENGINES:
+        interp = (";interpret_mode=true"
+                  if sb[eng].get("interpret_mode") else "")
         _emit(
             f"stream/{eng}",
             1e6 * sb[eng]["seconds"] / sb["n_batches"],
-            f"batches_per_s={sb[eng]['batches_per_s']:.2f}",
+            f"batches_per_s={sb[eng]['batches_per_s']:.2f}{interp}",
         )
     _emit(
         "stream/speedup",
         0.0,
         f"unified_vs_host={sb['speedup_unified_vs_host']:.2f}x;"
         f"sharded_vs_host={sb['speedup_sharded_vs_host']:.2f}x;"
+        f"vertex_sharded_vs_host="
+        f"{sb['speedup_vertex_sharded_vs_host']:.2f}x;"
         f"frontier_sparse_vs_host="
         f"{sb['speedup_frontier_sparse_vs_host']:.2f}x;"
+        f"vertex_halo_vs_host={sb['speedup_vertex_halo_vs_host']:.2f}x;"
         f"agree={sb['engines_agree']}",
     )
+    fa = sb.get("frontier_autoplan")
+    if fa:
+        _emit(
+            "stream/frontier_autoplan",
+            0.0,
+            (
+                f"cap={fa['blind_cap']}->{fa['tuned_cap']};"
+                f"overflow_rounds={fa['overflow_rounds_before']}->"
+                f"{fa['overflow_rounds_after']}"
+            ),
+        )
     # static per-round kernel-launch counts (the fusion claim the
     # coherence gate enforces: pallas strictly below lax per round)
     lp = sb["launches_per_round"]
@@ -132,6 +153,13 @@ def main() -> None:
                 1e6 * row["seconds"] / row["n_batches"],
                 f"batches_per_s={row['batches_per_s']:.2f}",
             )
+    for row in sb.get("mesh_scaling", ()):
+        de, dv = row["mesh_shape"]
+        _emit(
+            f"stream/mesh_scaling/{de}x{dv}",
+            1e6 * row["seconds"] / row["n_batches"],
+            f"batches_per_s={row['batches_per_s']:.2f}",
+        )
 
     # steady-state churn on a tight table: in-program slot recycling
     # (device engines) vs host-side _compact reclaim (appends the

@@ -43,11 +43,18 @@ def main():
     )
     ap.add_argument(
         "--vertex-sharding", default="replicated",
-        choices=("replicated", "range"),
+        choices=("replicated", "range", "halo"),
         help="where the per-vertex state lives under --engine sharded: "
-             "replicated (one psum per statistic) or range (each device "
+             "replicated (one psum per statistic), range (each device "
              "owns a vertex range; reduce_scatter stats + bit-packed "
-             "frontier masks — docs/DESIGN.md §4.2)",
+             "frontier masks — docs/DESIGN.md §4.2), or halo (2-axis "
+             "mesh, owned range + static halo working set — §4.4)",
+    )
+    ap.add_argument(
+        "--mesh-shape", default=None, metavar="DExDV",
+        help="(d_e, d_v) factorization for --vertex-sharding halo, "
+             "e.g. 4x2; the product must cover all devices (defaults "
+             "to all devices on the edge axis)",
     )
     ap.add_argument(
         "--frontier-exchange", default="bitmask",
@@ -59,10 +66,23 @@ def main():
              "overflow — docs/DESIGN.md §4.3)",
     )
     args = ap.parse_args()
-    if args.vertex_sharding == "range" and args.engine != "sharded":
-        ap.error("--vertex-sharding range needs --engine sharded")
-    if args.frontier_exchange == "sparse" and args.vertex_sharding != "range":
-        ap.error("--frontier-exchange sparse needs --vertex-sharding range")
+    if args.vertex_sharding in ("range", "halo") and args.engine != "sharded":
+        ap.error(f"--vertex-sharding {args.vertex_sharding} needs "
+                 "--engine sharded")
+    if (args.frontier_exchange == "sparse"
+            and args.vertex_sharding not in ("range", "halo")):
+        ap.error("--frontier-exchange sparse needs --vertex-sharding "
+                 "range or halo")
+    mesh_shape = None
+    if args.mesh_shape:
+        import re
+        mm = re.fullmatch(r"(\d+)x(\d+)", args.mesh_shape)
+        if not mm:
+            ap.error(f"--mesh-shape must look like 4x2, got "
+                     f"{args.mesh_shape!r}")
+        mesh_shape = (int(mm.group(1)), int(mm.group(2)))
+        if args.vertex_sharding != "halo":
+            ap.error("--mesh-shape needs --vertex-sharding halo")
 
     g = erdos_renyi(args.n, args.m, seed=0)
     state_path = args.ckpt
@@ -72,6 +92,7 @@ def main():
     if os.path.exists(state_path) and os.path.exists(meta_path):
         m = CoreMaintainer.load(state_path, engine=args.engine,
                                 vertex_sharding=args.vertex_sharding,
+                                mesh_shape=mesh_shape,
                                 frontier_exchange=args.frontier_exchange)
         start_batch = int(open(meta_path).read().strip()) + 1
         print(f"[resume] restored checkpoint, continuing at batch "
@@ -80,6 +101,7 @@ def main():
         m = CoreMaintainer.from_graph(
             g, capacity=8 * args.m, engine=args.engine,
             vertex_sharding=args.vertex_sharding,
+            mesh_shape=mesh_shape,
             frontier_exchange=args.frontier_exchange,
         )
     if args.engine == "sharded":

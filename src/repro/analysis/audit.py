@@ -39,7 +39,7 @@ import sys
 from typing import Dict, List, Optional, Sequence
 
 SCHEMA = "repro.analysis/report/v1"
-BUDGET_SCHEMA = "repro.analysis/budget/v3"
+BUDGET_SCHEMA = "repro.analysis/budget/v4"
 BUDGET_DIR = os.path.join(os.path.dirname(__file__), "budgets")
 _CHILD_GUARD = "_REPRO_AUDIT_REEXEC"
 
@@ -98,29 +98,64 @@ def generate_budget(traced, paired=None) -> dict:
     bound computed at its 1-device maximum (the window lattice is
     largest when one shard holds the whole table), and the symbolic
     per-device memory section (``memory.generate_memory_section``;
-    ``paired`` is the same engine traced at a different mesh size, which
-    sharded engines need to disambiguate buffer-size formulas)."""
+    ``paired`` is the same engine traced at a different mesh size).
+
+    The paired trace disambiguates BOTH kinds of formulas: buffer
+    dimensions (memory section) and round payload sizes — the round
+    jaxprs are structurally identical at every mesh size (ring steps
+    are live-masked, not unrolled), so the collective sites zip
+    one-to-one and ``guess_formula`` can demand a candidate reproduce
+    both environments' byte counts (several candidates coincide at a
+    single audit point, e.g. ``hcap * 4 == d_v * cap * 8`` at
+    (d_e, d_v) = (4, 2))."""
     from ..core.api import bucket_lattice
+    from ..launch.mesh import EDGE_SHARD_AXIS
     from .memory import generate_memory_section
     from .rules import guess_formula, split_round_collectives
     from .walker import count_collectives, count_round_launches
 
     cfg = traced.config
     env = traced.sizes
+    if paired is None:
+        paired = []
+    elif not isinstance(paired, (list, tuple)):
+        paired = [paired]
+    # payload formulas pair against the most size-divergent point (the
+    # 1-device trace comes first from write_budgets)
+    pair0 = paired[0] if paired else None
     rounds = {}
     for rname, (_, closed) in traced.rounds.items():
-        main, overflow, stray = split_round_collectives(closed)
-        if stray:
+        sides = dict(zip(
+            ("setup", "main", "overflow", "stray"),
+            split_round_collectives(closed),
+        ))
+        if sides["stray"]:
             raise RuntimeError(
                 f"{cfg.name}/{rname}: cannot budget unattributable "
-                f"collectives {[c.op for c in stray]}"
+                f"collectives {[c.op for c in sides['stray']]}"
             )
+        psides: dict = {}
+        if pair0 is not None and rname in pair0.rounds:
+            pt = dict(zip(
+                ("setup", "main", "overflow", "stray"),
+                split_round_collectives(pair0.rounds[rname][1]),
+            ))
+            if not pt["stray"] and all(
+                len(pt[k]) == len(sides[k])
+                for k in ("setup", "main", "overflow")
+            ):
+                psides = pt
         rounds[rname] = {
             side: [
-                {"op": c.op, "recv_bytes": guess_formula(c.out_bytes, env)}
-                for c in cols
+                {"op": c.op, "recv_bytes": guess_formula(
+                    c.out_bytes, env,
+                    psides[side][i].out_bytes if psides else None,
+                    pair0.sizes if psides else None,
+                )}
+                for i, c in enumerate(cols)
             ]
-            for side, cols in (("main", main), ("overflow", overflow))
+            for side, cols in ((k, sides[k])
+                               for k in ("setup", "main", "overflow"))
         }
     if cfg.engine == "host":
         max_variants = max(1, traced.params.lanes).bit_length()
@@ -139,6 +174,10 @@ def generate_budget(traced, paired=None) -> dict:
             "capacity": traced.params.capacity,
             "lanes": traced.params.lanes,
             "devices": traced.n_devices,
+            "mesh_shape": (
+                [env["d_e"], env["d_v"]]
+                if cfg.vertex_sharding == "halo" else None
+            ),
         },
         "program_collectives": {
             p: count_collectives(jx) for p, jx in traced.programs.items()
@@ -151,7 +190,13 @@ def generate_budget(traced, paired=None) -> dict:
             rname: count_round_launches(closed)
             for rname, (_, closed) in traced.rounds.items()
         },
-        "forbid_round_vertex_psum": cfg.vertex_sharding == "range",
+        "forbid_round_vertex_psum": cfg.vertex_sharding in ("range", "halo"),
+        # pure-edge-axis statistic psums are budgeted traffic, not the
+        # forbidden vertex-axis reduction (their payload is the owned
+        # slice, n-sized only in the degenerate d_v=1 factorization)
+        "round_psum_axes_exempt": (
+            [EDGE_SHARD_AXIS] if cfg.vertex_sharding == "halo" else []
+        ),
         "donated_args": {
             p: list(traced.donated.get(p, ())) for p in traced.lowered
         },
@@ -167,20 +212,27 @@ def generate_budget(traced, paired=None) -> dict:
 def audit_engines(engines: Sequence[str],
                   budget_dir: Optional[str] = None,
                   params=None,
-                  rules: Optional[Sequence[str]] = None) -> dict:
+                  rules: Optional[Sequence[str]] = None,
+                  mesh_shape=None) -> dict:
     """Pytest-importable entry: trace + audit the given engine configs
     against their committed budgets, returning one report dict.
     ``rules`` restricts the run to a subset of the registry (the CLI's
-    ``--memory`` flag passes ``["memory_budget"]``)."""
+    ``--memory`` flag passes ``["memory_budget"]``). ``mesh_shape``
+    overrides the (d_e, d_v) factorization of halo configs only — CI
+    audits ``vertex_halo`` under both 4x2 and 2x4 against the one
+    committed manifest; other configs in the same run ignore it."""
     import jax
 
-    from .programs import AuditParams, trace_engine
+    from .programs import ENGINE_CONFIGS, AuditParams, trace_engine
     from .rules import run_rules
 
     params = params or AuditParams()
     checks: List[dict] = []
     for name in engines:
-        traced = trace_engine(name, params)
+        shape = (mesh_shape
+                 if ENGINE_CONFIGS[name].vertex_sharding == "halo"
+                 else None)
+        traced = trace_engine(name, params, mesh_shape=shape)
         budget = load_budget(name, budget_dir)
         for rname, findings in run_rules(traced, budget, rules).items():
             checks.append(make_check(rname, name, findings))
@@ -188,6 +240,7 @@ def audit_engines(engines: Sequence[str],
         checks,
         n_devices=len(jax.devices()),
         engines=list(engines),
+        mesh_shape=list(mesh_shape) if mesh_shape else None,
         params={"n": params.n, "capacity": params.capacity,
                 "lanes": params.lanes},
     )
@@ -208,9 +261,23 @@ def write_budgets(engines: Sequence[str],
         # one program regardless of mesh size, so the paired point
         # sequences line up and buffer-size formulas get solved against
         # two size environments at once (memory.generate_memory_section)
-        paired = (trace_engine(name, params, devices=1)
-                  if ENGINE_CONFIGS[name].is_sharded
-                  and traced.n_devices > 1 else None)
+        paired = []
+        if ENGINE_CONFIGS[name].is_sharded and traced.n_devices > 1:
+            paired.append(trace_engine(name, params, devices=1))
+            # halo configs add every other (d_e, d_v) factorization CI
+            # can audit at this device count: the 1-device pair can't
+            # separate d_v-only dependences (d_v == 1 collapses them),
+            # and the PEAK program point itself moves between
+            # factorizations — the committed max() must cover each
+            # point that is the peak somewhere
+            if ENGINE_CONFIGS[name].vertex_sharding == "halo":
+                d = traced.n_devices
+                canon = (traced.sizes["d_e"], traced.sizes["d_v"])
+                others = [(canon[1], canon[0]), (1, d), (d, 1)]
+                for shape in dict.fromkeys(others):
+                    if shape != canon and shape[0] * shape[1] == d:
+                        paired.append(trace_engine(name, params,
+                                                   mesh_shape=shape))
         path = budget_path(name, out_dir)
         with open(path, "w") as fh:
             json.dump(generate_budget(traced, paired), fh, indent=2,
@@ -280,6 +347,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--memory", action="store_true",
                    help="run only the memory_budget rule (symbolic "
                         "per-device peak / at-rest / donation audit)")
+    p.add_argument("--mesh-shape", default=None, metavar="DExDV",
+                   help="re-trace halo configs under this (d_e, d_v) "
+                        "factorization, e.g. 2x4 (non-halo configs "
+                        "ignore it; product must equal --devices)")
     p.add_argument("--write-budgets", action="store_true",
                    help="regenerate the budget manifests instead of "
                         "checking (run with --devices 8)")
@@ -326,9 +397,18 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             print(f"wrote {path}")
         return 0
 
+    mesh_shape = None
+    if args.mesh_shape:
+        m = re.fullmatch(r"(\d+)x(\d+)", args.mesh_shape)
+        if not m:
+            p.error(f"--mesh-shape must look like 4x2, got "
+                    f"{args.mesh_shape!r}")
+        mesh_shape = (int(m.group(1)), int(m.group(2)))
+
     report = audit_engines(
         engines, args.budget_dir,
         rules=["memory_budget"] if args.memory else None,
+        mesh_shape=mesh_shape,
     )
     if args.out:
         with open(args.out, "w") as fh:

@@ -14,10 +14,13 @@ from typing import List
 # stamped into BENCH_stream.json by benchmarks.core_maintenance; bumped
 # whenever the artifact gains fields the audit relies on (v2: per-engine
 # max_frontier observability; v3: the fused-pallas kernel-backend row
-# plus the static lax-vs-pallas ``launches_per_round`` section). An
-# artifact with an older/missing stamp predates the current manifests
-# and must be regenerated, not trusted.
-BENCH_SCHEMA = "repro.analysis/bench/v3"
+# plus the static lax-vs-pallas ``launches_per_round`` section; v4: the
+# 2-axis ``vertex_halo`` row + ``mesh_scaling`` factorization sweep, the
+# explicit ``interpret_mode`` stamp on pallas wall-clock rows, and the
+# ``frontier_autoplan`` before/after overflow section). An artifact with
+# an older/missing stamp predates the current manifests and must be
+# regenerated, not trusted.
+BENCH_SCHEMA = "repro.analysis/bench/v4"
 
 REGEN_HINT = (
     "regenerate with `PYTHONPATH=src python -m benchmarks.run` (no "
@@ -30,10 +33,26 @@ REGEN_HINT = (
 REQUIRED_KEYS = (
     "vertex_sharded",
     "frontier_sparse",
+    "vertex_halo",
     "pallas",
     "sharded_scaling",
     "vertex_scaling",
     "frontier_scaling",
+    "mesh_scaling",
+    "frontier_autoplan",
+)
+
+# engine rows whose wall-clock participates in speedup coherence; a row
+# stamped ``interpret_mode: true`` (the pallas backend off-TPU) is
+# excluded — its timing measures the interpreter, not the kernel — while
+# the launch-count coherence below still applies to it unconditionally
+SPEEDUP_ENGINES = (
+    "unified",
+    "sharded",
+    "vertex_sharded",
+    "frontier_sparse",
+    "vertex_halo",
+    "pallas",
 )
 
 
@@ -86,8 +105,55 @@ def check_bench(path: str) -> dict:
             findings.append(_finding(
                 "frontier_sparse.batches_per_s is not > 0"))
         pal = blob.get("pallas")
-        if isinstance(pal, dict) and not pal.get("batches_per_s", 0) > 0:
-            findings.append(_finding("pallas.batches_per_s is not > 0"))
+        if isinstance(pal, dict):
+            if not pal.get("batches_per_s", 0) > 0:
+                findings.append(_finding("pallas.batches_per_s is not > 0"))
+            if "interpret_mode" not in pal:
+                findings.append(_finding(
+                    "pallas row lacks the explicit interpret_mode stamp "
+                    "— without it the gate cannot tell a real-hardware "
+                    "timing from an interpreter timing; " + REGEN_HINT))
+        # speedup coherence: every timed device-engine row must beat the
+        # host baseline it was recorded against — EXCEPT rows stamped
+        # interpret_mode: true, whose wall-clock is the pallas
+        # interpreter's (the launch-count section below still covers the
+        # fusion claim for those)
+        for eng in SPEEDUP_ENGINES:
+            row = blob.get(eng)
+            if not isinstance(row, dict):
+                continue
+            if row.get("interpret_mode") is True:
+                continue
+            sp = blob.get(f"speedup_{eng}_vs_host")
+            if sp is None:
+                findings.append(_finding(
+                    f"missing speedup_{eng}_vs_host"))
+            elif not sp > 1.0:
+                findings.append(_finding(
+                    f"speedup_{eng}_vs_host is {sp:.2f}x — the "
+                    "device engine did not beat the host baseline"))
+        hl = blob.get("vertex_halo")
+        if isinstance(hl, dict) and not hl.get("batches_per_s", 0) > 0:
+            findings.append(_finding(
+                "vertex_halo.batches_per_s is not > 0"))
+        fa = blob.get("frontier_autoplan")
+        if isinstance(fa, dict):
+            before = fa.get("overflow_rounds_before")
+            after = fa.get("overflow_rounds_after")
+            if before is None or after is None:
+                findings.append(_finding(
+                    "frontier_autoplan lacks overflow_rounds_before/"
+                    "after"))
+            elif not (after < before or before == 0):
+                findings.append(_finding(
+                    f"frontier autoplan did not reduce overflow "
+                    f"fallbacks ({before} -> {after} rounds)"))
+            if (fa.get("tuned_cap") is not None
+                    and fa.get("blind_cap") is not None
+                    and fa["tuned_cap"] < fa["blind_cap"]):
+                findings.append(_finding(
+                    "frontier_autoplan tuned_cap shrank below the blind "
+                    "cap — the planner must grow monotonically"))
         # the launch-count section IS the fusion claim: each fixpoint
         # round must dispatch strictly fewer launch-class kernels under
         # the pallas backend than under lax, and the pallas round must
@@ -128,6 +194,18 @@ def check_bench(path: str) -> dict:
                 findings.append(_finding(
                     f"frontier_scaling[{i}] is not a sparse-frontier row "
                     f"(frontier_exchange={row.get('frontier_exchange')!r})"))
+        for i, row in enumerate(blob.get("mesh_scaling") or []):
+            shape = row.get("mesh_shape")
+            if (not isinstance(shape, list) or len(shape) != 2
+                    or row.get("n_devices") != shape[0] * shape[1]):
+                findings.append(_finding(
+                    f"mesh_scaling[{i}] lacks a mesh_shape [d_e, d_v] "
+                    f"factorizing its n_devices (got shape={shape!r}, "
+                    f"n_devices={row.get('n_devices')!r})"))
+            if row.get("vertex_sharding") != "halo":
+                findings.append(_finding(
+                    f"mesh_scaling[{i}] is not a halo row "
+                    f"(vertex_sharding={row.get('vertex_sharding')!r})"))
     return {
         "rule": "bench_coherence",
         "engine": "bench",

@@ -43,9 +43,14 @@ from typing import List, Optional, Sequence
 _CORE_DIR = os.path.normpath(os.path.join(
     os.path.dirname(__file__), os.pardir, "core"
 ))
+_LAUNCH_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), os.pardir, "launch"
+))
 API_PATH = os.path.join(_CORE_DIR, "api.py")
 ENGINE_PATH = os.path.join(_CORE_DIR, "engine.py")
 SHARDED_PATH = os.path.join(_CORE_DIR, "sharded.py")
+VERTEX_LAYOUT_PATH = os.path.join(_CORE_DIR, "vertex_layout.py")
+MESH_PATH = os.path.join(_LAUNCH_DIR, "mesh.py")
 
 # the per-batch edit path + every planning helper it calls; a sync in
 # any of these lands on the critical path of EVERY batch
@@ -73,6 +78,19 @@ LINT_TARGETS = {
         "batch_program", "apply_batch", "batch_dedup", "table_lookup",
     }),
     SHARDED_PATH: frozenset({"make_sharded_apply"}),
+    # the halo vertex-layout layer: every session method runs INSIDE the
+    # per-round shard_map body, so a host coercion there is a sync (or a
+    # tracer leak) replayed every fixpoint round
+    VERTEX_LAYOUT_PATH: frozenset({
+        "bind", "gather_values", "complete", "refresh_mask",
+        "refresh_values", "locate", "any_owned", "frontier_peak",
+        "add_at", "gather_state", "gather_mask", "own", "make_layout",
+    }),
+    # mesh constructors run at plan time on the batch critical path —
+    # they size axes from static config, never from device scalars
+    MESH_PATH: frozenset({
+        "make_edge_mesh", "make_edge_vertex_mesh", "make_mesh",
+    }),
 }
 
 # fields of CoreMaintainer that live on device mid-stream — forcing any
@@ -89,7 +107,15 @@ DEVICE_FIELDS = frozenset({
 DEVICE_PARAMS = frozenset({
     "src", "dst", "valid", "core", "label", "n_edges", "stats",
     "seed", "slots",
+    # vertex-layout session arguments (owned slices, frontier masks,
+    # the bound halo id vector) — device-resident inside shard_map
+    "owned", "owned_mask", "halo_ids", "core_own", "label_own",
 })
+
+# aval metadata readable without a device round trip: `x.shape[0]` on a
+# device param is static planning input, not a sync
+STATIC_META_ATTRS = frozenset({"shape", "dtype", "ndim", "size",
+                               "itemsize", "sharding"})
 
 SYNC_BUILTINS = frozenset({"int", "float", "bool"})
 SYNC_ATTR_CALLS = frozenset({
@@ -116,15 +142,16 @@ class LintFinding:
 
 
 def _touches_device_state(node: ast.AST) -> bool:
-    for sub in ast.walk(node):
-        if (isinstance(sub, ast.Attribute)
-                and isinstance(sub.value, ast.Name)
-                and sub.value.id == "self"
-                and sub.attr in DEVICE_FIELDS):
+    if isinstance(node, ast.Attribute):
+        if node.attr in STATIC_META_ATTRS:
+            return False  # aval metadata: no round trip under the read
+        if (isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+                and node.attr in DEVICE_FIELDS):
             return True
-        if isinstance(sub, ast.Name) and sub.id in DEVICE_PARAMS:
-            return True
-    return False
+    if isinstance(node, ast.Name) and node.id in DEVICE_PARAMS:
+        return True
+    return any(_touches_device_state(c) for c in ast.iter_child_nodes(node))
 
 
 def _lint_func(fn: ast.AST, lines: Sequence[str],

@@ -16,21 +16,24 @@ before the refactor exists:
 * symbolic formulas — the observed peak / per-round peak / at-rest
   byte counts are re-expressed as closed forms in the audit size names
   (n, d, cap, window, local_cap, …), like the collective budgets'
-  ``recv_bytes`` formulas. A single trace cannot disambiguate them (at
-  the audit point n_owned == lanes == d == 8), so sharded engines are
-  traced TWICE — at the current mesh size and at an explicit 1-device
-  mesh (``trace_engine(..., devices=1)``): shard_map traces one program
+  ``recv_bytes`` formulas. A single trace cannot disambiguate them, so
+  sharded engines are traced at SEVERAL mesh points — the current mesh
+  plus an explicit 1-device mesh (``trace_engine(..., devices=1)``),
+  and, for the 2-axis halo engine, every other (d_e, d_v)
+  factorization of the device count: shard_map traces one program
   regardless of mesh size, so the paired point sequences are identical
-  and every buffer dimension is solved against two distinct size
-  environments at once.
+  and every buffer dimension is solved against all size environments
+  at once (the extra factorizations pin d_v-only dependences and the
+  peak program point, both invisible to a d-only pair).
 * the sharding-propagation rule — any vertex-sized O(n) buffer live
   REPLICATED inside a shard_map body (a 1-D ``all_gather`` output with
   >= n elements: tiled gathers that materialize full vertex-indexed
   arrays; the 2-D ``[d, ...]`` gathers keep their shard dimension and
-  are bounded exchange buffers). Today this fires exactly twice per
-  range engine — the entry core/label gather in ``core/sharded.py`` —
-  committed as an explicit waiver (``ENTRY_GATHER_WAIVER``) that the
-  halo refactor must delete.
+  are bounded exchange buffers). The halo refactor deleted the one
+  violation this ever flagged — the per-batch entry core/label gather
+  of the PR-7 range engine and its one-entry waiver list — so
+  every range/halo engine now passes the rule UNWAIVED and the
+  manifests carry an empty waiver list that CI keeps empty.
 
 Everything is static: no program executes; all byte counts come from
 equation avals, and ``tests/test_memory_audit.py`` cross-checks the
@@ -43,7 +46,6 @@ import dataclasses
 import itertools
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
-from ..core.sharded import ENTRY_GATHER_WAIVER
 from .rules import Finding, eval_formula, rule
 from .walker import ROUND_TAG, iter_sites
 
@@ -59,23 +61,29 @@ STATE_ARGS: Dict[str, Tuple[Tuple[str, int], ...]] = {
 }
 
 # per-dimension candidate formulas, most-specific first: a dimension is
-# committed as the FIRST candidate matching its value in BOTH paired
-# size environments, so a d=8/d=1 pair pins e.g. 64 to "n" (not
-# "n_owned", which is 8 on the 8-device side). A dimension equal in
-# both environments with no matching candidate folds into the literal
-# coefficient (constant across device counts by construction).
+# committed as the FIRST candidate matching its value in EVERY paired
+# size environment, so a d=8/d=1 pair pins e.g. 192 to "n" (not
+# "n_owned", which is 24 on the 8-device side). A dimension equal in
+# all environments with no matching candidate folds into the literal
+# coefficient (constant across mesh points by construction).
 DIM_CANDIDATES = (
     "n + 2",
     "cap + 1",
     "local_cap - window",
     "2 * local_cap",
+    "d_e * local_cap",
     "local_cap",
+    "d_v * hcap",
+    "hcap",
+    "max(d_v - 1, 1)",
     "window",
     "cap",
     "n",
     "n_owned",
     "lanes",
     "d",
+    "d_e",
+    "d_v",
     "ceil_div(n_owned, 8)",
     "ceil_div(n, 8)",
     "n_owned * d",
@@ -374,52 +382,71 @@ def profile_program(closed, donated: Sequence[int] = (),
 
 # -- symbolic formulas over paired traces ---------------------------------
 
-def _dim_formula(a: int, b: int, env_a: Dict[str, int],
-                 env_b: Dict[str, int]) -> Optional[str]:
-    """The first candidate matching dimension value ``a`` in env_a AND
-    ``b`` in env_b; None folds an env-constant dimension into the
-    coefficient; a device-varying dimension with no candidate raises."""
-    if a == b == 1:
+def _dim_formula(values: Sequence[int],
+                 envs: Sequence[Dict[str, int]]) -> Optional[str]:
+    """The first candidate matching the dimension's value in EVERY
+    paired environment; None folds an env-constant dimension into the
+    coefficient; a device-varying dimension with no candidate raises.
+
+    More environments make the solve stricter, and the 2-axis layouts
+    need that: at the canonical (d_e, d_v) = (4, 2) point AND the
+    1-device pair, ``max(d_v - 1, 1)`` (the ring scan's step count)
+    evaluates to 1 — indistinguishable from a unit dim — so a third
+    trace under the transposed factorization is what pins every
+    d_v-only dependence."""
+    if all(v == 1 for v in values):
         # unit dims (squeezes, keepdims) are structure, not size — a
         # symbolic match ("cap + 1" at cap=0) would claim a dependence
         # the buffer doesn't have
         return None
     for cand in DIM_CANDIDATES:
-        if (eval_formula(cand, env_a) == a
-                and eval_formula(cand, env_b) == b):
+        try:
+            ok = all(eval_formula(cand, e) == v
+                     for v, e in zip(values, envs))
+        except ValueError:
+            continue  # candidate names a size this env does not carry
+        if ok:
             return cand
-    if a == b:
+    if len(set(values)) == 1:
         return None
+    points = ", ".join(
+        f"{v} @ d={e.get('d', '?')} "
+        f"({e.get('d_e', '?')}x{e.get('d_v', '?')})"
+        for v, e in zip(values, envs)
+    )
     raise RuntimeError(
-        f"cannot express buffer dimension ({a} @ {env_a['d']} devices, "
-        f"{b} @ {env_b['d']} devices) with any DIM_CANDIDATES entry — "
-        "add a candidate to repro.analysis.memory"
+        f"cannot express buffer dimension ({points}) with any "
+        "DIM_CANDIDATES entry — add a candidate to "
+        "repro.analysis.memory"
     )
 
 
-def _point_formula(avals_a: Sequence[Any], avals_b: Sequence[Any],
-                   env_a: Dict[str, int], env_b: Dict[str, int]) -> str:
+def _point_formula(avals_lists: Sequence[Sequence[Any]],
+                   envs: Sequence[Dict[str, int]]) -> str:
     """Closed form of one program point's live bytes, from the paired
-    live-aval lists (identical allocation order by construction)."""
-    if len(avals_a) != len(avals_b):
+    live-aval lists (identical allocation order by construction; one
+    list per traced environment)."""
+    if len({len(a) for a in avals_lists}) != 1:
         raise RuntimeError(
-            f"paired traces disagree on the live set: {len(avals_a)} "
-            f"vs {len(avals_b)} buffers — the program is not "
-            "mesh-size-independent"
+            f"paired traces disagree on the live set: "
+            f"{[len(a) for a in avals_lists]} buffers — the program is "
+            "not mesh-size-independent"
         )
     terms: Dict[Tuple[str, ...], int] = {}
-    for aa, ab in zip(avals_a, avals_b):
-        if len(aa.shape) != len(ab.shape) or aa.dtype != ab.dtype:
+    for bufs in zip(*avals_lists):
+        a0 = bufs[0]
+        if any(len(b.shape) != len(a0.shape) or b.dtype != a0.dtype
+               for b in bufs[1:]):
             raise RuntimeError(
-                f"paired live buffers disagree in rank/dtype: "
-                f"{aa.dtype}{list(aa.shape)} vs {ab.dtype}{list(ab.shape)}"
+                "paired live buffers disagree in rank/dtype: "
+                + " vs ".join(f"{b.dtype}{list(b.shape)}" for b in bufs)
             )
-        coeff = aa.dtype.itemsize
+        coeff = a0.dtype.itemsize
         factors: List[str] = []
-        for da, db in zip(aa.shape, ab.shape):
-            f = _dim_formula(int(da), int(db), env_a, env_b)
+        for dims in zip(*(b.shape for b in bufs)):
+            f = _dim_formula([int(x) for x in dims], envs)
             if f is None:
-                coeff *= int(da)
+                coeff *= int(dims[0])
             else:
                 factors.append(f)
         key = tuple(sorted(factors))
@@ -442,10 +469,10 @@ def _verified(formula: str, envs_and_values) -> str:
     return formula
 
 
-def _aval_formula(aval_a, aval_b, env_a, env_b) -> str:
+def _aval_formula(avals, envs) -> str:
     return _verified(
-        _point_formula([aval_a], [aval_b], env_a, env_b),
-        [(env_a, _aval_bytes(aval_a)), (env_b, _aval_bytes(aval_b))],
+        _point_formula([[a] for a in avals], envs),
+        [(e, _aval_bytes(a)) for e, a in zip(envs, avals)],
     )
 
 
@@ -476,99 +503,112 @@ def replicated_vertex_sites(closed, n: int) -> List[Tuple[Any, int]]:
 def generate_memory_section(traced, paired=None) -> dict:
     """The budget manifest's ``memory`` section for one traced engine.
 
-    ``paired`` is the same engine traced at a different mesh size
-    (``trace_engine(name, params, devices=1)``) — required to
-    disambiguate size formulas for sharded engines; without it every
-    dimension is solved against one environment only and the committed
-    formula is valid only on the generating device count (the audit CLI
-    warns about exactly this for ``--write-budgets`` at 1 device).
+    ``paired`` is the same engine traced at one or more OTHER mesh
+    points (a single trace or a sequence) — required to disambiguate
+    size formulas for sharded engines; without it every dimension is
+    solved against one environment only and the committed formula is
+    valid only on the generating device count (the audit CLI warns
+    about exactly this for ``--write-budgets`` at 1 device). Halo
+    engines pair against BOTH the 1-device trace and the transposed
+    8-device factorization: the first varies d, the second varies
+    (d_e, d_v) at fixed d, and only together do they pin formulas like
+    the ring scan's ``max(d_v - 1, 1)`` step count (equal to 1 at both
+    the canonical and the 1-device point).
     """
-    paired = paired or traced
-    env_a, env_b = traced.sizes, paired.sizes
+    if paired is None:
+        paireds = []
+    elif isinstance(paired, (list, tuple)):
+        paireds = list(paired)
+    else:
+        paireds = [paired]
+    traces = [traced] + paireds
+    envs = [t.sizes for t in traces]
+    env_a = traced.sizes
     cfg = traced.config
     programs: Dict[str, dict] = {}
-    waivers: List[dict] = []
-    forbid = cfg.vertex_sharding == "range"
+    # every halo-sharded engine ("range" is the edge_axes=() degenerate)
+    # must pass the replicated-buffer rule UNWAIVED: the entry state
+    # gather this rule was born flagging no longer exists
+    forbid = cfg.vertex_sharding in ("range", "halo")
 
     for prog, closed in traced.programs.items():
         donated = traced.donated.get(prog, ())
-        prof_a = profile_program(closed, donated)
-        prof_b = profile_program(paired.programs[prog], donated)
-        if len(prof_a.point_bytes) != len(prof_b.point_bytes):
+        profs = [profile_program(t.programs[prog], donated)
+                 for t in traces]
+        if len({len(p.point_bytes) for p in profs}) != 1:
             raise RuntimeError(
                 f"{cfg.name}/{prog}: paired traces walk "
-                f"{len(prof_a.point_bytes)} vs {len(prof_b.point_bytes)} "
+                f"{[len(p.point_bytes) for p in profs]} "
                 "program points — cannot pair buffer dimensions"
             )
-        idx = {prof_a.peak_index, prof_b.peak_index}
-        ra, rb = prof_a.round_peak_index(), prof_b.round_peak_index()
-        ridx = {i for i in (ra, rb) if i is not None}
-        cap_a = profile_program(closed, donated, capture=idx | ridx)
-        cap_b = profile_program(paired.programs[prog], donated,
+        idx = {p.peak_index for p in profs}
+        rids = [p.round_peak_index() for p in profs]
+        ridx = {i for i in rids if i is not None}
+        caps = [profile_program(t.programs[prog], donated,
                                 capture=idx | ridx)
+                for t in traces]
 
         def point_form(i: int) -> str:
             return _verified(
-                _point_formula(cap_a.captured[i], cap_b.captured[i],
-                               env_a, env_b),
-                [(env_a, prof_a.point_bytes[i]),
-                 (env_b, prof_b.point_bytes[i])],
+                _point_formula([c.captured[i] for c in caps], envs),
+                [(e, p.point_bytes[i]) for e, p in zip(envs, profs)],
             )
 
-        def peak_form(ia: int, ib: int, pa: int, pb: int) -> str:
-            if ia == ib:
-                return point_form(ia)
-            fa, fb = point_form(ia), point_form(ib)
-            return _verified(f"max({fa}, {fb})",
-                             [(env_a, pa), (env_b, pb)])
+        def peak_form(indices, peaks) -> str:
+            uniq = sorted(set(indices))
+            if len(uniq) == 1:
+                return point_form(uniq[0])
+            forms = [point_form(i) for i in uniq]
+            return _verified("max(" + ", ".join(forms) + ")",
+                             list(zip(envs, peaks)))
 
-        body_a, amap_a = _body_and_map(closed)
-        body_b, amap_b = _body_and_map(paired.programs[prog])
+        bodies = [_body_and_map(t.programs[prog]) for t in traces]
         at_rest = [
-            [name, _aval_formula(body_a.invars[amap_a[pos]].aval,
-                                 body_b.invars[amap_b[pos]].aval,
-                                 env_a, env_b)]
+            [name, _aval_formula(
+                [b.invars[m[pos]].aval for b, m in bodies], envs)]
             for name, pos in STATE_ARGS.get(prog, ())
             # seeded test programs reuse engine program names with fewer
             # args — budget only the positions that exist
-            if pos in amap_a and pos in amap_b
+            if all(pos in m for _, m in bodies)
         ]
-        dav_a = [body_a.invars[amap_a[i]].aval for i in donated]
-        dav_b = [body_b.invars[amap_b[i]].aval for i in donated]
+        davs = [[b.invars[m[i]].aval for i in donated]
+                for b, m in bodies]
         donated_form = (
             "0" if not donated else _verified(
-                _point_formula(dav_a, dav_b, env_a, env_b),
-                [(env_a, sum(map(_aval_bytes, dav_a))),
-                 (env_b, sum(map(_aval_bytes, dav_b)))],
+                _point_formula(davs, envs),
+                [(e, sum(map(_aval_bytes, dv)))
+                 for e, dv in zip(envs, davs)],
             )
         )
         programs[prog] = {
             "at_rest": at_rest,
-            "peak": peak_form(prof_a.peak_index, prof_b.peak_index,
-                              prof_a.peak, prof_b.peak),
+            "peak": peak_form([p.peak_index for p in profs],
+                              [p.peak for p in profs]),
             "round_peak": (
-                peak_form(ra, rb, prof_a.round_peak, prof_b.round_peak)
-                if ra is not None and rb is not None else "0"
+                peak_form(rids, [p.round_peak for p in profs])
+                if all(r is not None for r in rids) else "0"
             ),
             "donated": donated_form,
         }
         if forbid:
-            groups: Dict[bool, int] = {}
-            for s, _ in replicated_vertex_sites(closed, env_a["n"]):
-                groups[s.in_round] = groups.get(s.in_round, 0) + 1
-            for in_round, count in sorted(groups.items()):
-                waivers.append({
-                    "program": prog,
-                    "op": "all_gather",
-                    "in_round": in_round,
-                    "count": count,
-                    "reason": ENTRY_GATHER_WAIVER,
-                })
+            offenders = replicated_vertex_sites(closed, env_a["n"])
+            if offenders:
+                sites = ", ".join(
+                    f"{'/'.join(s.path) or '<top>'} ({elems} elems)"
+                    for s, elems in offenders
+                )
+                raise RuntimeError(
+                    f"{cfg.name}/{prog}: {len(offenders)} replicated "
+                    f"O(n) all_gather site(s) in the shard_map body "
+                    f"[{sites}] — the halo refactor deleted the entry "
+                    "gather and with it the waiver mechanism; "
+                    "vertex-sized state must stay owned slices"
+                )
     return {
         "programs": programs,
         "forbid_replicated_vertex_buffers": forbid,
         "require_state_donated": cfg.engine != "host",
-        "waivers": waivers,
+        "waivers": [],
     }
 
 

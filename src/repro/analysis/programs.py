@@ -6,13 +6,20 @@ sparse exchange, donated batch buffers, a bounded jit-variant lattice).
 This module produces the artifacts the audit rules inspect, without
 executing a single batch:
 
-* ``ENGINE_CONFIGS`` — the six bit-identical engine configurations
-  (host / unified / sharded / vertex_range / frontier_sparse / pallas),
-  exactly the matrix ``tests/test_churn_streams.py`` proves equivalent.
-  The ``pallas`` config is the sharded engine with the fused COO stat
-  kernels (kernels/coremaint.py): the fusion swaps only LOCAL partials,
-  so its collective histogram and memory budgets must EQUAL the lax
-  sharded config's — an equality the audit enforces, not assumes;
+* ``ENGINE_CONFIGS`` — the seven bit-identical engine configurations
+  (host / unified / sharded / vertex_range / frontier_sparse /
+  vertex_halo / pallas), exactly the matrix
+  ``tests/test_churn_streams.py`` proves equivalent. The ``pallas``
+  config is the sharded engine with the fused COO stat kernels
+  (kernels/coremaint.py): the fusion swaps only LOCAL partials, so its
+  collective histogram and memory budgets must EQUAL the lax sharded
+  config's — an equality the audit enforces, not assumes. The
+  ``vertex_halo`` config runs the halo working set on a genuine 2-axis
+  edge x vertex mesh (``mesh_shape=(d_e, d_v)``,
+  ``launch/mesh.py::make_edge_vertex_mesh``) — its manifest carries the
+  §4.4 two-axis traffic/memory formulas in d_e/d_v/hcap, and the audit
+  re-traces it under BOTH 8-device factorizations (4x2 and 2x4) against
+  the one committed manifest;
 * ``trace_removal_round`` / ``trace_promotion_round`` — shard_map-trace
   ONE fixpoint under a vertex layout, returning both the trace-time
   traffic log (``record_traffic``) and the closed jaxpr: a
@@ -24,11 +31,15 @@ executing a single batch:
   traces, the planned (window, frontier-cap) buckets, and the size
   environment budget formulas evaluate in.
 
-Audit parameters are fixed and small (n=64, capacity=256, 8 batch
+Audit parameters are fixed and small (n=192, capacity=384, 8 batch
 lanes): collective COUNTS are device-count independent (shard_map
 traces one program regardless of mesh size) and every SIZE is checked
-against a closed-form formula in (n, d, cap, ...), so the same
-committed manifest gates 1-device and 8-device CI runs.
+against a closed-form formula in (n, d, d_e, d_v, cap, hcap, ...), so
+the same committed manifest gates 1-device and 8-device CI runs in
+every mesh factorization. ``n`` is deliberately NOT a power of two:
+the static halo capacity is (n=192, window=16, lanes=8 -> hcap=64),
+and a pow2 ``n`` could collide with it, letting a halo buffer
+dimension masquerade as a vertex-sized one in the solved formulas.
 """
 from __future__ import annotations
 
@@ -41,11 +52,19 @@ from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
 from ..core.api import plan_frontier_cap, plan_window
-from ..core.engine import DONATED_STATE_ARGS, apply_batch
-from ..core.insert import insert_batch, promotion_fixpoint
-from ..core.remove import remove_batch, removal_fixpoint
+from ..core.engine import (
+    DONATED_STATE_ARGS,
+    apply_batch,
+    build_halo_ids,
+    halo_cap_for,
+)
+from ..core.insert import insert_batch, promotion_fixpoint, \
+    promotion_fixpoint_halo
+from ..core.remove import remove_batch, removal_fixpoint, \
+    removal_fixpoint_halo
 from ..core.sharded import make_sharded_apply
 from ..core.vertex_layout import Traffic, make_layout, record_traffic
+from ..launch.mesh import EDGE_SHARD_AXIS, make_edge_vertex_mesh
 
 EDGE_AXIS = "data"
 
@@ -61,6 +80,10 @@ class EngineConfig:
     frontier_cap: int = 0             # pinned sparse cap (sparse only)
     freelist: str = "interleaved"
     kernel_backend: str = "lax"       # "lax" | "pallas" stat kernels
+    # canonical (d_e, d_v) factorization for vertex_sharding="halo";
+    # the audit CLI's --mesh-shape re-traces the same config (and the
+    # same committed manifest) under other factorizations
+    mesh_shape: Optional[Tuple[int, int]] = None
 
     @property
     def is_sharded(self) -> bool:
@@ -78,6 +101,11 @@ ENGINE_CONFIGS: Dict[str, EngineConfig] = {
             "frontier_sparse", "sharded", vertex_sharding="range",
             frontier_exchange="sparse", frontier_cap=16,
         ),
+        EngineConfig(
+            "vertex_halo", "sharded", vertex_sharding="halo",
+            frontier_exchange="sparse", frontier_cap=16,
+            mesh_shape=(4, 2),
+        ),
         EngineConfig("pallas", "sharded", kernel_backend="pallas"),
     )
 }
@@ -86,11 +114,16 @@ ENGINE_CONFIGS: Dict[str, EngineConfig] = {
 @dataclasses.dataclass(frozen=True)
 class AuditParams:
     """Fixed trace-time sizes. ``n`` and ``capacity`` must be divisible
-    by every audited device count (1 and 8 in CI) so the range layout
-    pads nothing and the formulas stay exact."""
+    by every audited device count (1 and 8 in CI, in every mesh
+    factorization) so the range/halo layouts pad nothing and the
+    formulas stay exact. ``n`` is NOT a power of two on purpose — the
+    pow2 halo capacity (hcap=64 at these parameters) must never equal
+    ``n`` or ``n_owned`` in either paired trace environment, or the
+    memory formula solver could mislabel a halo buffer as vertex-sized
+    (see the module docstring)."""
 
-    n: int = 64
-    capacity: int = 256
+    n: int = 192
+    capacity: int = 384
     lanes: int = 8  # padded batch lanes (both insert and remove lists)
 
     @property
@@ -98,9 +131,37 @@ class AuditParams:
         return self.n + 2
 
 
+def resolve_mesh(cfg: EngineConfig, d: int,
+                 mesh_shape: Optional[Tuple[int, int]] = None):
+    """The mesh one engine config is traced on at ``d`` devices.
+
+    Non-halo sharded configs get the classic 1-D edge mesh. Halo
+    configs get the 2-axis ``make_edge_vertex_mesh``: an explicit
+    ``mesh_shape`` (the audit CLI's --mesh-shape) wins, else the
+    config's canonical factorization, else ``(1, d)``; a 1-device trace
+    (the paired memory trace) degenerates to ``(1, 1)``."""
+    if cfg.vertex_sharding != "halo":
+        if mesh_shape is not None:
+            raise ValueError(
+                f"mesh_shape={mesh_shape} applies only to "
+                "vertex_sharding='halo' configs (the 1-axis engines "
+                "trace on the shared edge/owner axis)"
+            )
+        return jax.make_mesh((d,), (EDGE_AXIS,))
+    shape = mesh_shape or cfg.mesh_shape or (1, d)
+    if shape[0] * shape[1] != d and mesh_shape is None:
+        # the canonical factorization targets the CI device count; any
+        # other count (the paired 1-device memory trace, a local run)
+        # falls back to a pure owner-axis column of the same size
+        shape = (1, d)
+    return make_edge_vertex_mesh(d, tuple(shape), axis=EDGE_AXIS,
+                                 edge_axis=EDGE_SHARD_AXIS)
+
+
 def trace_removal_round(
     vertex_sharding: str, n: int, cap: int, mesh,
     frontier_cap: Optional[int] = None,
+    window: Optional[int] = None, lanes: int = 8,
     kernel_backend: str = "lax",
 ) -> Tuple[List[Traffic], Any]:
     """Trace (not run) the removal fixpoint under shard_map.
@@ -110,15 +171,61 @@ def trace_removal_round(
     ``walker.primitive_names`` / ``walker.collectives``). This is the
     one source of truth behind the traffic assertions in
     ``tests/test_vertex_layout.py`` and the audit's round budgets.
+
+    ``window`` mirrors the engine's per-shard active window: the engine
+    slices slots to the planned window BEFORE binding the halo session,
+    so the traced halo capacity (and with it every halo-sized recv)
+    matches the committed budget only if the round trace windows the
+    same way. ``None`` keeps the whole local shard (replicated traces,
+    standalone use).
     """
     axis = EDGE_AXIS
+    all_axes = tuple(mesh.axis_names)
+    edge_axes = tuple(a for a in all_axes if a != axis)
     n_shards = dict(mesh.shape)[axis]
-    layout = (
-        make_layout("range", n, axis, n_shards, frontier_cap)
-        if vertex_sharding == "range"
-        else make_layout("replicated", n, axis)
-    )
-    stat_spec = P(axis) if vertex_sharding == "range" else P()
+    espec = P(all_axes if len(all_axes) > 1 else axis)
+    if vertex_sharding in ("range", "halo"):
+        layout = make_layout(vertex_sharding, n, axis, n_shards,
+                             frontier_cap, edge_axes)
+        n_pad = layout.n_pad
+
+        def kernel(src, dst, valid, core, label, ru, rv):
+            w = src.shape[0] if window is None else window
+            src_w, dst_w, valid_w = src[:w], dst[:w], valid[:w]
+            # lane ids fed twice (insert + remove lists) so the traced
+            # halo capacity equals the engine's 2*lanes lanes_total
+            halo_ids = build_halo_ids(layout, src_w, dst_w,
+                                      ru, rv, ru, rv, n)
+            session = layout.bind(halo_ids)
+            core_h = session.gather_values(core)
+            label_h = session.gather_values(label)
+            src_h = session.locate(src_w)
+            dst_h = session.locate(dst_w)
+            return removal_fixpoint_halo(
+                src_h, dst_h, valid_w, core, label, core_h, label_h,
+                session, n + 2, kernel_backend=kernel_backend,
+            )
+
+        sm = shard_map(
+            kernel, mesh=mesh,
+            in_specs=(espec, espec, espec, P(axis), P(axis), P(), P()),
+            out_specs=(P(axis), P(axis), P(), P(), P(),
+                       P(axis), P(axis), P(), P()),
+            check_vma=False,
+        )
+        src = jnp.zeros(cap, jnp.int32)
+        dst = jnp.ones(cap, jnp.int32)
+        valid = jnp.zeros(cap, bool)
+        core = jnp.zeros(n_pad, jnp.int32)
+        label = jnp.zeros(n_pad, jnp.int64)
+        ru = jnp.zeros(lanes, jnp.int32)
+        rv = jnp.ones(lanes, jnp.int32)
+        with record_traffic() as log:
+            jaxpr = jax.make_jaxpr(sm)(src, dst, valid, core, label,
+                                       ru, rv)
+        return log, jaxpr
+
+    layout = make_layout("replicated", n, axis)
 
     def kernel(src, dst, valid, core, label):
         return removal_fixpoint(src, dst, valid, core, label, n, n + 2,
@@ -128,7 +235,7 @@ def trace_removal_round(
     sm = shard_map(
         kernel, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(), P()),
-        out_specs=(P(), P(), P(), stat_spec, stat_spec, P()),
+        out_specs=(P(), P(), P(), P(), P(), P()),
         check_vma=False,
     )
     src = jnp.zeros(cap, jnp.int32)
@@ -144,6 +251,7 @@ def trace_removal_round(
 def trace_promotion_round(
     vertex_sharding: str, n: int, cap: int, mesh,
     frontier_cap: Optional[int] = None, lanes: int = 8,
+    window: Optional[int] = None,
     kernel_backend: str = "lax",
 ) -> Tuple[List[Traffic], Any]:
     """Trace the promotion fixpoint under shard_map — the insertion-side
@@ -151,14 +259,57 @@ def trace_promotion_round(
     records cover one outer round (seed + forward waves + evictions +
     the next-round statistics pass)."""
     axis = EDGE_AXIS
+    all_axes = tuple(mesh.axis_names)
+    edge_axes = tuple(a for a in all_axes if a != axis)
     n_shards = dict(mesh.shape)[axis]
-    layout = (
-        make_layout("range", n, axis, n_shards, frontier_cap)
-        if vertex_sharding == "range"
-        else make_layout("replicated", n, axis)
-    )
-    stat_spec = P(axis) if vertex_sharding == "range" else P()
-    n_stat = layout.n_pad if vertex_sharding == "range" else n
+    espec = P(all_axes if len(all_axes) > 1 else axis)
+    if vertex_sharding in ("range", "halo"):
+        layout = make_layout(vertex_sharding, n, axis, n_shards,
+                             frontier_cap, edge_axes)
+        n_pad = layout.n_pad
+
+        def kernel(src, dst, valid, core, label, nu, nv, nok, hi, dout):
+            w = src.shape[0] if window is None else window
+            src_w, dst_w, valid_w = src[:w], dst[:w], valid[:w]
+            halo_ids = build_halo_ids(layout, src_w, dst_w,
+                                      nu, nv, nu, nv, n)
+            session = layout.bind(halo_ids)
+            core_h = session.gather_values(core)
+            label_h = session.gather_values(label)
+            src_h = session.locate(src_w)
+            dst_h = session.locate(dst_w)
+            u_pos = session.locate(nu)
+            v_pos = session.locate(nv)
+            return promotion_fixpoint_halo(
+                src_h, dst_h, valid_w, core, label, core_h, label_h,
+                nu, nv, u_pos, v_pos, nok, hi, dout, session, n + 2,
+                kernel_backend=kernel_backend,
+            )
+
+        sm = shard_map(
+            kernel, mesh=mesh,
+            in_specs=(espec, espec, espec, P(axis), P(axis),
+                      P(), P(), P(), P(axis), P(axis)),
+            out_specs=(P(axis), P(axis), P(), P(), P(),
+                       P(axis), P(), P()),
+            check_vma=False,
+        )
+        src = jnp.zeros(cap, jnp.int32)
+        dst = jnp.ones(cap, jnp.int32)
+        valid = jnp.zeros(cap, bool)
+        core = jnp.zeros(n_pad, jnp.int32)
+        label = jnp.zeros(n_pad, jnp.int64)
+        nu = jnp.zeros(lanes, jnp.int32)
+        nv = jnp.ones(lanes, jnp.int32)
+        nok = jnp.zeros(lanes, bool)
+        hi = jnp.zeros(n_pad, jnp.int32)
+        dout = jnp.zeros(n_pad, jnp.int32)
+        with record_traffic() as log:
+            jaxpr = jax.make_jaxpr(sm)(src, dst, valid, core, label,
+                                       nu, nv, nok, hi, dout)
+        return log, jaxpr
+
+    layout = make_layout("replicated", n, axis)
 
     def kernel(src, dst, valid, core, label, nu, nv, nok, hi, dout):
         return promotion_fixpoint(src, dst, valid, core, label,
@@ -169,7 +320,7 @@ def trace_promotion_round(
     sm = shard_map(
         kernel, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(), P(),
-                  P(), P(), P(), stat_spec, stat_spec),
+                  P(), P(), P(), P(), P()),
         out_specs=(P(), P(), P(), P(), P()),
         check_vma=False,
     )
@@ -181,8 +332,8 @@ def trace_promotion_round(
     nu = jnp.zeros(lanes, jnp.int32)
     nv = jnp.ones(lanes, jnp.int32)
     nok = jnp.zeros(lanes, bool)
-    hi = jnp.zeros(n_stat, jnp.int32)
-    dout = jnp.zeros(n_stat, jnp.int32)
+    hi = jnp.zeros(n, jnp.int32)
+    dout = jnp.zeros(n, jnp.int32)
     with record_traffic() as log:
         jaxpr = jax.make_jaxpr(sm)(src, dst, valid, core, label,
                                    nu, nv, nok, hi, dout)
@@ -221,7 +372,9 @@ def _batch_args(params: AuditParams, n_state: int):
 
 def trace_engine(name: str,
                  params: Optional[AuditParams] = None,
-                 devices: Optional[int] = None) -> TracedEngine:
+                 devices: Optional[int] = None,
+                 mesh_shape: Optional[Tuple[int, int]] = None,
+                 ) -> TracedEngine:
     """Trace + lower every auditable program of one engine config on the
     current device count.
 
@@ -231,7 +384,13 @@ def trace_engine(name: str,
     mesh sizes in one process: shard_map traces one program regardless
     of mesh size, so the paired jaxprs are structurally identical and a
     lockstep walk can solve each buffer dimension against two distinct
-    size environments (repro.analysis.memory)."""
+    size environments (repro.analysis.memory).
+
+    ``mesh_shape`` overrides a halo config's canonical (d_e, d_v)
+    factorization — CI re-traces ``vertex_halo`` at 8 devices under
+    BOTH 4x2 and 2x4 against the one committed manifest, which is what
+    makes the budget formulas genuinely two-axis rather than fitted to
+    a single device split."""
     if name not in ENGINE_CONFIGS:
         raise ValueError(
             f"unknown engine config {name!r} "
@@ -250,14 +409,30 @@ def trace_engine(name: str,
         d = devices
     else:
         d = len(jax.devices())
+    if mesh_shape is not None and mesh_shape[0] * mesh_shape[1] != d:
+        raise ValueError(
+            f"mesh_shape {mesh_shape[0]}x{mesh_shape[1]} needs "
+            f"{mesh_shape[0] * mesh_shape[1]} devices, tracing {d}"
+        )
+    if cfg.is_sharded:
+        mesh = resolve_mesh(cfg, d, mesh_shape)
+        if cfg.vertex_sharding == "halo":
+            d_e, d_v = dict(mesh.shape)[EDGE_SHARD_AXIS], \
+                dict(mesh.shape)[EDGE_AXIS]
+        else:
+            d_e, d_v = 1, d
+    else:
+        mesh = None
+        d_e, d_v = 1, 1
     n, cap, lanes = params.n, params.capacity, params.lanes
-    if cfg.is_sharded and (n % d or cap % d):
+    if cfg.is_sharded and (n % d_v or cap % d):
         raise ValueError(
             f"audit sizes n={n}, capacity={cap} must divide the device "
-            f"count {d} (pad-free range layout keeps formulas exact)"
+            f"counts d={d}, d_v={d_v} (pad-free range/halo layouts keep "
+            "formulas exact)"
         )
     local_cap = cap // d
-    n_owned = -(-n // d)
+    n_owned = -(-n // d_v)
     window = plan_window(0, lanes, local_cap)
     fcap = plan_frontier_cap(cfg.frontier_exchange, cfg.frontier_cap,
                              lanes, n_owned)
@@ -300,7 +475,6 @@ def trace_engine(name: str,
         )
         donated["apply_batch"] = DONATED_STATE_ARGS
     else:
-        mesh = jax.make_mesh((d,), (EDGE_AXIS,))
         fn = make_sharded_apply(
             mesh, n, params.n_levels, axis=EDGE_AXIS,
             local_active=window,
@@ -310,7 +484,8 @@ def trace_engine(name: str,
             frontier_cap=fcap,
             kernel_backend=cfg.kernel_backend,
         )
-        n_state = n_owned * d if cfg.vertex_sharding == "range" else n
+        n_state = (n_owned * d_v
+                   if cfg.vertex_sharding in ("range", "halo") else n)
         args = _batch_args(params, n_state)
         programs["apply_batch"] = jax.make_jaxpr(fn)(*args)
         lowered["apply_batch"] = fn.lower(*args)
@@ -318,15 +493,22 @@ def trace_engine(name: str,
         round_fcap = fcap if cfg.frontier_exchange == "sparse" else None
         rounds["removal_round"] = trace_removal_round(
             cfg.vertex_sharding, n, cap, mesh, round_fcap,
+            window=window, lanes=lanes,
             kernel_backend=cfg.kernel_backend,
         )
         rounds["promotion_round"] = trace_promotion_round(
             cfg.vertex_sharding, n, cap, mesh, round_fcap, lanes,
+            window=window,
             kernel_backend=cfg.kernel_backend,
         )
 
+    n_pad = (n_owned * d_v
+             if cfg.vertex_sharding in ("range", "halo") else n)
+    hcap = (halo_cap_for(window, 2 * lanes, n_pad)
+            if cfg.vertex_sharding in ("range", "halo") else 0)
     sizes = dict(
-        n=n, d=d, cap=fcap, n_owned=n_owned, n_pad=n_owned * d,
+        n=n, d=d, d_e=d_e, d_v=d_v, cap=fcap, n_owned=n_owned,
+        n_pad=n_pad, hcap=hcap,
         lanes=lanes, window=window, local_cap=local_cap,
     )
     return TracedEngine(

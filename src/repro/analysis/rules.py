@@ -146,14 +146,24 @@ def eval_formula(expr, env: Dict[str, int]) -> int:
 # byte count (still valid, just device-count specific)
 FORMULA_CANDIDATES = (
     "4",
+    "8",
     "n_owned * 3 * 4",
     "n_owned * 2 * 4",
     "n_owned * 4",
+    "n_owned * 8",
     "n * 3 * 4",
     "n * 2 * 4",
     "n * 4",
     "n_pad * 4",
     "n_pad * 8",
+    "d_v * hcap * 3 * 4",
+    "d_v * hcap * 2 * 4",
+    "d_v * hcap * 4",
+    "hcap * 4",
+    "hcap * 8",
+    "d_v * (cap + 1) * 4",
+    "d_v * cap * 4",
+    "d_v * cap * 8",
     "d * (cap + 1) * 4",
     "d * ceil_div(n_owned, 8)",
     "d * window",
@@ -161,10 +171,29 @@ FORMULA_CANDIDATES = (
 )
 
 
-def guess_formula(nbytes: int, env: Dict[str, int]) -> Any:
+def guess_formula(nbytes: int, env: Dict[str, int],
+                  nbytes_b: Optional[int] = None,
+                  env_b: Optional[Dict[str, int]] = None) -> Any:
+    """Match an observed payload against the candidate formulas.
+
+    When a paired observation (the same collective site traced in a
+    second size environment) is supplied, a candidate must reproduce
+    BOTH byte counts. The single-env form is ambiguous on the 2-axis
+    audit point — e.g. ``hcap * 4`` and ``d_v * cap * 8`` both evaluate
+    to 256 at (d_e, d_v) = (4, 2) — and a wrongly committed formula
+    would fail the moment CI re-traces the manifest under the other
+    factorization. Pairing against the 1-device trace (where those two
+    diverge: 256 vs 128) makes the choice unique."""
     for cand in FORMULA_CANDIDATES:
-        if eval_formula(cand, env) == int(nbytes):
-            return cand
+        try:
+            if eval_formula(cand, env) != int(nbytes):
+                continue
+            if (env_b is not None
+                    and eval_formula(cand, env_b) != int(nbytes_b)):
+                continue
+        except ValueError:
+            continue  # candidate names a size this env does not carry
+        return cand
     return int(nbytes)
 
 
@@ -172,17 +201,20 @@ def guess_formula(nbytes: int, env: Dict[str, int]) -> Any:
 
 def split_round_collectives(
     closed,
-) -> Tuple[List[CollectiveSite], List[CollectiveSite], List[CollectiveSite]]:
-    """Partition a round trace's collectives into (main, overflow,
-    stray): unconditional in-round collectives, collectives on the
-    sparse exchange's overflow cond arm (``branches[1]`` — the tag
-    mapping is ``vertex_layout.SPARSE_COND_BRANCHES``), and anything
-    unattributable (outside the round, or on a cond arm no budget
-    names)."""
-    main, overflow, stray = [], [], []
+) -> Tuple[List[CollectiveSite], List[CollectiveSite],
+           List[CollectiveSite], List[CollectiveSite]]:
+    """Partition a round trace's collectives into (setup, main,
+    overflow, stray): unconditional collectives BEFORE the fixpoint
+    loop (the halo layouts' one-time bind + state gather — paid per
+    batch, not per round), unconditional in-round collectives,
+    collectives on the sparse exchange's overflow cond arm
+    (``branches[1]`` — the tag mapping is
+    ``vertex_layout.SPARSE_COND_BRANCHES``), and anything
+    unattributable (on a cond arm no budget names)."""
+    setup, main, overflow, stray = [], [], [], []
     for c in collectives(closed):
         if not c.in_round:
-            stray.append(c)
+            (setup if not c.cond_branches else stray).append(c)
         elif not c.cond_branches:
             main.append(c)
         elif (len(c.cond_branches) == 1
@@ -190,44 +222,54 @@ def split_round_collectives(
             overflow.append(c)
         else:
             stray.append(c)
-    return main, overflow, stray
+    return setup, main, overflow, stray
 
 
 # trace-time Traffic.op -> the jaxpr primitive it must lower to
 TRAFFIC_TO_PRIM = {
     "psum": "psum",
     "psum_scalar": "psum",
-    "reduce_scatter": "reduce_scatter",
-    "gather_mask": "all_gather",
+    "psum_edge": "psum",
+    "pmin_scalar": "pmin",
+    "pmax_scalar": "pmax",
+    "ppermute": "ppermute",
     "gather_frontier": "all_gather",
-    "gather_state": "all_gather",
+    "gather_halo": "all_gather",
+    "gather_stats": "all_gather",
+    "regather": "reduce_scatter",
 }
 
 
 def cross_check_round(log: List[Traffic], closed) -> List[str]:
     """Verify the trace-time traffic accounting against the jaxpr.
 
-    The §4.2/§4.3 traffic model is asserted from ``record_traffic``
-    payload notes; this check proves those notes describe the REAL
-    program: collective-by-collective (same order, branch attribution
-    via ``SPARSE_COND_BRANCHES``), the noted ``recv_bytes`` must equal
-    the lowered collective's output payload and the noted op must map
-    to the traced primitive. Returns human-readable mismatch strings
-    (empty = the model is honest). Either side lying — an unnoted
-    collective, a wrong byte count, a mislabeled branch — shows up
-    here.
+    The §4.2/§4.3/§4.4 traffic model is asserted from
+    ``record_traffic`` payload notes; this check proves those notes
+    describe the REAL program: collective-by-collective (same order,
+    branch attribution via ``SPARSE_COND_BRANCHES``), the noted
+    ``recv_bytes`` must equal the lowered collective's output payload
+    and the noted op must map to the traced primitive. Unbranched log
+    entries split positionally between the setup prefix and the
+    in-round remainder — both execute in trace order, so the first
+    ``len(setup)`` notes ARE the pre-loop collectives. Returns
+    human-readable mismatch strings (empty = the model is honest).
+    Either side lying — an unnoted collective, a wrong byte count, a
+    mislabeled branch — shows up here.
     """
     mismatches: List[str] = []
-    jmain, jover, stray = split_round_collectives(closed)
+    jsetup, jmain, jover, stray = split_round_collectives(closed)
     for c in stray:
         mismatches.append(
             f"jaxpr has an unattributable collective {c.op} "
             f"({c.out_bytes}B) at {'/'.join(c.path) or '<top>'} — "
             "not covered by the traffic accounting"
         )
-    for branch, jside in (("", jmain), ("overflow", jover)):
-        lside = [t for t in log if t.branch == branch]
-        tag = branch or "main"
+    plain = [t for t in log if t.branch == ""]
+    lsetup, lmain = plain[:len(jsetup)], plain[len(jsetup):]
+    lover = [t for t in log if t.branch == "overflow"]
+    for tag, lside, jside in (("setup", lsetup, jsetup),
+                              ("main", lmain, jmain),
+                              ("overflow", lover, jover)):
         if len(lside) != len(jside):
             mismatches.append(
                 f"{tag}: traffic log notes {len(lside)} collectives "
@@ -287,7 +329,7 @@ def check_collective_budget(traced, budget: dict) -> List[Finding]:
 
     want_rounds = budget.get("rounds", {})
     for rname, (log, closed) in traced.rounds.items():
-        jmain, jover, stray = split_round_collectives(closed)
+        jsetup, jmain, jover, stray = split_round_collectives(closed)
         for c in stray:
             bad(
                 f"unattributable collective {c.op} ({c.out_bytes}B) at "
@@ -297,13 +339,15 @@ def check_collective_budget(traced, budget: dict) -> List[Finding]:
         rb = want_rounds.get(rname)
         if rb is None:
             bad(
-                f"no round budget for {rname!r} (observed main="
+                f"no round budget for {rname!r} (observed setup="
+                f"{[c.op for c in jsetup]}, main="
                 f"{[c.op for c in jmain]}, overflow="
                 f"{[c.op for c in jover]})",
                 rname,
             )
         else:
-            for key, jside in (("main", jmain), ("overflow", jover)):
+            for key, jside in (("setup", jsetup), ("main", jmain),
+                               ("overflow", jover)):
                 spec = rb.get(key, [])
                 if len(spec) != len(jside):
                     bad(
@@ -335,17 +379,25 @@ def check_collective_budget(traced, budget: dict) -> List[Finding]:
 
     if budget.get("forbid_round_vertex_psum"):
         n = env["n"]
+        # pure-edge-axis psums are the 2-axis layouts' statistic
+        # completion: their payload is the owned slice, which at
+        # d_v = 1 IS n-sized — size alone cannot distinguish it from
+        # the forbidden vertex-axis reduction, but the axis set can
+        exempt = set(budget.get("round_psum_axes_exempt", ()))
         scopes = [(p, c) for p, c in traced.programs.items()]
         scopes += [(r, jx) for r, (_, jx) in traced.rounds.items()]
         for prog, closed in scopes:
             for c in collectives(closed):
                 if c.op == "psum" and c.in_round and c.out_elems >= n:
+                    if exempt and c.axes and set(c.axes) <= exempt:
+                        continue
                     bad(
                         f"vertex-sized psum inside a fixpoint round: "
-                        f"{c.out_elems} elems (>= n={n}) at "
-                        f"{'/'.join(c.path)} — the range layouts must "
-                        "move owned slices (reduce_scatter) + frontier "
-                        "masks only",
+                        f"{c.out_elems} elems (>= n={n}) over axes "
+                        f"{c.axes} at {'/'.join(c.path)} — the halo "
+                        "layouts must move owned slices "
+                        "(reduce_scatter) + bounded frontier/halo "
+                        "buffers only",
                         prog,
                     )
     return findings
@@ -736,26 +788,32 @@ def check_launch_budget(traced, budget: dict) -> List[Finding]:
     if cfg.kernel_backend == "lax" or not traced.rounds:
         return findings
 
-    import jax
-
     from .programs import (
-        EDGE_AXIS,
+        resolve_mesh,
         trace_promotion_round,
         trace_removal_round,
     )
 
-    mesh = jax.make_mesh((traced.n_devices,), (EDGE_AXIS,))
+    # rebuild the mesh the audited rounds were traced on — for a halo
+    # config that means the SAME (d_e, d_v) factorization, read back
+    # from the traced size environment, so the twin comparison never
+    # mixes factorizations
+    twin_shape = ((traced.sizes["d_e"], traced.sizes["d_v"])
+                  if cfg.vertex_sharding == "halo" else None)
+    mesh = resolve_mesh(cfg, traced.n_devices, twin_shape)
     n, cap = traced.params.n, traced.params.capacity
     fcap = (traced.frontier_cap
             if cfg.frontier_exchange == "sparse" else None)
     twins = {
         "removal_round": lambda: trace_removal_round(
             cfg.vertex_sharding, n, cap, mesh, fcap,
+            window=traced.window, lanes=traced.params.lanes,
             kernel_backend="lax",
         ),
         "promotion_round": lambda: trace_promotion_round(
             cfg.vertex_sharding, n, cap, mesh, fcap,
-            traced.params.lanes, kernel_backend="lax",
+            traced.params.lanes, window=traced.window,
+            kernel_backend="lax",
         ),
     }
     for rname, (_, closed) in traced.rounds.items():

@@ -199,6 +199,21 @@ class CollectiveSite:
     path: Tuple[str, ...]
     in_round: bool
     cond_branches: Tuple[int, ...]
+    # mesh axis names the collective completes over (psum's "axes"
+    # param / ppermute's "axis_name"), normalized to strings — lets the
+    # round-psum rule distinguish a pure-edge-axis partial reduction
+    # (bounded by the 2-axis traffic model) from a forbidden
+    # vertex-axis one
+    axes: Tuple[str, ...] = ()
+
+
+def _eqn_axes(eqn) -> Tuple[str, ...]:
+    raw = eqn.params.get("axes", eqn.params.get("axis_name", ()))
+    if raw is None:
+        return ()
+    if isinstance(raw, (str, int)):
+        raw = (raw,)
+    return tuple(str(a) for a in raw)
 
 
 def collectives(closed) -> List[CollectiveSite]:
@@ -226,6 +241,7 @@ def collectives(closed) -> List[CollectiveSite]:
                 path=s.path,
                 in_round=s.in_round,
                 cond_branches=s.cond_branches,
+                axes=_eqn_axes(s.eqn),
             )
         )
     return out

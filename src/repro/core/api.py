@@ -26,23 +26,31 @@ The seed two-program path (host-dict dedup + `insert.insert_batch` /
 benchmark baseline and fallback.
 
 ``engine="sharded"`` runs the SAME one-program-per-batch semantics with
-the edge-slot table sharded across a mesh's ``data`` axis
-(core/sharded.py, docs/DESIGN.md §4): per-device work is bounded by the
-densest shard's high-water window (not full capacity / n_devices —
-docs/DESIGN.md §4.1). ``vertex_sharding`` picks where the per-vertex
-state lives (core/vertex_layout.py): ``"replicated"`` (the default —
-each statistic costs one psum, O(n) received per device per round) or
-``"range"`` (core/label range-sharded over the same axis: statistics
-complete by reduce_scatter into owner ranges, O(n / n_devices) received
-per device, and only changed-vertex bitmasks cross the mesh per round —
-docs/DESIGN.md §4.2). ``frontier_exchange="sparse"`` shrinks that mask
-traffic further for the paper's tiny affected sets (its Fig. 5):
-compacted frontier INDICES in a static ``frontier_cap`` bucket (planned
-per batch like ``active_cap``, or pinned explicitly), with an
-in-program per-round fallback to the bitmask on overflow — bit-identical
-results in every regime (docs/DESIGN.md §4.3). ``freelist`` picks the
-slot-allocator ranking (``"interleaved"`` | ``"hierarchical"`` —
-`insert.freelist_alloc`).
+the edge-slot table sharded across the mesh (core/sharded.py,
+docs/DESIGN.md §4): per-device work is bounded by the densest shard's
+high-water window (not full capacity / n_devices — docs/DESIGN.md
+§4.1). ``vertex_sharding`` picks where the per-vertex state lives
+(core/vertex_layout.py): ``"replicated"`` (the default — each statistic
+costs one psum, O(n) received per device per round), ``"range"``
+(core/label owner-sharded over the same single axis: each edge shard
+keeps only a bounded HALO of the vertices its active slot window
+references — no [n] working copy, no entry state gather; statistics
+complete with one bounded halo-stats gather + owner scatter, and only
+changed-vertex halo refreshes cross the mesh per round — docs/DESIGN.md
+§4.2), or ``"halo"`` (the same halo machinery on a genuine 2-axis
+``mesh_shape=(d_e, d_v)`` edge x vertex mesh: edge slots shard over
+both axes, vertex ranges over the owner axis only, completed statistics
+gain exactly one psum over the pure-edge axis, and per-device vertex
+memory drops to O(n / d_v + halo) — docs/DESIGN.md §4.4).
+``frontier_exchange="sparse"`` shrinks the per-round refresh traffic
+further for the paper's tiny affected sets (its Fig. 5): compacted
+frontier INDICES in a static ``frontier_cap`` bucket (planned per batch
+like ``active_cap`` — seeded from the running quantile of observed
+``stats.max_frontier`` once the stream has produced any — or pinned
+explicitly), with an in-program per-round fallback to the dense halo
+regather on overflow — bit-identical results in every regime
+(docs/DESIGN.md §4.3). ``freelist`` picks the slot-allocator ranking
+(``"interleaved"`` | ``"hierarchical"`` — `insert.freelist_alloc`).
 ``kernel_backend="pallas"`` routes every per-round statistics pass of
 the device engines through the fused COO Pallas kernel
 (kernels/coremaint.py) — one launch per round instead of a
@@ -106,7 +114,7 @@ def plan_window(hwm_ub: int, b_ins: int, local_cap: int) -> int:
 
 
 def plan_frontier_cap(frontier_exchange: str, pinned_cap: int,
-                      b_pad: int, n_owned: int) -> int:
+                      b_pad: int, n_owned: int, observed: int = 0) -> int:
     """Static pow2 capacity of the sparse frontier index buffer for a
     batch padded to ``b_pad`` lanes (0 when the exchange is off,
     ``pinned_cap`` verbatim when the caller pinned one).
@@ -114,18 +122,27 @@ def plan_frontier_cap(frontier_exchange: str, pinned_cap: int,
     Deterministic in the batch BUCKET — which already keys a trace — so
     a stream with stable batch sizes never recompiles mid-stream for the
     frontier cap, exactly like the active-window bucket planning. The
-    heuristic covers a few cascade multiples of the batch (the paper's
-    Fig. 5: the affected set per edit is tiny, so per-round frontiers
-    rarely outrun the batch size); a miss-sized cap costs only the
-    in-program bitmask fallback round — never correctness — so no sync
-    or exact bound is needed here. Clamped to the pow2 roof of the owned
-    range, past which the sparse buffer cannot beat the bitmask anyway
-    (docs/DESIGN.md §4.3 crossover)."""
+    blind heuristic covers a few cascade multiples of the batch (the
+    paper's Fig. 5: the affected set per edit is tiny, so per-round
+    frontiers rarely outrun the batch size). ``observed`` feeds the
+    stream back in: the maintainer passes a running quantile of the
+    per-batch ``stats.max_frontier`` it has already harvested
+    (sync-free — only device values that are ALREADY ready are read),
+    and the cap grows monotonically to cover twice that quantile — a
+    stream whose cascades genuinely outrun the batch multiple stops
+    paying the overflow fallback after the first few batches, at the
+    cost of at most log2(n_owned) extra compiles (the caps stay pow2
+    buckets, so the recompile lattice stays the enumerable pow2 ladder).
+    A miss-sized cap costs only the in-program dense-regather fallback
+    round — never correctness — so no sync or exact bound is needed
+    here. Clamped to the pow2 roof of the owned range, past which the
+    sparse buffer cannot beat the dense exchange anyway (docs/DESIGN.md
+    §4.3 crossover)."""
     if frontier_exchange != "sparse":
         return 0
     if pinned_cap > 0:
         return pinned_cap
-    cap = _pow2_roundup(max(32, 4 * b_pad))
+    cap = _pow2_roundup(max(32, 4 * b_pad, 2 * observed))
     while cap // 2 >= n_owned:
         cap //= 2
     return cap
@@ -143,8 +160,12 @@ def bucket_lattice(local_cap: int, max_batch_lanes: int,
     over an entire stream — the quantity the recompile-surface audit
     rule bounds. Enumerated exhaustively: ``plan_window`` is monotone in
     ``hwm_ub + b_ins`` with image {pow2 p : 16 <= p < local_cap} plus
-    the ``local_cap`` clamp, and ``plan_frontier_cap`` only depends on
-    the pow2 batch bucket."""
+    the ``local_cap`` clamp, and ``plan_frontier_cap`` depends on the
+    pow2 batch bucket plus the pow2 bucket of the observed-frontier
+    quantile — whose image is the pow2 ladder from the smallest blind
+    cap up to the owned-range roof (every rung reachable when the
+    stream's cascades grow past it), so the sparse cap set is that full
+    ladder rather than the blind batch-multiple subset."""
     windows = set()
     p = 16
     while p < local_cap:
@@ -160,6 +181,16 @@ def bucket_lattice(local_cap: int, max_batch_lanes: int,
             caps.add(plan_frontier_cap(frontier_exchange, pinned_cap,
                                        b, n_owned))
             b *= 2
+        if pinned_cap <= 0:
+            # observed-quantile seeding can push any planned cap up the
+            # pow2 ladder as far as the owned-range roof
+            c = min(caps)
+            roof = plan_frontier_cap(frontier_exchange, pinned_cap, 1,
+                                     n_owned, observed=max(1, n_owned))
+            while c < roof:
+                caps.add(c)
+                c *= 2
+            caps.add(roof)
     return sorted((w, c) for w in windows for c in caps)
 
 
@@ -190,9 +221,16 @@ def _require_x64() -> None:
         )
 
 
-def _default_edge_mesh(vertex_sharding: str = "replicated"):
+def _default_edge_mesh(vertex_sharding: str = "replicated",
+                       mesh_shape: Optional[Tuple[int, int]] = None):
     from ..launch.mesh import make_edge_mesh, make_edge_vertex_mesh
 
+    if vertex_sharding == "halo":
+        # genuine 2-axis edge x vertex factorization; default (1, d) is
+        # the pure owner-axis column of the §4.4 traffic model
+        return make_edge_vertex_mesh(
+            mesh_shape=mesh_shape or (1, len(jax.devices()))
+        )
     if vertex_sharding == "range":
         # same 1-D mesh, named for its double duty: the single axis
         # carries the edge shards AND the vertex ranges
@@ -215,9 +253,13 @@ class CoreMaintainer:
     n_levels: int
     engine: str = "unified"     # "unified" | "host" | "sharded"
     mesh: Optional[Any] = None  # sharded engine only; needs a "data" axis
-    vertex_sharding: str = "replicated"  # "replicated" | "range" (sharded)
+    vertex_sharding: str = "replicated"  # "replicated" | "range" | "halo"
+    mesh_shape: Optional[Tuple[int, int]] = None  # (d_e, d_v) 2-axis
+    #                             factorization; vertex_sharding="halo"
+    #                             only, builds the default mesh
     freelist: str = "interleaved"        # "interleaved" | "hierarchical"
-    frontier_exchange: str = "bitmask"   # "bitmask" | "sparse" (range only)
+    frontier_exchange: str = "bitmask"   # "bitmask" (dense halo regather)
+    #                                      | "sparse" (range/halo only)
     frontier_cap: int = 0       # sparse index-buffer capacity; 0 = planned
     #                             per batch as a static pow2 bucket
     kernel_backend: str = "lax"  # "lax" | "pallas" per-round stat kernels
@@ -235,6 +277,12 @@ class CoreMaintainer:
     _sharded_fns: Dict[Tuple[int, int], Callable] = dataclasses.field(
         default_factory=dict, repr=False
     )
+    # sparse frontier-cap observation feedback (sync-free): device
+    # max_frontier scalars awaiting readiness, and the harvested host ints
+    _frontier_obs: list = dataclasses.field(default_factory=list,
+                                            repr=False)
+    _frontier_hist: list = dataclasses.field(default_factory=list,
+                                             repr=False)
 
     def __post_init__(self) -> None:
         # the FULL engine-configuration matrix is validated here, at
@@ -243,7 +291,7 @@ class CoreMaintainer:
         # trace-time error inside make_sharded_apply / the layout layer
         if self.engine not in _ENGINES:
             raise ValueError(f"unknown engine {self.engine!r}")
-        if self.vertex_sharding not in ("replicated", "range"):
+        if self.vertex_sharding not in ("replicated", "range", "halo"):
             raise ValueError(
                 f"unknown vertex_sharding {self.vertex_sharding!r}"
             )
@@ -259,11 +307,31 @@ class CoreMaintainer:
                 f"engine={self.engine!r}) — a silently ignored mesh "
                 "would hide a misconfigured deployment"
             )
-        if self.vertex_sharding == "range" and self.engine != "sharded":
+        if (self.vertex_sharding in ("range", "halo")
+                and self.engine != "sharded"):
             raise ValueError(
-                "vertex_sharding='range' needs engine='sharded' (the "
-                "other engines keep full vertex state on one device)"
+                f"vertex_sharding={self.vertex_sharding!r} needs "
+                "engine='sharded' (the other engines keep full vertex "
+                "state on one device)"
             )
+        if self.mesh_shape is not None:
+            if self.vertex_sharding != "halo":
+                raise ValueError(
+                    f"mesh_shape={self.mesh_shape} is only consumed by "
+                    "vertex_sharding='halo' (the single-axis layouts "
+                    "would silently ignore the factorization)"
+                )
+            if self.mesh is not None:
+                raise ValueError(
+                    "pass mesh= OR mesh_shape=, not both — mesh_shape "
+                    "builds the default 2-axis mesh; a user mesh carries "
+                    "its own factorization"
+                )
+            de, dv = self.mesh_shape
+            if de < 1 or dv < 1:
+                raise ValueError(
+                    f"mesh_shape must be positive, got {self.mesh_shape}"
+                )
         if self.freelist == "hierarchical" and self.engine != "sharded":
             raise ValueError(
                 "freelist='hierarchical' needs engine='sharded' — the "
@@ -272,11 +340,12 @@ class CoreMaintainer:
                 "so accepting it elsewhere would silently do nothing"
             )
         if (self.frontier_exchange == "sparse"
-                and self.vertex_sharding != "range"):
+                and self.vertex_sharding not in ("range", "halo")):
             raise ValueError(
                 "frontier_exchange='sparse' needs vertex_sharding="
-                "'range' (only the range layout exchanges frontier "
-                "masks; the other layouts would silently ignore it)"
+                "'range' or 'halo' (only the halo layouts exchange "
+                "frontier refreshes; the replicated layout would "
+                "silently ignore it)"
             )
         if self.frontier_cap < 0:
             raise ValueError(
@@ -317,11 +386,27 @@ class CoreMaintainer:
                 self.n_edges = jnp.asarray(self.hwm_ub, dtype=jnp.int32)
         if self.engine == "sharded":
             if self.mesh is None:
-                self.mesh = _default_edge_mesh(self.vertex_sharding)
+                self.mesh = _default_edge_mesh(self.vertex_sharding,
+                                               self.mesh_shape)
             if EDGE_AXIS not in dict(self.mesh.shape):
                 raise ValueError(
                     f"sharded engine needs a {EDGE_AXIS!r} mesh axis; got "
                     f"axes {tuple(self.mesh.axis_names)}"
+                )
+            n_axes = len(tuple(self.mesh.axis_names))
+            if self.vertex_sharding == "halo" and n_axes < 2:
+                raise ValueError(
+                    "vertex_sharding='halo' needs a 2-axis (edge x "
+                    "vertex) mesh — launch.mesh.make_edge_vertex_mesh("
+                    "mesh_shape=(d_e, d_v)) or mesh_shape=; a single "
+                    "shared axis is vertex_sharding='range'"
+                )
+            if self.vertex_sharding != "halo" and n_axes > 1:
+                raise ValueError(
+                    f"a multi-axis mesh (axes "
+                    f"{tuple(self.mesh.axis_names)}) needs "
+                    "vertex_sharding='halo' — the single-axis layouts "
+                    "would silently drop the pure-edge-axis partials"
                 )
             if self._n_shards > 1:
                 # one re-layout: pad capacity to an even shard split AND
@@ -336,10 +421,10 @@ class CoreMaintainer:
     # -- sharded placement ---------------------------------------------------
     @property
     def _n_vertex_pad(self) -> int:
-        """Vertex-state length under range sharding: ``n`` rounded up to
-        a shard multiple (phantom tail vertices hold zeros and are never
-        referenced by an edge or returned by ``cores()``)."""
-        nd = self._n_shards
+        """Vertex-state length under the halo layouts: ``n`` rounded up
+        to an owner-shard multiple (phantom tail vertices hold zeros and
+        are never referenced by an edge or returned by ``cores()``)."""
+        nd = self._d_v
         return -(-self.n // nd) * nd
 
     def _pad_vertex_state(self) -> None:
@@ -355,18 +440,22 @@ class CoreMaintainer:
             )
 
     def _place_sharded(self) -> None:
-        """Commit the slot table sharded over the mesh's data axis and the
-        vertex state replicated — or range-sharded over the SAME axis
-        under ``vertex_sharding="range"`` — so the jitted shard_map
-        program never reshards its inputs."""
+        """Commit the slot table sharded over every mesh axis and the
+        vertex state replicated — or owner-sharded over the owner
+        (``data``) axis only under the halo layouts, edge-axis
+        replicated — so the jitted shard_map program never reshards its
+        inputs."""
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        esh = NamedSharding(self.mesh, P(EDGE_AXIS))
+        all_axes = tuple(self.mesh.axis_names)
+        esh = NamedSharding(
+            self.mesh, P(all_axes if len(all_axes) > 1 else EDGE_AXIS)
+        )
         rep = NamedSharding(self.mesh, P())
         vsh = rep
-        if self.vertex_sharding == "range":
+        if self.vertex_sharding in ("range", "halo"):
             self._pad_vertex_state()
-            vsh = esh
+            vsh = NamedSharding(self.mesh, P(EDGE_AXIS))
         self.src = jax.device_put(jnp.asarray(self.src), esh)
         self.dst = jax.device_put(jnp.asarray(self.dst), esh)
         self.valid = jax.device_put(jnp.asarray(self.valid), esh)
@@ -406,11 +495,42 @@ class CoreMaintainer:
     def _frontier_bucket(self, b_pad: int) -> int:
         return plan_frontier_cap(
             self.frontier_exchange, self.frontier_cap, b_pad,
-            -(-self._n_vertex_pad // self._n_shards),
+            -(-self._n_vertex_pad // self._d_v),
+            observed=self._observed_frontier(),
         )
+
+    def _observed_frontier(self) -> int:
+        """Running quantile (p95) of the harvested per-batch
+        ``stats.max_frontier`` observations — the datum the sparse
+        frontier-cap planner is seeded from. Sync-free: only device
+        scalars whose computation has ALREADY finished are read; the
+        rest stay queued for a later batch."""
+        if self.frontier_exchange != "sparse" or self.frontier_cap > 0:
+            return 0
+        pending = []
+        for x in self._frontier_obs:
+            if hasattr(x, "is_ready") and not x.is_ready():
+                pending.append(x)
+                continue
+            self._frontier_hist.append(int(x))  # sync: ok (value is ready)
+        self._frontier_obs = pending
+        hist = self._frontier_hist[-256:]
+        self._frontier_hist = hist
+        if not hist:
+            return 0
+        return sorted(hist)[int(0.95 * (len(hist) - 1))]
 
     @property
     def _n_shards(self) -> int:
+        """Edge-slot shard count: the FULL mesh size (edge slots shard
+        over every axis; on the 2-axis halo mesh that is d_e * d_v)."""
+        if self.engine != "sharded":
+            return 1
+        return int(np.prod([s for _, s in self.mesh.shape.items()]))
+
+    @property
+    def _d_v(self) -> int:
+        """Vertex owner-shard count: the size of the owner axis alone."""
         if self.engine != "sharded":
             return 1
         return dict(self.mesh.shape)[EDGE_AXIS]
@@ -430,6 +550,7 @@ class CoreMaintainer:
         engine: str = "unified",
         mesh: Optional[Any] = None,
         vertex_sharding: str = "replicated",
+        mesh_shape: Optional[Tuple[int, int]] = None,
         freelist: str = "interleaved",
         frontier_exchange: str = "bitmask",
         frontier_cap: int = 0,
@@ -481,6 +602,7 @@ class CoreMaintainer:
             engine=engine,
             mesh=mesh,
             vertex_sharding=vertex_sharding,
+            mesh_shape=mesh_shape,
             freelist=freelist,
             frontier_exchange=frontier_exchange,
             frontier_cap=frontier_cap,
@@ -588,6 +710,7 @@ class CoreMaintainer:
                 high_water=self.n_edges,  # == the host bump pointer
                 max_frontier=jnp.maximum(in_st.max_frontier,
                                          rm_st.max_frontier),
+                n_overflow=jnp.int32(0),  # host path has no halo exchange
             )
             self.last_batch_stats = stats
             return stats
@@ -595,7 +718,7 @@ class CoreMaintainer:
         if b_ins == 0 and rm.shape[0] == 0:
             z = jnp.int32(0)
             stats = BatchStats(z, z, z, z, z, z, z, jnp.bool_(False), z,
-                               jnp.int32(self.hwm_ub), z)
+                               jnp.int32(self.hwm_ub), z, z)
             self.last_batch_stats = stats
             return stats
         self._ensure_capacity(b_ins)
@@ -670,6 +793,10 @@ class CoreMaintainer:
         self.live_ub = min(self.live_ub + b_ins, self.capacity)
         self.slot_cache = None
         self.last_batch_stats = stats
+        if self.frontier_exchange == "sparse" and self.frontier_cap == 0:
+            # queue the device scalar for the sync-free observed-quantile
+            # harvest (_observed_frontier) that seeds future cap buckets
+            self._frontier_obs.append(stats.max_frontier)
         return stats
 
     def insert_edges(self, edges: np.ndarray) -> InsertStats:
@@ -925,6 +1052,7 @@ class CoreMaintainer:
         engine: str = "unified",
         mesh: Optional[Any] = None,
         vertex_sharding: str = "replicated",
+        mesh_shape: Optional[Tuple[int, int]] = None,
         freelist: str = "interleaved",
         frontier_exchange: str = "bitmask",
         frontier_cap: int = 0,
@@ -945,6 +1073,7 @@ class CoreMaintainer:
             engine=engine,
             mesh=mesh,
             vertex_sharding=vertex_sharding,
+            mesh_shape=mesh_shape,
             freelist=freelist,
             frontier_exchange=frontier_exchange,
             frontier_cap=frontier_cap,

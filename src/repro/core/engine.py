@@ -45,10 +45,15 @@ import jax
 import jax.numpy as jnp
 
 from . import graph_ops as G
-from .insert import freelist_alloc, promotion_fixpoint
-from .order import maybe_renumber
-from .remove import removal_fixpoint
-from .vertex_layout import ReplicatedVertices, VertexLayout
+from .insert import freelist_alloc, promotion_fixpoint, promotion_fixpoint_halo
+from .order import maybe_renumber, maybe_renumber_ring
+from .remove import removal_fixpoint, removal_fixpoint_halo
+from .vertex_layout import (
+    HaloShardedVertices,
+    ReplicatedVertices,
+    VertexLayout,
+    _note,
+)
 
 Array = jax.Array
 
@@ -75,6 +80,9 @@ class BatchStats(NamedTuple):
     n_recycled: Array      # inserts that reused a tombstoned slot
     high_water: Array      # post-batch max per-shard slot high-water mark
     max_frontier: Array    # max per-shard exchanged-mask count (both phases)
+    n_overflow: Array      # sparse exchanges that fell back dense (halo) /
+    #                        bitmask (0 outside the sparse regimes) — the
+    #                        observed-cap planner's tuning datum (§4.3)
 
 
 def edge_key(lo: Array, hi: Array, n: int) -> Array:
@@ -173,7 +181,7 @@ def batch_program(
       (core/vertex_layout.py): psum for replicated vertex state — the
       default, ``layout=None`` builds ``ReplicatedVertices(n, axis)`` —
       or reduce_scatter to owned vertex ranges for
-      ``RangeShardedVertices``, with only changed-vertex masks crossing
+      ``HaloShardedVertices``, with only changed-vertex masks crossing
       the mesh per round: bit-packed (docs/DESIGN.md §4.2) or, when the
       layout carries a ``frontier_cap``, compacted to a fixed index
       bucket with an in-program bitmask fallback on overflow (§4.3).
@@ -285,6 +293,202 @@ def batch_program(
         # observed peak per-shard frontier across both fixpoints — the
         # datum the sparse frontier_cap planner is tuned from (§4.3)
         max_frontier=jnp.maximum(rm_fmax, ins_fmax),
+        # the replicated/range paths have no per-round sparse halo
+        # refresh; overflow rounds exist only in the halo program below
+        n_overflow=jnp.int32(0),
+    )
+    return src, dst, valid, core, label, n_edges, stats
+
+
+def _pow2(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length()
+
+
+def halo_cap_for(window: int, lanes_total: int, n_pad: int) -> int:
+    """Static halo capacity of one batch program: the pow2 bucket of the
+    total endpoint-candidate count — 2 per windowed slot + 2 per batch
+    lane (insert and removal) — clamped to ``n_pad``. Deduplication can
+    only shrink the candidate set, so overflow is structurally
+    impossible: every vertex the batch can reference fits. Derived
+    entirely from shapes the jit cache is already keyed on (window and
+    lane counts), so the halo adds no recompile surface."""
+    return min(_pow2(2 * window + 2 * lanes_total), n_pad)
+
+
+def build_halo_ids(layout: HaloShardedVertices, src: Array, dst: Array,
+                   ins_u: Array, ins_v: Array, rm_u: Array, rm_v: Array,
+                   n: int) -> Array:
+    """This shard's halo membership: sorted unique global ids referenced
+    by its windowed slot prefix or any batch lane, ``n_pad``-sentinel
+    padded to the static ``halo_cap_for`` bucket. Tombstoned/garbage
+    slot values are still valid vertex ids after the clip — they merely
+    widen the halo, never corrupt it (every statistic is gated by the
+    edge ``valid`` mask)."""
+    cand = jnp.concatenate([src, dst, ins_u, ins_v, rm_u, rm_v]).astype(
+        jnp.int32
+    )
+    cand = jnp.clip(cand, 0, n - 1)
+    total = int(cand.shape[0])
+    hcap = halo_cap_for(int(src.shape[0]),
+                        int(ins_u.shape[0]) + int(rm_u.shape[0]),
+                        layout.n_pad)
+    sent = jnp.int32(layout.n_pad)
+    s = jnp.sort(cand)
+    uniq = jnp.concatenate(
+        [jnp.ones((1,), dtype=bool), s[1:] != s[:-1]]
+    )
+    ids = jnp.sort(jnp.where(uniq, s, sent))
+    if total >= hcap:
+        # hcap == n_pad here (the pow2 bucket was clamped); unique ids
+        # number at most n <= n_pad, so truncation only drops sentinels
+        return ids[:hcap]
+    return jnp.concatenate(
+        [ids, jnp.full((hcap - total,), sent, dtype=jnp.int32)]
+    )
+
+
+def batch_program_halo(
+    src: Array,
+    dst: Array,
+    valid: Array,
+    core: Array,
+    label: Array,
+    n_edges: Array,
+    ins_u: Array,
+    ins_v: Array,
+    ins_ok: Array,
+    rm_u: Array,
+    rm_v: Array,
+    rm_ok: Array,
+    n: int,
+    n_levels: int,
+    table_axis,
+    layout: HaloShardedVertices,
+    freelist: str = "interleaved",
+    kernel_backend: str = "lax",
+) -> Tuple[Array, Array, Array, Array, Array, Array, BatchStats]:
+    """``batch_program`` for halo-sharded vertex state — the same four
+    phases over the same shard-local slot table, with ``core``/``label``
+    as OWNED ``[n_owned]`` slices and every edge pass indexing a bounded
+    HALO working set instead of a replicated [n] copy (the PR-7 entry
+    gather, deleted). ``table_axis`` names ALL mesh axes the edge slots
+    are sharded over (a tuple on a 2-axis mesh; its flattened device
+    order at degenerate 1 x d / d x 1 shapes equals the 1-axis mesh, so
+    slot allocation — hence the whole table history — is bit-identical
+    to the shared-axis engines); the vertex ``layout``'s owner axis is
+    one of them (1-axis) or a distinct axis (2-axis, ``edge_axes``
+    nonempty). Table-membership verdicts complete over ``table_axis``
+    (an edge lives in exactly one shard of the full product); vertex
+    scalars complete over the owner axis only (owned slices are
+    replicated along pure-edge axes). Bit-identical cores, labels, and
+    stats to ``batch_program``.
+    """
+    capacity = src.shape[0]
+
+    def allsum(x):  # table domain: every mesh axis
+        return jax.lax.psum(x, table_axis)
+
+    def vsum(x):    # owned-vertex domain: owner axis only
+        return jax.lax.psum(x, layout.axis)
+
+    hwm0 = G.slot_high_water(valid)
+    lookup = table_lookup(src, dst, valid, n)
+
+    # ---- 1. removals: vectorized slot lookup + tombstoning ---------------
+    rlo = jnp.minimum(rm_u, rm_v)
+    rhi = jnp.maximum(rm_u, rm_v)
+    rm_ok = rm_ok & (rlo != rhi)
+    rfound, rslot = lookup(edge_key(rlo, rhi, n))
+    found = rfound & rm_ok
+    rm_mask = jnp.zeros(capacity, dtype=bool).at[rslot].max(found)
+    valid = valid & ~rm_mask
+    n_removed = allsum(jnp.sum(rm_mask, dtype=jnp.int32))
+
+    # ---- halo working set: ONE membership gather + ONE bounded value
+    # regather per batch replace the deleted O(n) entry state gather
+    halo_ids = build_halo_ids(layout, src, dst, ins_u, ins_v, rm_u, rm_v, n)
+    session = layout.bind(halo_ids)
+    core_h = session.gather_values(core)
+    label_h = session.gather_values(label)
+    src_h = session.locate(src)
+    dst_h = session.locate(dst)
+
+    core_pre_rm = core
+    (core, label, core_h, label_h, rm_rounds, hi, dout_same, rm_fmax,
+     rm_ovf) = removal_fixpoint_halo(
+        src_h, dst_h, valid, core, label, core_h, label_h, session,
+        n_levels, kernel_backend=kernel_backend,
+    )
+    n_dropped = vsum(jnp.sum(core != core_pre_rm, dtype=jnp.int32))
+
+    # ---- 2. insert dedup + membership against the post-removal table ----
+    ilo, ihi, iok, key = batch_dedup(ins_u, ins_v, ins_ok, n)
+    ifound, islot_hit = lookup(key)
+    exists = allsum((ifound & ~rm_mask[islot_hit]).astype(jnp.int32)) > 0
+    iok = iok & ~exists
+
+    # ---- 3. slot allocation + table writes (identical to batch_program;
+    # the free-list ranks dead slots over the WHOLE mesh product) -------
+    lpos, iok = freelist_alloc(valid, iok, axis=table_axis,
+                               hierarchical=(freelist == "hierarchical"))
+    src = src.at[lpos].set(ilo.astype(src.dtype), mode="drop")
+    dst = dst.at[lpos].set(ihi.astype(dst.dtype), mode="drop")
+    valid = valid.at[lpos].set(True, mode="drop")
+    n_inserted = jnp.sum(iok, dtype=jnp.int32)
+    n_recycled = allsum(jnp.sum(lpos < hwm0, dtype=jnp.int32))
+    n_edges = n_edges - n_removed + n_inserted
+
+    # the newly written slots reference only lane endpoints — already in
+    # the halo by construction — so relocating the window is pure local
+    # compute, no new gather
+    src_h = session.locate(src)
+    dst_h = session.locate(dst)
+    u_pos = session.locate(ilo)
+    v_pos = session.locate(ihi)
+
+    # O(batch) delta on the shared (hi, dout_same): the per-edge
+    # predicate reads lane endpoint values from the halo (replicated
+    # verdicts), the scatter lands in each owner's slice and drops OOB
+    hi_u, hi_v, do_u, do_v = G.hi_dout_indicators(
+        core_h, label_h, u_pos, v_pos, iok
+    )
+    hi = layout.add_at(hi, ilo, hi_u.astype(jnp.int32))
+    hi = layout.add_at(hi, ihi, hi_v.astype(jnp.int32))
+    dout_same = layout.add_at(dout_same, ilo, do_u.astype(jnp.int32))
+    dout_same = layout.add_at(dout_same, ihi, do_v.astype(jnp.int32))
+
+    core_pre_ins = core
+    (core, label, core_h, label_h, ins_rounds, v_plus, ins_fmax,
+     ins_ovf) = promotion_fixpoint_halo(
+        src_h, dst_h, valid, core, label, core_h, label_h,
+        ilo, ihi, u_pos, v_pos, iok, hi, dout_same, session, n_levels,
+        kernel_backend=kernel_backend,
+    )
+    n_promoted = vsum(jnp.sum(core != core_pre_ins, dtype=jnp.int32))
+
+    # ---- 4. in-program renumber gate (ring relabel over owner axis) ------
+    label, renumbered = maybe_renumber_ring(
+        core, label, layout.axis, layout.n_shards, note=_note
+    )
+
+    stats = BatchStats(
+        n_inserted=n_inserted,
+        n_removed=n_removed,
+        insert_rounds=ins_rounds,
+        n_promoted=n_promoted,
+        v_plus=vsum(jnp.sum(v_plus, dtype=jnp.int32)),
+        remove_rounds=rm_rounds,
+        n_dropped=n_dropped,
+        renumbered=renumbered,
+        n_recycled=n_recycled,
+        high_water=G.slot_high_water(valid, table_axis),
+        # per-round peaks were tracked locally; ONE pmax completes them
+        max_frontier=session.pmax_scalar(
+            jnp.maximum(rm_fmax, ins_fmax)
+        ),
+        # overflow verdicts are replicated (gathered count columns), so
+        # the local sum IS the global round count
+        n_overflow=rm_ovf + ins_ovf,
     )
     return src, dst, valid, core, label, n_edges, stats
 

@@ -14,8 +14,10 @@ Every statistic takes an optional ``layout`` (core/vertex_layout.py):
 inside a ``shard_map`` over edge slots the local segment sums are
 COMPLETED by the layout — one ``psum`` over the mesh axis for
 ``ReplicatedVertices`` (exact global statistic on every device), one
-``reduce_scatter`` for ``RangeShardedVertices`` (each device receives
-only the vertex range it owns). With ``layout=None`` (single-device /
+``reduce_scatter`` for ``HaloShardedVertices`` (each device receives
+only the vertex range it owns; on a 2-axis mesh the owned partials
+additionally psum over the pure-edge axes first). With ``layout=None``
+(single-device /
 GSPMD) completion is the identity and the functions are unchanged. This
 is how the sharded engines reuse the exact fixpoint code of remove.py /
 insert.py regardless of where the vertex state lives.

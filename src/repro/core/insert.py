@@ -32,8 +32,13 @@ import jax.numpy as jnp
 
 from . import graph_ops as G
 from ..kernels import coremaint
-from .order import place_block
-from .vertex_layout import ReplicatedVertices, VertexLayout
+from .order import place_block, place_block_ring
+from .vertex_layout import (
+    HaloSession,
+    ReplicatedVertices,
+    VertexLayout,
+    _note,
+)
 
 Array = jax.Array
 
@@ -300,6 +305,215 @@ def promotion_fixpoint(
          jnp.int32(0)),
     )
     return core, label, rounds, v_plus, fmax
+
+
+def promotion_fixpoint_halo(
+    src_h: Array,
+    dst_h: Array,
+    valid: Array,
+    core_own: Array,
+    label_own: Array,
+    core_h: Array,
+    label_h: Array,
+    new_src: Array,
+    new_dst: Array,
+    u_pos: Array,
+    v_pos: Array,
+    new_ok: Array,
+    hi: Array,
+    dout_same: Array,
+    session: HaloSession,
+    n_levels: int,
+    kernel_backend: str = "lax",
+):
+    """The promotion rounds on a halo working set — no [n] buffer.
+
+    The mirror of ``promotion_fixpoint`` with every mask and decision in
+    the OWNED domain and every edge-pass input in the HALO domain:
+    ``src_h``/``dst_h`` index the halo (``session.locate`` of the
+    post-insert window), ``u_pos``/``v_pos`` are the pending lanes' halo
+    positions (every lane endpoint is in every device's halo by
+    construction, so the root selection replays identically everywhere),
+    and ``new_src``/``new_dst`` stay global ids for the owned seed
+    scatter. Wave/evict masks cross the owner axis as changed-restricted
+    sparse refreshes (dense O(halo_cap) regather on overflow); the
+    commits run ``order.place_block_ring``. Bit-identical cores AND
+    labels to ``promotion_fixpoint`` on the assembled global state.
+
+    Returns ``(core_own, label_own, core_h, label_h, rounds, v_plus_own,
+    max_frontier, n_overflow)`` — ``max_frontier`` is the LOCAL running
+    per-round owned frontier count (engine completes with one pmax),
+    ``n_overflow`` counts sparse exchanges that fell back dense.
+    """
+    hcap = session.halo_cap
+    d_v = session.layout.n_shards
+
+    def round_cond(state):
+        return state[4]
+
+    def round_body(state):
+        (core_own, label_own, core_h, label_h, _, promoted_prev, rounds,
+         v_plus, hi, dout_same, fmax, n_ovf) = state
+
+        # SEED: roots of pending edges at the current state — the lane
+        # endpoints' halo values are identical on every device, so the
+        # owned scatter of the replicated root ids needs no collective
+        cu, cv = core_h[u_pos], core_h[v_pos]
+        e_src_lt = (cu < cv) | (
+            (cu == cv) & (label_h[u_pos] < label_h[v_pos])
+        )
+        root = jnp.where(e_src_lt, new_src, new_dst)
+        seed = session.add_at(
+            session.zeros(), root, new_ok.astype(jnp.int32)
+        ) > 0
+        viol = (hi + dout_same) > core_own
+        fmax = jnp.maximum(fmax, session.frontier_peak(viol))
+        seed = seed | viol | promoted_prev
+
+        reach, passing, wave_fmax, wave_ovf = _forward_reach_halo(
+            src_h, dst_h, valid, core_own, core_h, label_h, seed,
+            hi, dout_same, session, kernel_backend=kernel_backend,
+        )
+        cand0 = reach & passing
+        cand, evict_round, ev_fmax, ev_ovf = _evict_fixpoint_halo(
+            src_h, dst_h, valid, core_own, core_h, cand0, hi, session,
+            kernel_backend=kernel_backend,
+        )
+        fmax = jnp.maximum(fmax, jnp.maximum(wave_fmax, ev_fmax))
+
+        new_core = core_own + cand.astype(jnp.int32)
+        # promoted -> head of O_{K+1} in old-label order
+        label_own = place_block_ring(
+            new_core, label_own, cand, at_head=True, n_levels=n_levels,
+            axis=session.axis, n_shards=d_v, note=_note,
+        )
+        # Backward-evicted -> tail of O_K in (eviction round, old label)
+        # order (docs/DESIGN.md §2)
+        evicted = cand0 & ~cand
+        label_own = place_block_ring(
+            new_core, label_own, evicted, at_head=False,
+            n_levels=n_levels, axis=session.axis, n_shards=d_v,
+            round_key=evict_round, note=_note,
+        )
+        # cand0 covers every vertex whose core OR label just changed
+        # (promoted: both; evicted: label) — the changed-restricted
+        # halo refresh the next round's edge pass reads
+        core_h, label_h, ovf = session.refresh_values(
+            new_core, label_own, cand0, core_h, label_h
+        )
+        new_hi, new_dout = G.hi_and_dout_same(
+            src_h, dst_h, valid, core_h, label_h, hcap, session,
+            backend=kernel_backend,
+        )
+        changed = session.any_owned((new_hi + new_dout) > new_core)
+        return (
+            new_core, label_own, core_h, label_h, changed, cand,
+            rounds + 1, v_plus | reach, new_hi, new_dout, fmax,
+            n_ovf + wave_ovf + ev_ovf + ovf.astype(jnp.int32),
+        )
+
+    zmask = jnp.zeros(session.n_owned, dtype=bool)
+    (core_own, label_own, core_h, label_h, _, _, rounds, v_plus, _, _,
+     fmax, n_ovf) = jax.lax.while_loop(
+        round_cond, round_body,
+        (core_own, label_own, core_h, label_h, jnp.bool_(True), zmask,
+         jnp.int32(0), zmask, hi, dout_same, jnp.int32(0), jnp.int32(0)),
+    )
+    return (core_own, label_own, core_h, label_h, rounds, v_plus, fmax,
+            n_ovf)
+
+
+def _forward_reach_halo(
+    src_h: Array,
+    dst_h: Array,
+    valid: Array,
+    core_own: Array,
+    core_h: Array,
+    label_h: Array,
+    seed: Array,
+    hi: Array,
+    dout_same: Array,
+    session: HaloSession,
+    kernel_backend: str = "lax",
+):
+    """``_forward_reach`` with OWNED loop masks and a per-wave halo
+    refresh of the reached-and-passing frontier. Returns ``(reach,
+    passing, max_frontier, n_overflow)`` — owned masks."""
+    hcap = session.halo_cap
+
+    def cond(state):
+        return state[2]
+
+    def body(state):
+        reach, passing, _, fmax, n_ovf = state
+        rp = reach & passing
+        rp_h, ovf = session.refresh_mask(rp)
+        din, grow = G.din_and_expand(
+            src_h, dst_h, valid, core_h, label_h, rp_h, hcap, session,
+            backend=kernel_backend,
+        )
+        new_passing = (hi + dout_same + din) > core_own
+        new_reach = reach | grow
+        fmax = jnp.maximum(fmax, jnp.maximum(
+            session.frontier_peak(new_passing),
+            session.frontier_peak(grow),
+        ))
+        changed = session.any_owned(
+            (new_reach != reach) | (new_passing != passing)
+        )
+        return (new_reach, new_passing, changed, fmax,
+                n_ovf + ovf.astype(jnp.int32))
+
+    init_pass = (hi + dout_same) > core_own
+    reach, passing, _, fmax, n_ovf = jax.lax.while_loop(
+        cond, body,
+        (seed, init_pass, jnp.bool_(True),
+         session.frontier_peak(init_pass), jnp.int32(0)),
+    )
+    return reach, passing, fmax, n_ovf
+
+
+def _evict_fixpoint_halo(
+    src_h: Array,
+    dst_h: Array,
+    valid: Array,
+    core_own: Array,
+    core_h: Array,
+    cand: Array,
+    hi: Array,
+    session: HaloSession,
+    kernel_backend: str = "lax",
+):
+    """``_evict_fixpoint`` with OWNED candidate masks and a per-round
+    halo refresh. Returns ``(cand, evict_round, max_frontier,
+    n_overflow)`` — owned arrays."""
+    hcap = session.halo_cap
+
+    def cond(state):
+        return state[3]
+
+    def body(state):
+        cand, evict_round, rnd, _, fmax, n_ovf = state
+        cand_h, ovf = session.refresh_mask(cand)
+        support = hi + G.count_same_level_in(
+            src_h, dst_h, valid, core_h, cand_h, hcap, session,
+            backend=kernel_backend,
+        )
+        keep = support > core_own
+        fmax = jnp.maximum(fmax, session.frontier_peak(keep))
+        new_cand = cand & keep
+        newly_evicted = cand & ~new_cand
+        evict_round = jnp.where(newly_evicted, rnd, evict_round)
+        changed = session.any_owned(new_cand != cand)
+        return (new_cand, evict_round, rnd + 1, changed, fmax,
+                n_ovf + ovf.astype(jnp.int32))
+
+    cand, evict_round, _, _, fmax, n_ovf = jax.lax.while_loop(
+        cond, body,
+        (cand, jnp.zeros(session.n_owned, dtype=jnp.int32),
+         jnp.int32(1), jnp.bool_(True), jnp.int32(0), jnp.int32(0)),
+    )
+    return cand, evict_round, fmax, n_ovf
 
 
 def _forward_reach(

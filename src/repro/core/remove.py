@@ -34,8 +34,13 @@ import jax.numpy as jnp
 
 from . import graph_ops as G
 from ..kernels import coremaint
-from .order import place_block
-from .vertex_layout import ReplicatedVertices, VertexLayout
+from .order import place_block, place_block_ring
+from .vertex_layout import (
+    HaloSession,
+    ReplicatedVertices,
+    VertexLayout,
+    _note,
+)
 
 Array = jax.Array
 
@@ -137,6 +142,76 @@ def removal_fixpoint(
         (core, label, jnp.bool_(True), jnp.int32(0), z, z, jnp.int32(0)),
     )
     return core, label, rounds, hi, dout_same, fmax
+
+
+def removal_fixpoint_halo(
+    src_h: Array,
+    dst_h: Array,
+    valid: Array,
+    core_own: Array,
+    label_own: Array,
+    core_h: Array,
+    label_h: Array,
+    session: HaloSession,
+    n_levels: int,
+    kernel_backend: str = "lax",
+):
+    """The removal fixpoint on a halo working set — no [n] buffer.
+
+    ``src_h``/``dst_h`` are the windowed edge endpoints as HALO positions
+    (``session.locate``); ``core_h``/``label_h`` are the current halo
+    values, ``core_own``/``label_own`` the owned slices. Per round: one
+    halo-domain stats pass completed into owned by the session (bounded
+    all_gather + owner scatter + edge-axis psum), the drop decision on
+    the owned slice, the ring ``place_block_ring`` label commit, and ONE
+    changed-restricted halo value refresh (sparse indices under a
+    ``frontier_cap``, dense O(halo_cap) regather otherwise / on
+    overflow) — every step bit-identical to ``removal_fixpoint`` on the
+    assembled global state.
+
+    Returns ``(core_own, label_own, core_h, label_h, rounds, hi,
+    dout_same, max_frontier, n_overflow)``; ``hi``/``dout_same`` are the
+    terminating round's OWNED promotion-seeding stats, ``max_frontier``
+    the LOCAL running per-round owned drop count (the engine completes
+    it with one pmax at batch end), ``n_overflow`` the number of rounds
+    whose sparse refresh fell back to the dense regather.
+    """
+    hcap = session.halo_cap
+    d_v = session.layout.n_shards
+
+    def cond(state):
+        return state[4]
+
+    def body(state):
+        (core_own, label_own, core_h, label_h, _, rounds, hi, dout_same,
+         fmax, n_ovf) = state
+        mcd, hi, dout_same = G.mcd_hi_dout(
+            src_h, dst_h, valid, core_h, label_h, hcap, session,
+            backend=kernel_backend,
+        )
+        drop = (mcd < core_own) & (core_own > 0)
+        fmax = jnp.maximum(fmax, session.frontier_peak(drop))
+        new_core = core_own - drop.astype(jnp.int32)
+        label_own = place_block_ring(
+            new_core, label_own, drop, at_head=False, n_levels=n_levels,
+            axis=session.axis, n_shards=d_v, note=_note,
+        )
+        core_h, label_h, ovf = session.refresh_values(
+            new_core, label_own, drop, core_h, label_h
+        )
+        cont = session.any_owned(drop)
+        return (new_core, label_own, core_h, label_h, cont, rounds + 1,
+                hi, dout_same, fmax, n_ovf + ovf.astype(jnp.int32))
+
+    z = session.zeros()
+    (core_own, label_own, core_h, label_h, _, rounds, hi, dout_same,
+     fmax, n_ovf) = jax.lax.while_loop(
+        cond, body,
+        (core_own, label_own, core_h, label_h, jnp.bool_(True),
+         jnp.int32(0), z, z, jnp.int32(0), jnp.int32(0)),
+    )
+    return (core_own, label_own, core_h, label_h, rounds, hi, dout_same,
+            fmax, n_ovf)
 
 
 @partial(jax.jit, static_argnames=("n", "n_levels"))

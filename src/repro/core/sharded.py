@@ -29,15 +29,19 @@ The older core-only kernels (``make_sharded_remove`` /
 experiments that maintain core numbers without k-order labels.
 
 For 1000+-node deployments the replicated-vertex assumption breaks; that
-is what ``vertex_sharding="range"`` is for: the vertex state itself is
-range-sharded over the SAME mesh axis (core/vertex_layout.py —
-``RangeShardedVertices``), every fixpoint statistic completes with one
-``reduce_scatter`` into its owner's range instead of a psum, and only
-changed-vertex BITMASKS cross the mesh per round (docs/DESIGN.md §4.2)
-— or, under ``frontier_exchange="sparse"``, compacted frontier INDICES
-in a fixed ``frontier_cap`` bucket with a per-round bitmask fallback on
-overflow (§4.3), shrinking mask traffic from O(n * d / 8) bytes to
-O(cap * d) words when the affected set is tiny (paper Fig. 5).
+is what the halo-sharded layouts are for (core/vertex_layout.py —
+``HaloShardedVertices``): the vertex state itself is range-sharded over
+the owner axis, each edge shard keeps only a bounded HALO of the
+vertices its windowed slot prefix references (no [n] working copy on
+any device — per-device memory is O(n / d_v + halo)), every fixpoint
+statistic completes with one bounded halo-stats gather + owner scatter
+(+ one pure-edge-axis psum on a 2-axis mesh), and only changed-vertex
+halo refreshes cross the mesh per round — compacted frontier INDICES in
+a fixed ``frontier_cap`` bucket under ``frontier_exchange="sparse"``
+(§4.3), with a per-round dense O(halo) regather fallback on overflow.
+``vertex_sharding="range"`` is the 1-axis (shared-axis) degenerate;
+``vertex_sharding="halo"`` runs on a genuine 2-axis edge x vertex mesh
+(``launch/mesh.py::make_edge_vertex_mesh``, docs/DESIGN.md §4.4).
 """
 from __future__ import annotations
 
@@ -49,23 +53,10 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
-from .engine import DONATED_STATE_ARGS, batch_program
+from .engine import DONATED_STATE_ARGS, batch_program, batch_program_halo
 from .vertex_layout import make_layout
 
 Array = jax.Array
-
-# The ONE structural O(n)-replicated buffer the static memory auditor
-# waives (repro.analysis.memory): the kernel's entry state gather below
-# materializes full replicated core/label working copies from the owned
-# range slices, once per batch. Per-device memory is therefore O(n)
-# even under vertex_sharding="range" — the halo-local 2-axis refactor
-# (ROADMAP item 3) exists to delete this gather, and with it the waiver
-# entry in the committed budget manifests.
-ENTRY_GATHER_WAIVER = (
-    "entry state gather: owned core/label slices are all_gathered into "
-    "full replicated working copies once per batch (O(n) per device); "
-    "deleted by the halo-local 2-axis refactor (ROADMAP item 3)"
-)
 
 
 def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
@@ -92,26 +83,37 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
 
     * ``"replicated"`` — every device keeps full [n] vertex state; each
       statistic costs one psum (O(n) received per device per round);
-    * ``"range"`` — device ``i`` OWNS vertex range ``i``: the kernel
-      all_gathers its core/label slice ONCE at entry into full working
-      copies, the fixpoints complete statistics with reduce_scatter into
-      owner ranges (O(n / n_shards) received per device) and exchange
-      only bit-packed changed-vertex masks per round, and the kernel
-      returns each device's owned slice. Integer arithmetic end to end,
-      so the result is BIT-identical to every other engine.
+    * ``"range"`` — device ``i`` OWNS vertex range ``i`` on the SHARED
+      single mesh axis, and beyond its owned slice keeps only a bounded
+      HALO of the vertices its windowed slot prefix references
+      (``engine.build_halo_ids`` — no [n] working copy anywhere, no
+      entry state gather): statistics complete with one bounded
+      halo-stats gather + local owner scatter, decisions run on owned
+      slices, labels place via the ring ``order.place_block_ring``, and
+      per-round traffic is changed-restricted halo refreshes. Integer
+      arithmetic end to end, so the result is BIT-identical to every
+      other engine.
+    * ``"halo"`` — the same halo machinery on a genuine 2-axis mesh
+      (``mesh`` must carry one pure-edge axis plus the owner ``axis``;
+      ``launch/mesh.py::make_edge_vertex_mesh(mesh_shape=(d_e, d_v))``):
+      edge slots shard over BOTH axes, vertex ranges over the owner
+      axis only, and completed statistics gain one psum over the
+      pure-edge axis (the d_e term of docs/DESIGN.md §4.4). Per-device
+      vertex memory is O(n / d_v + halo).
 
     ``freelist`` picks the slot-allocator ranking (``"interleaved"`` |
     ``"hierarchical"`` — `insert.freelist_alloc`).
 
-    ``frontier_exchange`` picks how the per-round changed-vertex masks
-    cross the mesh under ``vertex_sharding="range"``: ``"bitmask"`` (the
-    §4.2 packed all_gather, O(n / 8) bytes per shard) or ``"sparse"``
-    (the §4.3 compacted-index exchange: ``frontier_cap`` global indices
-    per shard, count-prefixed and sentinel-padded, O(cap * d) words per
-    round with a per-round lax.cond falling back to the bitmask when any
-    shard's frontier overflows the cap — bit-identical either way).
-    ``frontier_cap`` is STATIC: one jitted engine per cap bucket, like
-    ``local_active`` (api.py plans the pow2 bucket).
+    ``frontier_exchange`` picks how the per-round changed-vertex halo
+    refreshes cross the owner axis under range/halo sharding:
+    ``"bitmask"`` (historical name — now the DENSE halo regather, one
+    O(halo_cap) reduce_scatter per refresh) or ``"sparse"`` (the §4.3
+    compacted-index exchange: ``frontier_cap`` global indices per
+    shard, count-prefixed and sentinel-padded, O(cap * d_v) words per
+    round with a per-round lax.cond falling back to the dense regather
+    when any shard's frontier overflows the cap — bit-identical either
+    way). ``frontier_cap`` is STATIC: one jitted engine per cap bucket,
+    like ``local_active`` (api.py plans the pow2 bucket).
 
     ``kernel_backend`` picks the per-round statistics implementation
     (``"lax"`` segment_sum scatters or the ``"pallas"`` fused COO kernel,
@@ -153,16 +155,24 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
     * labels/renumber — pure vertex-state computation on those
       replicated working values — no collective.
     """
+    all_axes = tuple(mesh.axis_names)
+    if axis not in all_axes:
+        raise ValueError(
+            f"mesh has axes {all_axes}, no vertex/owner axis {axis!r}"
+        )
+    edge_axes = tuple(a for a in all_axes if a != axis)
     n_shards = dict(mesh.shape)[axis]
     if frontier_exchange not in ("bitmask", "sparse"):
         raise ValueError(
             f"unknown frontier_exchange {frontier_exchange!r} "
             "(expected 'bitmask' or 'sparse')"
         )
-    if frontier_exchange == "sparse" and vertex_sharding != "range":
+    if frontier_exchange == "sparse" and vertex_sharding not in (
+            "range", "halo"):
         raise ValueError(
             "frontier_exchange='sparse' needs vertex_sharding='range' "
-            "(the replicated layout exchanges no frontier masks)"
+            "or 'halo' (the replicated layout exchanges no frontier "
+            "masks)"
         )
     if frontier_exchange == "sparse" and frontier_cap < 1:
         raise ValueError(
@@ -172,19 +182,43 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
     if frontier_exchange != "sparse" and frontier_cap != 0:
         raise ValueError(
             f"frontier_cap={frontier_cap} is only consumed by "
-            "frontier_exchange='sparse' — the bitmask exchange would "
+            "frontier_exchange='sparse' — the dense halo exchange would "
             "silently ignore it"
         )
+    if vertex_sharding != "halo" and edge_axes:
+        raise ValueError(
+            f"a multi-axis mesh (axes {all_axes}) needs "
+            "vertex_sharding='halo' — the replicated and shared-axis "
+            "range layouts complete statistics over ONE axis and would "
+            "silently drop the pure-edge partials"
+        )
     # None = replicated: batch_program builds its own ReplicatedVertices
-    # over the edge axis, and the kernel skips the state gather/slice.
+    # over the edge axis, and the kernel skips the owned-state plumbing.
     # Anything else resolves (and validates) through the layout factory.
     layout = (
         None if vertex_sharding == "replicated"
         else make_layout(
             vertex_sharding, n, axis, n_shards,
             frontier_cap if frontier_exchange == "sparse" else None,
+            edge_axes,
         )
     )
+    # table collectives (lookup/membership psums, free-list ranking,
+    # high-water pmax) complete over EVERY axis the slots are sharded on
+    table_axis = all_axes if len(all_axes) > 1 else axis
+
+    def _check_window(shard_len):
+        if local_active is not None and local_active > shard_len:
+            # an oversized window (e.g. sized from the GLOBAL high-water
+            # mark instead of the per-shard one) would slice past the
+            # shard and silently splice a SHORT table back together —
+            # refuse loudly instead of corrupting the slot table
+            raise ValueError(
+                f"local_active={local_active} exceeds the per-shard "
+                f"capacity {shard_len} — the window must be sized "
+                "from the PER-SHARD high-water mark (capacity / "
+                "n_shards at most), not the global slot count"
+            )
 
     def _kernel(src, dst, valid, core, label, n_edges,
                 ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok):
@@ -194,52 +228,44 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
         # (engine.py). The per-shard window is a LOCAL slice (cf.
         # engine.apply_batch's active_cap prefix): the all-invalid tail
         # is spliced back on.
-        if layout is not None:
-            # ONE state gather per batch: owned slices -> full replicated
-            # working copies for the edge passes (per-ROUND traffic stays
-            # reduce_scatter + frontier masks; docs/DESIGN.md §4.2-§4.3).
-            # These two all_gathers are the waived O(n)-replicated
-            # buffers of the memory audit (ENTRY_GATHER_WAIVER above).
-            core = layout.gather_state(core)
-            label = layout.gather_state(label)
-        if local_active is not None and local_active > src.shape[0]:
-            # an oversized window (e.g. sized from the GLOBAL high-water
-            # mark instead of the per-shard one) would slice past the
-            # shard and silently splice a SHORT table back together —
-            # refuse loudly instead of corrupting the slot table
-            raise ValueError(
-                f"local_active={local_active} exceeds the per-shard "
-                f"capacity {src.shape[0]} — the window must be sized "
-                "from the PER-SHARD high-water mark (capacity / "
-                "n_shards at most), not the global slot count"
-            )
+        _check_window(src.shape[0])
         w = src.shape[0] if local_active is None else local_active
         full_src, full_dst, full_valid = src, dst, valid
-        src, dst, valid, core, label, n_edges, stats = batch_program(
-            src[:w], dst[:w], valid[:w], core, label, n_edges,
-            ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok,
-            n, n_levels, axis=axis, layout=layout, freelist=freelist,
-            kernel_backend=kernel_backend,
-        )
+        if layout is None:
+            src, dst, valid, core, label, n_edges, stats = batch_program(
+                src[:w], dst[:w], valid[:w], core, label, n_edges,
+                ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok,
+                n, n_levels, axis=axis, layout=None, freelist=freelist,
+                kernel_backend=kernel_backend,
+            )
+        else:
+            # halo program: core/label stay OWNED [n_owned] slices end
+            # to end — the edge passes index a bounded halo working set
+            # (engine.build_halo_ids) instead of a gathered [n] copy
+            src, dst, valid, core, label, n_edges, stats = (
+                batch_program_halo(
+                    src[:w], dst[:w], valid[:w], core, label, n_edges,
+                    ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok,
+                    n, n_levels, table_axis=table_axis, layout=layout,
+                    freelist=freelist, kernel_backend=kernel_backend,
+                )
+            )
         src = jnp.concatenate([src, full_src[w:]])
         dst = jnp.concatenate([dst, full_dst[w:]])
         valid = jnp.concatenate([valid, full_valid[w:]])
-        if layout is not None:
-            # back to owned slices — a local slice, no collective
-            core = layout.own(core)
-            label = layout.own(label)
         return src, dst, valid, core, label, n_edges, stats
 
+    espec = P(all_axes if len(all_axes) > 1 else axis)
     vspec = P() if layout is None else P(axis)
     shardmapped = shard_map(
         _kernel,
         mesh=mesh,
         in_specs=(
-            P(axis), P(axis), P(axis),          # src, dst, valid
+            espec, espec, espec,                # src, dst, valid
             vspec, vspec, P(),                  # core, label, n_edges
             P(), P(), P(), P(), P(), P(),       # batch (replicated)
         ),
-        out_specs=(P(axis), P(axis), P(axis), vspec, vspec, P(), P()),
+        out_specs=(espec, espec, espec, vspec, vspec, P(), P()),
         check_vma=False,
     )
     return jax.jit(shardmapped, donate_argnums=DONATED_STATE_ARGS)
@@ -356,7 +382,8 @@ def make_sharded_insert_round(mesh: Mesh, n: int, axis: str = "data"):
     return jax.jit(shardmapped)
 
 
-def shard_edges(mesh: Mesh, axis: str, *arrays) -> Tuple[Array, ...]:
-    """Place COO slot arrays with the edge dimension sharded on ``axis``."""
+def shard_edges(mesh: Mesh, axis, *arrays) -> Tuple[Array, ...]:
+    """Place COO slot arrays with the edge dimension sharded on ``axis``
+    (one mesh axis name, or a tuple of axis names on a 2-axis mesh)."""
     sharding = NamedSharding(mesh, P(axis))
     return tuple(jax.device_put(a, sharding) for a in arrays)

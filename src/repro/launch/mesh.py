@@ -28,27 +28,49 @@ def make_edge_mesh(n_devices=None, axis: str = "data"):
     return jax.make_mesh((ndev,), (axis,))
 
 
-# The axis that carries the vertex RANGE sharding of
-# ``CoreMaintainer(engine="sharded", vertex_sharding="range")``. It is
-# the edge axis: vertex range i lives with edge shard i, so every
-# statistic completes with a single-axis reduce_scatter and the frontier
-# bitmasks with a single-axis all_gather (core/vertex_layout.py).
+# The axis that carries the vertex OWNER sharding of the halo layouts
+# (``CoreMaintainer(engine="sharded", vertex_sharding="range" | "halo")``).
+# Vertex range i lives on owner-axis coordinate i, so every statistic
+# completes with owner-axis collectives (core/vertex_layout.py).
 VERTEX_AXIS = "data"
 
+# The pure-edge axis of the 2-axis factorization: edge slots shard over
+# (EDGE_SHARD_AXIS, VERTEX_AXIS) flattened, vertex state only over
+# VERTEX_AXIS, and completed statistics gain exactly one psum over this
+# axis (docs/DESIGN.md §4.4).
+EDGE_SHARD_AXIS = "edge"
 
-def make_edge_vertex_mesh(n_devices=None, axis: str = VERTEX_AXIS):
-    """Mesh for the range-sharded vertex layout: one axis shared by the
-    edge-slot sharding AND the vertex range sharding.
 
-    Sharing the axis is deliberate — device i owns edge shard i and
-    vertex range i, so ``RangeShardedVertices.complete`` is one
-    ``psum_scatter`` over this axis and no cross-axis collective exists.
-    A genuine 2-axis factorization (edge shards x vertex ranges, e.g.
-    re-using ``make_production_mesh``'s ``data`` x ``model``) plugs in
-    by psum-ing partial stats over the pure-edge axes before the
-    scatter; the shipped engine does not need it and keeps every
-    collective single-axis."""
-    return make_edge_mesh(n_devices, axis)
+def make_edge_vertex_mesh(n_devices=None, mesh_shape=None,
+                          axis: str = VERTEX_AXIS,
+                          edge_axis: str = EDGE_SHARD_AXIS):
+    """Mesh for the halo-sharded vertex layouts.
+
+    ``mesh_shape=(d_e, d_v)`` builds the genuine 2-axis factorization:
+    ``d_e`` pure-edge shards x ``d_v`` vertex-owner ranges, axes
+    ``(edge_axis, axis)``. Edge slots shard over BOTH axes (the flattened
+    device order matches the 1-D mesh, so the degenerate ``(1, d)`` and
+    ``(d, 1)`` shapes are bit-identical — slot allocation included — to
+    the single-axis engines); vertex state shards over ``axis`` only and
+    is replicated across ``edge_axis``, which is what drops per-device
+    vertex memory to O(n / d_v + halo).
+
+    ``mesh_shape=None`` keeps the historical single shared axis: device i
+    owns edge shard i AND vertex range i (``vertex_sharding="range"``),
+    every collective single-axis — exactly the ``(1, d_v)`` column of the
+    §4.4 traffic model."""
+    if mesh_shape is None:
+        return make_edge_mesh(n_devices, axis)
+    d_e, d_v = (int(mesh_shape[0]), int(mesh_shape[1]))
+    if d_e < 1 or d_v < 1:
+        raise ValueError(f"mesh_shape must be positive, got {mesh_shape}")
+    ndev = n_devices or len(jax.devices())
+    if d_e * d_v != ndev:
+        raise ValueError(
+            f"mesh_shape {d_e}x{d_v} needs {d_e * d_v} devices, have "
+            f"{ndev}"
+        )
+    return jax.make_mesh((d_e, d_v), (edge_axis, axis))
 
 
 HW = {

@@ -147,15 +147,12 @@ def test_seeded_traffic_cross_check_catches_a_lying_note():
 
     mesh = jax.make_mesh((1,), ("data",))
     log, jx = trace_removal_round("range", 8, 16, mesh)
-    lied = [dc.replace(log[0], recv_bytes=log[0].recv_bytes + 4)] + log[1:]
+    # tamper the setup entry regather (a reduce_scatter in the jaxpr)
+    assert log[1].op == "regather"
+    lied = [log[0], dc.replace(log[1], recv_bytes=log[1].recv_bytes + 4)]
+    lied += log[2:]
     traced = _mini_traced(rounds={"removal_round": (lied, jx)})
-    budget = _budget(rounds={"removal_round": {
-        "main": [{"op": "reduce_scatter", "recv_bytes": "n_owned * 3 * 4"},
-                 {"op": "all_gather",
-                  "recv_bytes": "d * ceil_div(n_owned, 8)"}],
-        "overflow": [],
-    }})
-    finds = _run(traced, budget, "collective_budget")
+    finds = _run(traced, _budget(), "collective_budget")
     assert any("cross-check" in f.message and "reduce_scatter" in f.message
                for f in finds)
 
@@ -443,6 +440,82 @@ def test_benchcheck_launch_section(tmp_path):
     p.write_text(json.dumps(base))  # section absent entirely
     msgs = [f["message"] for f in check_bench(str(p))["findings"]]
     assert any("launches_per_round" in m for m in msgs)
+
+
+def test_benchcheck_v4_sections(tmp_path):
+    """The v4 coherence rules: interpret-mode pallas rows are excluded
+    from speedup coherence (the launch-count claim stays), mesh_scaling
+    rows must be halo rows whose [d_e, d_v] shape factorizes their
+    device count, and the frontier autoplan must show the overflow
+    fallback receding."""
+    from repro.analysis.benchcheck import BENCH_SCHEMA
+
+    base = {
+        "schema": BENCH_SCHEMA,
+        "engines_agree": True,
+        "churn": {"engines_agree": True},
+    }
+    p = tmp_path / "bench.json"
+    # interpret-mode pallas at a sub-1 speedup: NOT a finding; the same
+    # row without the stamp demands a coherent speedup and flags both
+    p.write_text(json.dumps({
+        **base,
+        "pallas": {"batches_per_s": 3.0, "interpret_mode": True},
+        "speedup_pallas_vs_host": 0.4,
+    }))
+    msgs = [f["message"] for f in check_bench(str(p))["findings"]]
+    assert not any("speedup_pallas" in m for m in msgs)
+    p.write_text(json.dumps({
+        **base,
+        "pallas": {"batches_per_s": 3.0},
+        "speedup_pallas_vs_host": 0.4,
+    }))
+    msgs = [f["message"] for f in check_bench(str(p))["findings"]]
+    assert any("interpret_mode stamp" in m for m in msgs)
+    assert any("speedup_pallas_vs_host is 0.40x" in m for m in msgs)
+    # a timed non-interpret engine row below the host baseline
+    p.write_text(json.dumps({
+        **base,
+        "vertex_halo": {"batches_per_s": 5.0},
+        "speedup_vertex_halo_vs_host": 0.9,
+    }))
+    msgs = [f["message"] for f in check_bench(str(p))["findings"]]
+    assert any("speedup_vertex_halo_vs_host is 0.90x" in m for m in msgs)
+    # mesh_scaling rows: the shape must factorize the device count, and
+    # only halo rows belong in the sweep
+    p.write_text(json.dumps({
+        **base,
+        "mesh_scaling": [
+            {"n_devices": 8, "mesh_shape": [4, 2],
+             "vertex_sharding": "halo"},
+            {"n_devices": 8, "mesh_shape": [4, 4],
+             "vertex_sharding": "halo"},
+            {"n_devices": 8, "mesh_shape": [2, 4],
+             "vertex_sharding": "range"},
+        ],
+    }))
+    msgs = [f["message"] for f in check_bench(str(p))["findings"]]
+    assert not any("mesh_scaling[0]" in m for m in msgs)
+    assert any("mesh_scaling[1]" in m and "factorizing" in m for m in msgs)
+    assert any("mesh_scaling[2]" in m and "not a halo row" in m
+               for m in msgs)
+    # the autoplan section must show fewer overflow fallbacks after
+    p.write_text(json.dumps({
+        **base,
+        "frontier_autoplan": {"overflow_rounds_before": 2,
+                              "overflow_rounds_after": 5,
+                              "blind_cap": 256, "tuned_cap": 512},
+    }))
+    msgs = [f["message"] for f in check_bench(str(p))["findings"]]
+    assert any("did not reduce overflow" in m for m in msgs)
+    p.write_text(json.dumps({
+        **base,
+        "frontier_autoplan": {"overflow_rounds_before": 9,
+                              "overflow_rounds_after": 0,
+                              "blind_cap": 256, "tuned_cap": 512},
+    }))
+    msgs = [f["message"] for f in check_bench(str(p))["findings"]]
+    assert not any("overflow" in m for m in msgs)
 
 
 def test_benchcheck_missing_artifact_one_actionable_finding(tmp_path):

@@ -63,6 +63,10 @@ CONFIGS = {
     "freelist_hier": dict(engine="sharded", freelist="hierarchical"),
     "frontier_sparse": dict(engine="sharded", vertex_sharding="range",
                             frontier_exchange="sparse"),
+    # the 2-axis halo layout (edge x vertex mesh; degenerate (1, 1) on a
+    # single device) — the owner-range working set plus halo must stay
+    # bit-identical to every flat layout
+    "vertex_halo": dict(engine="sharded", vertex_sharding="halo"),
     # the fused Pallas stat kernels (kernels/coremaint.py) — interpret
     # mode off-TPU, so this runs (and must stay bit-identical) everywhere
     "pallas": dict(engine="unified", kernel_backend="pallas"),
@@ -143,7 +147,7 @@ def _run_churn_differential(m0, graph_seed, stream_seed, n_batches,
         # both free-list rankings allocate the identical live set (slot
         # POSITIONS may differ across shards; the keys may not)
         for e in ("sharded", "vertex_range", "freelist_hier",
-                  "frontier_sparse", "pallas_sharded"):
+                  "frontier_sparse", "vertex_halo", "pallas_sharded"):
             assert ms[e].edge_slot.keys() == u.edge_slot.keys(), e
     # balanced stream + generous initial capacity: nothing may grow
     for e, m in ms.items():
@@ -473,6 +477,24 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
     # not change, so cores AND labels must track the lax engines exactly
     mp = CoreMaintainer.from_graph(g, capacity=645, engine="sharded",
                                    kernel_backend="pallas")
+    # 2-axis halo meshes: both proper edge x vertex factorizations of the
+    # same 8 devices (one on each kernel backend) plus BOTH degenerate
+    # shapes — (1, 8) is pure vertex sharding, (8, 1) pure edge sharding
+    # — all of which must track the flat engines bit-exactly
+    mh42 = CoreMaintainer.from_graph(g, capacity=645, engine="sharded",
+                                     vertex_sharding="halo",
+                                     mesh_shape=(4, 2))
+    mh24 = CoreMaintainer.from_graph(g, capacity=645, engine="sharded",
+                                     vertex_sharding="halo",
+                                     mesh_shape=(2, 4),
+                                     kernel_backend="pallas")
+    mh18 = CoreMaintainer.from_graph(g, capacity=645, engine="sharded",
+                                     vertex_sharding="halo",
+                                     mesh_shape=(1, 8))
+    mh81 = CoreMaintainer.from_graph(g, capacity=645, engine="sharded",
+                                     vertex_sharding="halo",
+                                     mesh_shape=(8, 1))
+    halos = (mh42, mh24, mh18, mh81)
     assert ms.capacity % 8 == 0, ms.capacity
     assert mv.core.shape == (88,)  # padded to the shard multiple
 
@@ -482,7 +504,7 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
     live = set(norm(g.edge_array()))
     events = list(churn_stream(g, 8, 24, seed=5))
     for ev in events[:6]:
-        for m in (ms, mu, mv, mh, mf, mp):
+        for m in (ms, mu, mv, mh, mf, mp, *halos):
             m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
         for e in norm(ev.removals):
             live.discard(e)
@@ -500,6 +522,9 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
         np.testing.assert_array_equal(mu.labels(), mf.labels())
         np.testing.assert_array_equal(mu.cores(), mp.cores())
         np.testing.assert_array_equal(mu.labels(), mp.labels())
+        for hm in halos:
+            np.testing.assert_array_equal(mu.cores(), hm.cores())
+            np.testing.assert_array_equal(mu.labels(), hm.labels())
         # hierarchical ranks (shard, slot): slot POSITIONS may differ
         # from the interleaved engines, the LIVE SET may not
         assert mh.edge_slot.keys() == mu.edge_slot.keys()
@@ -526,7 +551,7 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
         tuple(e) for e in live
     }
     for ev in events[6:]:
-        for m in (ms, mu, mv, mh, mf, mp, m2, m3, m4, m5):
+        for m in (ms, mu, mv, mh, mf, mp, *halos, m2, m3, m4, m5):
             m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
         for e in norm(ev.removals):
             live.discard(e)
@@ -538,6 +563,8 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
     for name, m in (("sharded", ms), ("unified", mu),
                     ("vertex-range", mv), ("freelist-hier", mh),
                     ("frontier-sparse", mf), ("pallas-sharded", mp),
+                    ("halo-4x2", mh42), ("halo-2x4-pallas", mh24),
+                    ("halo-1x8", mh18), ("halo-8x1", mh81),
                     ("reload-sharded", m2), ("reload-unified", m3),
                     ("reload-vertex-range", m4), ("reload-vs-unified", m5)):
         np.testing.assert_array_equal(m.cores(), expect, err_msg=name)

@@ -27,7 +27,6 @@ from repro.analysis import (
 from repro.analysis.memory import STATE_ARGS, body_arg_map
 from repro.analysis.rules import eval_formula, run_rules
 from repro.compat import shard_map
-from repro.core.sharded import ENTRY_GATHER_WAIVER
 
 
 def _mini_traced(config=None, programs=None, donated=None, sizes=None):
@@ -121,10 +120,12 @@ def test_seeded_undonated_vertex_sized_output_fires():
                 if "aliases no donated" in f.message]
 
 
-def test_seeded_replicated_vertex_buffer_fires_without_waiver():
+def test_seeded_replicated_vertex_buffer_fires():
     """forbid_replicated_vertex_buffers: a 1-D all_gather that
-    materializes >= n elements inside the shard_map body is flagged,
-    naming the primitive, unless a committed waiver covers it."""
+    materializes >= n elements inside the shard_map body is refused at
+    generation time (the halo refactor deleted the waiver mechanism —
+    there is nothing left to excuse it) and flagged by the check rule
+    when such a program is audited against a clean committed section."""
     mesh = jax.make_mesh((1,), ("data",))
     sm = shard_map(lambda x: jax.lax.all_gather(x, "data", tiled=True),
                    mesh=mesh, in_specs=(P("data"),), out_specs=P(),
@@ -135,12 +136,20 @@ def test_seeded_replicated_vertex_buffer_fires_without_waiver():
                           donated={"apply_batch": (0,)})
     assert [elems for _, elems in
             replicated_vertex_sites(jx, 8)] == [8]
-    section = generate_memory_section(traced)
-    # generation waives what it sees; strip the waiver to seed the
-    # violation the rule must catch
+    with pytest.raises(RuntimeError, match="replicated"):
+        generate_memory_section(traced)
+    # the check rule fires too: audit the offending trace against the
+    # section a CLEAN program commits (same shapes, no gather)
+    clean_sm = shard_map(lambda x: x + 1, mesh=mesh,
+                         in_specs=(P("data"),), out_specs=P("data"),
+                         check_vma=False)
+    clean = jax.make_jaxpr(clean_sm)(jnp.zeros(8, jnp.int32))
+    clean_traced = _mini_traced(config=cfg,
+                                programs={"apply_batch": clean},
+                                donated={"apply_batch": (0,)})
+    section = generate_memory_section(clean_traced)
     assert section["forbid_replicated_vertex_buffers"] is True
-    assert section["waivers"]
-    section["waivers"] = []
+    assert section["waivers"] == []
     finds = _memory_findings(traced, section)
     [f] = [f for f in finds if "O(n)-replicated" in f.message]
     assert "all_gather" in f.message and "no committed waiver" in f.message
@@ -181,18 +190,16 @@ def test_missing_memory_section_fires_with_regenerate_hint():
 
 # -- the committed manifests ------------------------------------------------
 
-@pytest.mark.parametrize("engine", ["vertex_range", "frontier_sparse"])
-def test_committed_entry_gather_waiver(engine):
-    """The one replicated-O(n) buffer today — the entry core/label
-    gather in core/sharded.py — is an EXPLICIT manifest entry, not a
-    silent pass: exactly one waiver, covering both gathered arrays,
-    outside the round loop, citing the halo-refactor reason."""
+@pytest.mark.parametrize(
+    "engine", ["vertex_range", "frontier_sparse", "vertex_halo"])
+def test_committed_range_engines_pass_unwaived(engine):
+    """The halo refactor deleted the entry core/label gather — every
+    range/halo manifest now enforces the replicated-buffer rule with an
+    EMPTY waiver list (a reappearing gather fails generation outright,
+    so no silent re-waiving is possible)."""
     mem = load_budget(engine)["memory"]
     assert mem["forbid_replicated_vertex_buffers"] is True
-    [w] = mem["waivers"]
-    assert w == {"program": "apply_batch", "op": "all_gather",
-                 "in_round": False, "count": 2,
-                 "reason": ENTRY_GATHER_WAIVER}
+    assert mem["waivers"] == []
 
 
 def test_committed_replicated_engines_have_no_waivers():

@@ -2,22 +2,24 @@
 
 Two kinds of claims:
 
-* algebraic — ``RangeShardedVertices`` round-trips state/masks exactly
-  (padding, bit-packing, owner slicing), and ``ReplicatedVertices`` off
-  a mesh is the identity, so layout-generic fixpoint code degenerates to
-  the original single-device program verbatim;
+* algebraic — ``HaloShardedVertices`` round-trips owned state through
+  the halo working set exactly (bind, regather, stat completion, sparse
+  refresh with its overflow fallback — bit-identical at every frontier
+  size), and ``ReplicatedVertices`` off a mesh is the identity, so
+  layout-generic fixpoint code degenerates to the original
+  single-device program verbatim;
 
-* traffic — per FIXPOINT ROUND the range layout's collectives are one
-  reduce_scatter of the packed stats (each device receives
-  O(n / n_shards) words — O(n) mesh-wide) plus bit-packed changed-vertex
-  masks (ceil(n_owned / 8) bytes per shard per device), where the
-  replicated layout psums the full [n]-sized stats to every device
-  (O(n * n_shards) mesh-wide). Asserted from the trace-time accounting
-  (``record_traffic``): a ``lax.while_loop`` body traces exactly once,
-  so the records ARE the per-round collective budget — this is the
-  acceptance check of the O(n + frontier-bits * d) traffic model
-  (docs/DESIGN.md §4.2), and it runs without executing a single batch.
-  The 8-shard numbers are pinned by the slow subprocess test below.
+* traffic — per FIXPOINT ROUND the halo layout's collectives are one
+  bounded all_gather of halo-domain partial stats (O(d_v * halo_cap)
+  words), the O(n_owned) ring placement ppermutes, and halo refreshes
+  that are either sparse compacted-index gathers (O(cap * d_v) words)
+  or a dense reduce_scatter regather (O(halo_cap)); the replicated
+  layout psums the full [n]-sized stats to every device. Asserted from
+  the trace-time accounting (``record_traffic``): a ``lax.while_loop``
+  body traces exactly once, so the records ARE the per-round collective
+  budget — the acceptance check of the §4.3/§4.4 traffic model, run
+  without executing a single batch. The 8-shard and 2-axis numbers are
+  pinned by the slow subprocess test below.
 """
 import os
 import subprocess
@@ -35,7 +37,7 @@ from repro.analysis import cross_check_round, primitive_names
 from repro.analysis.programs import trace_removal_round
 from repro.compat import shard_map
 from repro.core.vertex_layout import (
-    RangeShardedVertices,
+    HaloShardedVertices,
     ReplicatedVertices,
     make_layout,
     record_traffic,
@@ -61,9 +63,12 @@ def test_replicated_layout_is_identity_off_mesh():
 def test_make_layout_factory():
     assert make_layout("replicated", 5, None).kind == "replicated"
     lay = make_layout("range", 10, "data", 4)
-    assert lay.kind == "range" and lay.n_owned == 3 and lay.n_pad == 12
-    assert lay.frontier_cap is None
+    assert isinstance(lay, HaloShardedVertices)
+    assert lay.kind == "halo" and lay.n_owned == 3 and lay.n_pad == 12
+    assert lay.frontier_cap is None and lay.edge_axes == ()
     assert make_layout("range", 10, "data", 4, 8).frontier_cap == 8
+    two = make_layout("halo", 10, "data", 2, None, ("edge",))
+    assert two.edge_axes == ("edge",) and two.n_owned == 5
     with pytest.raises(ValueError):
         make_layout("range", 5, None)
     with pytest.raises(ValueError):
@@ -74,89 +79,120 @@ def test_make_layout_rejects_misconfiguration_at_construction():
     """The replicated layout has no shard ranges and no frontier: a
     silently ignored n_shards/frontier_cap would hide a caller that
     believes it built a sharded or sparse layout — both raise HERE, not
-    three layers down at trace time."""
+    three layers down at trace time. Same for the range/halo split: the
+    1-axis range layout must refuse pure-edge axes, and the 2-axis halo
+    layout must refuse to run without them."""
     with pytest.raises(ValueError, match="n_shards"):
         make_layout("replicated", 10, "data", 8)
     with pytest.raises(ValueError, match="frontier_cap"):
         make_layout("replicated", 10, "data", 1, 16)
+    with pytest.raises(ValueError, match="edge_axes"):
+        make_layout("replicated", 10, "data", 1, None, ("edge",))
     # the sparse bucket must be able to hold at least one index
     with pytest.raises(ValueError, match="frontier_cap"):
         make_layout("range", 10, "data", 2, 0)
     with pytest.raises(ValueError, match="frontier_cap"):
         make_layout("range", 10, "data", 2, -4)
+    # range <-> halo are the edge_axes=()/edge_axes=(...) halves
+    with pytest.raises(ValueError, match="halo"):
+        make_layout("range", 10, "data", 2, None, ("edge",))
+    with pytest.raises(ValueError, match="edge axes"):
+        make_layout("halo", 10, "data", 2)
+
+
+def _full_halo_ids(n: int, n_pad: int, hcap: int) -> jnp.ndarray:
+    """A 1-shard halo covering every vertex, sentinel-padded to hcap."""
+    return jnp.concatenate([
+        jnp.arange(n, dtype=jnp.int32),
+        jnp.full((hcap - n,), n_pad, dtype=jnp.int32),
+    ])
 
 
 def test_record_traffic_nesting_raises_and_outer_survives():
     """Nested record_traffic() used to silently steal the outer
     context's records; now the inner entry raises and the outer log
     keeps accumulating afterwards, intact."""
-    lay = RangeShardedVertices(16, "data", 1)
+    lay = make_layout("range", 16, "data", 1)
     mesh = jax.make_mesh((1,), ("data",))
 
-    def kernel(stats):
-        return lay.complete(stats)
+    def kernel(ids, owned):
+        return lay.bind(ids).gather_values(owned)
 
-    sm = shard_map(kernel, mesh=mesh, in_specs=(P(),),
-                   out_specs=P("data"), check_vma=False)
+    sm = shard_map(kernel, mesh=mesh, in_specs=(P(), P("data")),
+                   out_specs=P(), check_vma=False)
+    ids = _full_halo_ids(16, 16, 16)
     with record_traffic() as outer:
-        jax.make_jaxpr(sm)(jnp.zeros(16, jnp.int32))
+        jax.make_jaxpr(sm)(ids, jnp.zeros(16, jnp.int32))
         n_before = len(outer)
-        assert n_before == 1
+        assert [t.op for t in outer] == ["gather_halo", "regather"]
         with pytest.raises(RuntimeError, match="nest"):
             with record_traffic():
                 pass  # pragma: no cover — entry must raise
         # the outer context still owns the log: more records land in it
         # (a different dtype forces a genuinely fresh trace — an
         # identical call could be served from the trace cache)
-        jax.make_jaxpr(sm)(jnp.zeros(16, jnp.int64))
-        assert len(outer) == n_before + 1
-        assert all(t.op == "reduce_scatter" for t in outer)
+        jax.make_jaxpr(sm)(ids, jnp.zeros(16, jnp.int64))
+        assert len(outer) == n_before + 2
     # fully unwound: a fresh context starts empty and records again
     # (again a fresh dtype, to dodge the trace cache)
     with record_traffic() as log2:
-        jax.make_jaxpr(sm)(jnp.zeros(16, jnp.float32))
-    assert [t.op for t in log2] == ["reduce_scatter"]
+        jax.make_jaxpr(sm)(ids, jnp.zeros(16, jnp.float32))
+    assert [t.op for t in log2] == ["gather_halo", "regather"]
 
 
-def test_range_layout_roundtrips_one_shard():
-    """Pad/pack/slice bookkeeping on a 1-shard mesh with n not a byte
-    multiple: complete == plain sum, gather(own(x)) == x, and the
-    bit-packed mask round-trips exactly."""
+def test_halo_session_roundtrips_one_shard():
+    """Bind/regather/complete bookkeeping on a 1-shard mesh with n not
+    a pow2: halo values are exact images of the owned state, halo-domain
+    partial stats complete back to the exact owned sums, and the
+    owner-drop scatter-add lands replicated contributions correctly."""
     mesh = jax.make_mesh((1,), ("data",))
-    n = 13
-    lay = RangeShardedVertices(n, "data", 1)
+    n, hcap = 13, 16
+    lay = make_layout("range", n, "data", 1)
     assert lay.n_owned == 13 and lay.n_pad == 13
+    all_ids = jnp.arange(n, dtype=jnp.int32)
 
-    def kernel(stats, full, mask_bits):
-        owned = lay.complete(stats)
-        state = lay.gather_state(lay.own(full))
-        mask = lay.gather_mask(lay.own(mask_bits))
-        delta = lay.add_at(lay.zeros(), jnp.array([0, 12, 12]),
-                           jnp.array([5, 1, 1], jnp.int32))
-        return owned, state, mask, delta, lay.any_owned(lay.own(mask_bits))
+    def kernel(ids, core, mask):
+        sess = lay.bind(ids)
+        core_h = sess.gather_values(core)
+        pos = sess.locate(all_ids)
+        # halo-domain partials: vertex i contributes i at its halo slot
+        stats = jnp.zeros(hcap, jnp.int32).at[pos].add(all_ids)
+        owned_stats = sess.complete(stats)
+        halo_mask, ovf = sess.refresh_mask(mask)
+        delta = sess.add_at(sess.zeros(), jnp.array([0, 12, 12]),
+                            jnp.array([5, 1, 1], jnp.int32))
+        return (core_h, pos, owned_stats, halo_mask, ovf, delta,
+                sess.any_owned(mask))
 
     f = shard_map(
-        kernel, mesh=mesh, in_specs=(P(), P(), P()),
-        out_specs=(P("data"), P(), P(), P("data"), P()), check_vma=False,
+        kernel, mesh=mesh, in_specs=(P(), P("data"), P("data")),
+        out_specs=(P(), P(), P("data"), P(), P(), P("data"), P()),
+        check_vma=False,
     )
-    stats = jnp.arange(n, dtype=jnp.int32)
-    full = jnp.arange(n, dtype=jnp.int64) * 7 - 3
+    ids = _full_halo_ids(n, lay.n_pad, hcap)
+    core = jnp.arange(n, dtype=jnp.int32) * 7 - 3
     mask = (jnp.arange(n) % 3) == 0
-    owned, state, got_mask, delta, some = jax.jit(f)(stats, full, mask)
-    np.testing.assert_array_equal(np.asarray(owned), np.asarray(stats))
-    np.testing.assert_array_equal(np.asarray(state), np.asarray(full))
-    np.testing.assert_array_equal(np.asarray(got_mask), np.asarray(mask))
+    core_h, pos, owned_stats, halo_mask, ovf, delta, some = (
+        jax.jit(f)(ids, core, mask))
+    np.testing.assert_array_equal(
+        np.asarray(core_h)[np.asarray(pos)], np.asarray(core))
+    np.testing.assert_array_equal(np.asarray(owned_stats),
+                                  np.arange(n, dtype=np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(halo_mask)[np.asarray(pos)], np.asarray(mask))
+    assert not bool(ovf)  # dense refresh never overflows
     assert int(delta[0]) == 5 and int(delta[12]) == 2
     assert bool(some)
 
 
 def test_per_round_traffic_replicated_vs_range():
     """The acceptance traffic model on a 1-shard mesh: the replicated
-    layout psums the full [n, 3] stats each round; the range layout
-    replaces that with ONE reduce_scatter (owned words) + ONE bit-packed
-    mask gather — no [n]-sized integer array crosses the mesh inside a
-    round. (The 8-shard byte counts are pinned by the subprocess test.)
-    """
+    layout psums the full [n, 3] stats each round; the halo layout pays
+    a one-time per-batch setup (halo-membership gather + entry
+    regathers) and then, per round, ONE bounded halo-stat gather, the
+    O(n_owned) ring placement, and a dense O(halo_cap) value regather —
+    no [n]-replicated buffer anywhere. (The 8-shard and 2-axis byte
+    counts are pinned by the subprocess test.)"""
     n, cap = 24, 32
     mesh = jax.make_mesh((1,), ("data",))
 
@@ -171,49 +207,97 @@ def test_per_round_traffic_replicated_vs_range():
     assert rep_log[0].recv_bytes == n * 3 * 4
     assert "reduce_scatter" not in rep_prims
 
-    # range: the stats arrive by reduce_scatter (owned slice only), the
-    # decision comes back as a bit-packed mask, and nothing else moves
-    assert [t.op for t in rng_log] == ["reduce_scatter", "gather_mask"]
-    rs, gm = rng_log
-    lay = RangeShardedVertices(n, "data", 1)
-    assert rs.recv_bytes == lay.n_owned * 3 * 4
-    assert gm.recv_bytes == 1 * -(-lay.n_owned // 8)  # n_shards * bytes
-    # the collective-count cross-check straight off the jaxpr: the range
-    # program really lowers to reduce_scatter + all_gather, and contains
-    # no full-stat psum
-    assert {"reduce_scatter", "all_gather"} <= rng_prims
-    assert "psum" not in rng_prims
+    # halo (hcap = n_pad = 24 on this toy: the pow2 bucket clamps to n):
+    # setup = membership gather + core/label entry regathers, then the
+    # round: stat gather, 5 ring ppermutes, dense core/label refresh,
+    # scalar continue-vote
+    lay = make_layout("range", n, "data", 1)
+    hcap = 24
+    assert [t.op for t in rng_log] == (
+        ["gather_halo", "regather", "regather"]          # per-batch setup
+        + ["gather_stats"] + ["ppermute"] * 5            # round: stats+ring
+        + ["regather", "regather", "psum_scalar"]        # round: refresh
+    )
+    setup, main = rng_log[:3], rng_log[3:]
+    assert setup[0].recv_bytes == 1 * hcap * 4           # d_v * hcap ids
+    assert (setup[1].recv_bytes, setup[2].recv_bytes) == (
+        hcap * 4, hcap * 8)                              # core, label
+    assert main[0].recv_bytes == 1 * hcap * 3 * 4        # d_v * hcap * 3
+    assert (main[6].recv_bytes, main[7].recv_bytes) == (
+        hcap * 4, hcap * 8)                              # dense refresh
+    assert all(t.recv_bytes <= lay.n_owned * 2 * 4
+               for t in main if t.op == "ppermute")
+    # the collective-count cross-check straight off the jaxpr: the halo
+    # program really lowers to all_gather + reduce_scatter + ppermute,
+    # and contains no full-stat [n]-psum (the only psum is the scalar
+    # continue-vote)
+    assert {"reduce_scatter", "all_gather", "ppermute"} <= rng_prims
     # and the trace-time accounting above describes the REAL program,
     # collective by collective (op mapping + payload bytes)
     assert cross_check_round(rng_log, rng_jx) == []
 
 
-def test_sparse_mask_roundtrip_across_overflow_boundary():
-    """The compacted-index exchange reproduces the mask EXACTLY at every
-    frontier size — empty, below, exactly at, and above the cap (where
-    the in-program lax.cond falls back to the bitmask)."""
+@pytest.mark.parametrize("k_mode", ["empty", "cap-1", "cap", "cap+1", "all"])
+def test_sparse_refresh_roundtrip_across_overflow_boundary(k_mode):
+    """The sparse halo refresh reproduces the dense result EXACTLY at
+    every frontier size — empty, below, exactly at, and above the cap
+    (where the in-program lax.cond falls back to the dense regather):
+    masks AND (core, label) value refreshes, bit for bit."""
     mesh = jax.make_mesh((1,), ("data",))
-    n, cap = 13, 4
-    lay = RangeShardedVertices(n, "data", 1, frontier_cap=cap)
+    n, cap, hcap = 13, 4, 16
+    k = {"empty": 0, "cap-1": cap - 1, "cap": cap,
+         "cap+1": cap + 1, "all": n}[k_mode]
+    lay = make_layout("range", n, "data", 1, frontier_cap=cap)
+    all_ids = jnp.arange(n, dtype=jnp.int32)
+
+    def kernel(ids, old_core, old_label, new_core, new_label, changed):
+        sess = lay.bind(ids)
+        pos = sess.locate(all_ids)
+        # stale halo = exact image of the pre-commit state
+        core_h = sess.gather_values(old_core)
+        label_h = sess.gather_values(old_label)
+        halo_mask, m_ovf = sess.refresh_mask(changed)
+        core_h, label_h, v_ovf = sess.refresh_values(
+            new_core, new_label, changed, core_h, label_h)
+        return pos, halo_mask, core_h, label_h, m_ovf, v_ovf
 
     f = jax.jit(shard_map(
-        lambda m: lay.gather_mask(lay.own(m)), mesh=mesh,
-        in_specs=(P(),), out_specs=P(), check_vma=False,
+        kernel, mesh=mesh,
+        in_specs=(P(),) + (P("data"),) * 5,
+        out_specs=(P(), P(), P(), P(), P(), P()), check_vma=False,
     ))
-    rng = np.random.default_rng(3)
-    for k in (0, cap - 1, cap, cap + 1, n):  # straddle the fallback
-        mask = np.zeros(n, dtype=bool)
-        mask[rng.choice(n, size=k, replace=False)] = True
-        got = np.asarray(f(jnp.asarray(mask)))
-        np.testing.assert_array_equal(got, mask, err_msg=f"frontier={k}")
+    rng = np.random.default_rng(3 + k)
+    changed = np.zeros(n, dtype=bool)
+    changed[rng.choice(n, size=k, replace=False)] = True
+    old_core = rng.integers(0, 50, n).astype(np.int32)
+    old_label = rng.integers(0, 1 << 40, n).astype(np.int64)
+    new_core = np.where(changed, old_core + 1, old_core).astype(np.int32)
+    new_label = np.where(changed, old_label + 7, old_label).astype(np.int64)
+
+    ids = _full_halo_ids(n, lay.n_pad, hcap)
+    pos, halo_mask, core_h, label_h, m_ovf, v_ovf = f(
+        ids, jnp.asarray(old_core), jnp.asarray(old_label),
+        jnp.asarray(new_core), jnp.asarray(new_label),
+        jnp.asarray(changed))
+    pos = np.asarray(pos)
+    np.testing.assert_array_equal(np.asarray(halo_mask)[pos], changed,
+                                  err_msg=f"frontier={k}")
+    # the refreshed halo is an exact image of the committed state —
+    # sparse path and overflow fallback alike
+    np.testing.assert_array_equal(np.asarray(core_h)[pos], new_core,
+                                  err_msg=f"frontier={k}")
+    np.testing.assert_array_equal(np.asarray(label_h)[pos], new_label,
+                                  err_msg=f"frontier={k}")
+    assert bool(m_ovf) == (k > cap)
+    assert bool(v_ovf) == (k > cap)
 
 
 def test_per_round_traffic_sparse_frontier():
-    """ACCEPTANCE (docs/DESIGN.md §4.3): a sparse range-sharded removal
-    round moves ONE reduce_scatter (owned stat words) + ONE
-    O(cap * n_shards)-word index gather, and NO vertex-sized collective
-    on the non-overflow branch — the bitmask gather exists only inside
-    the overflow arm of the per-round lax.cond (branch="overflow").
+    """ACCEPTANCE (docs/DESIGN.md §4.3): a sparse halo removal round
+    refreshes with THREE O(cap * d_v)-word compacted-index gathers —
+    count-prefixed ids, cores, labels — and the dense O(halo_cap)
+    regather exists only inside the overflow arm of the per-round
+    lax.cond (branch="overflow"); nothing [n]-sized ever moves.
     (The 8-shard byte counts are pinned by the subprocess test.)"""
     n, cap, fcap = 24, 32, 8
     mesh = jax.make_mesh((1,), ("data",))
@@ -221,29 +305,30 @@ def test_per_round_traffic_sparse_frontier():
                                      frontier_cap=fcap)
     prims = primitive_names(jaxpr)
 
-    lay = RangeShardedVertices(n, "data", 1, frontier_cap=fcap)
+    hcap = 24
     main = [t for t in log if t.branch != "overflow"]
     fallback = [t for t in log if t.branch == "overflow"]
-    # non-overflow round budget: stats in by reduce_scatter, frontier
-    # out as count-prefixed indices — O(cap * d) words, n-independent
-    assert [t.op for t in main] == ["reduce_scatter", "gather_frontier"]
-    rs, gf = main
-    assert rs.recv_bytes == lay.n_owned * 3 * 4
-    assert gf.recv_bytes == 1 * (fcap + 1) * 4  # n_shards * (cap+1) words
-    # nothing on the main branch scales with n beyond the owned stats:
-    # the frontier payload must be strictly smaller than even ONE
-    # vertex-sized int column would be at scale (here: it is cap-sized)
-    assert all(t.recv_bytes <= max(rs.recv_bytes, gf.recv_bytes)
-               for t in main)
-    # the ONLY bitmask gather lives on the overflow branch
-    assert [t.op for t in fallback] == ["gather_mask"]
-    assert fallback[0].recv_bytes == 1 * -(-lay.n_owned // 8)
-    # jaxpr cross-check: still reduce_scatter + all_gathers, no psum,
-    # and the traffic notes match the program collective-by-collective
-    # (branch attribution included — the overflow gather must sit on the
-    # cond's overflow arm in the jaxpr too)
+    # setup + non-overflow round budget: stats by bounded gather, the
+    # refresh as count-prefixed indices — O(cap * d_v) words,
+    # n-independent
+    assert [t.op for t in main] == (
+        ["gather_halo", "regather", "regather"]
+        + ["gather_stats"] + ["ppermute"] * 5
+        + ["gather_frontier"] * 3 + ["psum_scalar"]
+    )
+    gi, gc, gl = [t for t in main if t.op == "gather_frontier"]
+    assert gi.recv_bytes == 1 * (fcap + 1) * 4  # d_v * (cap+1) words
+    assert gc.recv_bytes == 1 * fcap * 4        # d_v * cap int32 cores
+    assert gl.recv_bytes == 1 * fcap * 8        # d_v * cap int64 labels
+    # the ONLY dense halo regather lives on the overflow branch
+    assert [t.op for t in fallback] == ["regather", "regather"]
+    assert (fallback[0].recv_bytes, fallback[1].recv_bytes) == (
+        hcap * 4, hcap * 8)
+    # jaxpr cross-check: all_gathers + reduce_scatters, and the traffic
+    # notes match the program collective-by-collective (branch
+    # attribution included — the dense regather must sit on the cond's
+    # overflow arm in the jaxpr too)
     assert {"reduce_scatter", "all_gather"} <= prims
-    assert "psum" not in prims
     assert cross_check_round(log, jaxpr) == []
 
 
@@ -256,61 +341,89 @@ _TRAFFIC_8DEV = textwrap.dedent(
     import repro  # enables x64
     from repro.analysis import cross_check_round
     from repro.analysis.programs import trace_removal_round
+    from repro.launch.mesh import make_edge_vertex_mesh
 
-    n, cap, d, fcap = 240, 512, 8, 8
+    n, cap, d, fcap, w = 2048, 4096, 8, 8, 16
+    hcap = 64  # pow2(2*w + 2*lanes_total) = pow2(64), lanes=8
     mesh = jax.make_mesh((8,), ("data",))
-    rep_log, rep_jx = trace_removal_round("replicated", n, cap, mesh)
-    rng_log, rng_jx = trace_removal_round("range", n, cap, mesh)
+    rep_log, rep_jx = trace_removal_round("replicated", n, cap, mesh,
+                                          window=w)
+    rng_log, rng_jx = trace_removal_round("range", n, cap, mesh,
+                                          window=w)
     sp_log, sp_jx = trace_removal_round("range", n, cap, mesh,
-                                        frontier_cap=fcap)
+                                        frontier_cap=fcap, window=w)
+    # the SAME 8 devices factored as 4 edge shards x 2 vertex ranges
+    mesh42 = make_edge_vertex_mesh(8, (4, 2), axis="data",
+                                   edge_axis="edge")
+    h_log, h_jx = trace_removal_round("halo", n, cap, mesh42, window=w)
 
     [psum] = rep_log
-    rs, gm = rng_log
     # replicated: O(n) received per device, O(n * d) mesh-wide
     assert psum.recv_bytes == n * 3 * 4, psum
-    # range: O(n / d) stat words per device -> O(n) mesh-wide ...
-    assert rs.recv_bytes == (n // d) * 3 * 4, rs
-    assert rs.recv_bytes * d == n * 3 * 4
-    # ... plus the frontier bitmask: ceil(n/d/8) bytes per shard per
-    # device — n bits per device, d * n BITS mesh-wide
-    assert gm.recv_bytes == d * (-(-(n // d) // 8)), gm
-    # the whole-mesh round budget: 8x fewer integer bytes, and the mask
-    # adds only bits
-    mesh_rep = psum.recv_bytes * d
-    mesh_rng = rs.recv_bytes * d + gm.recv_bytes * d
-    assert mesh_rng * 4 < mesh_rep, (mesh_rng, mesh_rep)
+
+    def split(log):
+        setup, main, over = log[:3], [], []
+        for t in log[3:]:
+            (over if t.branch == "overflow" else main).append(t)
+        return setup, main, over
+
+    # range on the shared axis: d_v = 8 vertex ranges
+    setup, main, over = split(rng_log)
+    assert [t.op for t in setup] == ["gather_halo", "regather",
+                                     "regather"], setup
+    assert setup[0].recv_bytes == d * hcap * 4, setup
+    assert [t.op for t in main] == (
+        ["gather_stats"] + ["ppermute"] * 5
+        + ["regather", "regather", "psum_scalar"]), main
+    assert main[0].recv_bytes == d * hcap * 3 * 4, main
+    assert over == [], over
+    # the whole per-round working set is O(n/d + hcap * d): every round
+    # collective undercuts the replicated [n]-psum per device ...
+    assert all(t.recv_bytes < psum.recv_bytes for t in main), main
+    # ... and so does the round total, mesh-wide
+    assert sum(t.recv_bytes for t in main) * d < psum.recv_bytes * d
+
+    # 2-axis halo (d_e, d_v) = (4, 2): the halo-stat gather spans the
+    # OWNER axis only — its payload shrinks from d*hcap to d_v*hcap
+    # words — and the edge partials complete with one psum over the
+    # pure-edge axis of the OWNED slice (n/d_v, never n)
+    hsetup, hmain, hover = split(h_log)
+    d_v = 2
+    assert hsetup[0].recv_bytes == d_v * hcap * 4, hsetup
+    assert [t.op for t in hmain[:2]] == ["gather_stats", "psum_edge"], hmain
+    assert hmain[0].recv_bytes == d_v * hcap * 3 * 4, hmain
+    assert hmain[1].recv_bytes == (n // d_v) * 3 * 4, hmain
+    assert hover == [], hover
 
     # sparse frontier exchange (docs/DESIGN.md S4.3): the non-overflow
-    # round is ONE reduce_scatter + ONE O(cap * d)-word index gather —
-    # NO vertex-sized collective; the bitmask gather exists only on the
-    # overflow arm of the per-round lax.cond. The gather payload is
-    # d * (cap + 1) words, INDEPENDENT of n — on this toy n=240 the
-    # bitmask is still cheaper (crossover at frontier < n/256), which
-    # is exactly why the cap is a knob and the bitmask the fallback.
-    main = [t for t in sp_log if t.branch != "overflow"]
-    over = [t for t in sp_log if t.branch == "overflow"]
-    assert [t.op for t in main] == ["reduce_scatter", "gather_frontier"], main
-    assert main[0].recv_bytes == (n // d) * 3 * 4, main
-    assert main[1].recv_bytes == d * (fcap + 1) * 4, main
-    assert [t.op for t in over] == ["gather_mask"], over
-    assert over[0].recv_bytes == gm.recv_bytes, over
+    # refresh is THREE O(cap * d)-word compacted gathers, INDEPENDENT
+    # of n; the dense O(hcap) regather only moves on the overflow arm
+    ssetup, smain, sover = split(sp_log)
+    gf = [t for t in smain if t.op == "gather_frontier"]
+    assert [t.recv_bytes for t in gf] == [
+        d * (fcap + 1) * 4, d * fcap * 4, d * fcap * 8], gf
+    assert [t.op for t in sover] == ["regather", "regather"], sover
+    assert [t.recv_bytes for t in sover] == [hcap * 4, hcap * 8], sover
+
     # the accounting above must describe the traced programs exactly
     # (op mapping, payload bytes, overflow-branch attribution) at 8
-    # shards too, not just on the 1-shard mesh of the fast tests
+    # shards and on the 2-axis mesh too, not just the 1-shard fast path
     for log, jx in ((rep_log, rep_jx), (rng_log, rng_jx),
-                    (sp_log, sp_jx)):
+                    (sp_log, sp_jx), (h_log, h_jx)):
         mismatches = cross_check_round(log, jx)
         assert mismatches == [], mismatches
-    print("traffic-8dev OK", mesh_rep, mesh_rng,
-          main[1].recv_bytes * d)
+    print("traffic-8dev OK",
+          psum.recv_bytes, sum(t.recv_bytes for t in main),
+          sum(t.recv_bytes for t in hmain))
     """
 )
 
 
 @pytest.mark.slow
 def test_per_round_traffic_8_shards(tmp_path):
-    """8 forced host devices: the per-round byte counts of both layouts,
-    asserted from trace-time accounting (no batch is executed)."""
+    """8 forced host devices: the per-round byte counts of the
+    replicated, range, sparse, and 2-axis halo layouts, asserted from
+    trace-time accounting (no batch is executed)."""
     script = tmp_path / "traffic8.py"
     script.write_text(_TRAFFIC_8DEV)
     env = dict(os.environ)
