@@ -30,6 +30,7 @@ import numpy as np
 from repro.analysis.benchcheck import BENCH_SCHEMA
 from repro.core.api import CoreMaintainer
 from repro.core.oracle import OrderCoreMaintainer, TraversalCoreMaintainer
+from repro.graph.csr import build_csr
 from repro.graph.generators import erdos_renyi
 from repro.graph.stream import mixed_stream
 
@@ -38,6 +39,7 @@ from .workloads import (
     paper_graphs,
     sample_insertions,
     sample_removals,
+    temporal_workload,
 )
 
 Row = Dict[str, object]
@@ -182,11 +184,11 @@ def fig7_stability(n_batches: int = 8, batch: int = 128) -> List[Row]:
 
 
 STREAM_ENGINES = ("host", "unified", "sharded", "vertex_sharded",
-                  "frontier_sparse", "vertex_halo", "pallas")
+                  "frontier_sparse", "vertex_halo", "pallas", "weighted")
 
 # engine NAME -> CoreMaintainer kwargs (the bench rows are engine
 # configurations, not just engine strings, since PR 4's vertex layouts)
-ENGINE_SPECS: Dict[str, Dict[str, str]] = {
+ENGINE_SPECS: Dict[str, Dict[str, object]] = {
     "host": {"engine": "host"},
     "unified": {"engine": "unified"},
     "sharded": {"engine": "sharded"},
@@ -197,6 +199,12 @@ ENGINE_SPECS: Dict[str, Dict[str, str]] = {
     # host; the mesh_scaling sweep times the proper factorizations)
     "vertex_halo": {"engine": "sharded", "vertex_sharding": "halo"},
     "pallas": {"engine": "unified", "kernel_backend": "pallas"},
+    # the weighted h-index engine with every weight 1: weighted coreness
+    # degenerates to plain coreness, so this row rides the SAME stream
+    # and participates in engines_agree — the cross-check that the
+    # weighted fixpoint path computes the same cores the order-based
+    # path does, while its timing prices the bisection stat pass
+    "weighted": {"engine": "unified", "weighted": True},
 }
 
 
@@ -239,6 +247,85 @@ def round_launch_counts(n: int, cap: int) -> Dict[str, object]:
     return out
 
 
+TEMPORAL_ENGINES = ("host", "unified", "sharded", "weighted")
+
+
+def temporal_bench(
+    n: int = 1500,
+    arrivals: int = 3000,
+    horizon: int = 30,
+    window: int = 6,
+    stride: int = 3,
+    engines: Sequence[str] = TEMPORAL_ENGINES,
+) -> Dict[str, object]:
+    """Sliding-window expiry stream (``workloads.temporal_workload``):
+    every engine replays the SAME drained event sequence from an empty
+    graph — each step bulk-removes the edges older than ``window`` and
+    inserts the new stride's arrivals, so removals are structural
+    (expiry by age) rather than sampled. Two replays per engine: an
+    untimed one to populate the jit caches (batch widths vary per step,
+    but the pow2 lane buckets collapse them to a handful of programs),
+    then a timed one on a fresh maintainer. Because the stream drains,
+    total insertions == total removals and every engine must end with
+    all-zero cores — both recorded for the coherence gate alongside the
+    cross-engine finals comparison."""
+    n, _, events, max_live = temporal_workload(
+        n=n, arrivals=arrivals, horizon=horizon, window=window,
+        stride=stride,
+    )
+    capacity = max(256, 4 * max_live)
+    empty = build_csr(n, np.zeros((0, 2), dtype=np.int64))
+    total_ins = int(sum(len(ev.edges) for ev in events))
+    total_rm = int(sum(len(ev.removals) for ev in events))
+    per_engine: Dict[str, Dict[str, float]] = {}
+    finals = {}
+    for engine in engines:
+
+        def replay():
+            mt = CoreMaintainer.from_graph(empty, capacity=capacity,
+                                           **ENGINE_SPECS[engine])
+            for ev in events:
+                if engine == "host":  # seed path: one program per kind
+                    mt.remove_edges(ev.removals)
+                    mt.insert_edges(ev.edges)
+                else:
+                    mt.apply_batch(insert_edges=ev.edges,
+                                   remove_edges=ev.removals)
+            mt.core.block_until_ready()
+            return mt
+
+        replay()  # warm replay — the timed pass hits the jit caches
+        t0 = time.perf_counter()
+        mt = replay()
+        dt = time.perf_counter() - t0
+        per_engine[engine] = {
+            "seconds": dt,
+            "batches_per_s": len(events) / dt,
+            "edges_per_s": (total_ins + total_rm) / dt,
+        }
+        finals[engine] = mt.cores()
+    agree = all(
+        bool((finals[e] == finals[engines[0]]).all()) for e in engines
+    )
+    zero = all(bool((finals[e] == 0).all()) for e in engines)
+    result: Dict[str, object] = {
+        "window": window,
+        "stride": stride,
+        "arrivals": arrivals,
+        "horizon": horizon,
+        "n_events": len(events),
+        "max_live": max_live,
+        "capacity": capacity,
+        "total_insertions": total_ins,
+        "total_removals": total_rm,
+        "drained": bool(total_ins == total_rm),
+        "engines_agree": agree,
+        "final_cores_zero": zero,
+    }
+    result.update(per_engine)
+    return result
+
+
 def stream_bench(
     n: int = 1500,
     m: int = 6000,
@@ -251,14 +338,21 @@ def stream_bench(
     vertex_scaling_device_counts: Sequence[int] = (),
     frontier_scaling_device_counts: Sequence[int] = (),
     mesh_scaling_shapes: Sequence = (),
+    temporal_arrivals: int = 3000,
+    temporal_window: int = 6,
+    temporal_stride: int = 3,
 ) -> Dict[str, object]:
     """Mixed insert+remove stream on the SAME events: the unified one-call
     engine (with both the lax and the fused-pallas kernel backends), the
     mesh-sharded engine (replicated AND range-sharded vertex state,
-    bitmask AND sparse frontier exchange) vs the seed two-call path
-    (host-dict dedup + separate insert/remove programs). Reports
-    batches/sec per engine, a static lax-vs-pallas per-round
-    launch-count section (``launches_per_round``), and writes
+    bitmask AND sparse frontier exchange), the weighted h-index engine
+    (unit weights — weighted coreness degenerates to plain coreness, so
+    the row joins ``engines_agree`` while its timing prices the
+    bisection stat pass) vs the seed two-call path (host-dict dedup +
+    separate insert/remove programs). Reports batches/sec per engine, a
+    static lax-vs-pallas per-round launch-count section
+    (``launches_per_round``), a sliding-window expiry section
+    (``temporal`` — see ``temporal_bench``), and writes
     ``out_json``. With
     ``scaling_device_counts`` / ``vertex_scaling_device_counts`` /
     ``frontier_scaling_device_counts`` the sharded / vertex-sharded /
@@ -366,6 +460,14 @@ def stream_bench(
     # sweep above was). The coherence gate requires the pallas rounds to
     # launch strictly fewer kernels than lax.
     result["launches_per_round"] = round_launch_counts(n, 4 * m)
+    # sliding-window expiry: structural removals by age over a temporal
+    # (u, v, t) stream that drains to an empty graph — the coherence
+    # gate requires the drain invariant (insertions == removals,
+    # all-zero final cores) on top of the cross-engine agreement
+    result["temporal"] = temporal_bench(
+        n=n, arrivals=temporal_arrivals, window=temporal_window,
+        stride=temporal_stride,
+    )
     # the frontier_cap=0 auto-planner before/after: the blind pow2 cap
     # undershoots this stream's removal cascades (max_frontier ~2x the
     # batch multiple), so the early batches pay the dense overflow
@@ -422,6 +524,11 @@ def stream_bench(
         )
         _write()
     assert agree, "engines diverged on the same stream"
+    tmp = result["temporal"]
+    assert tmp["engines_agree"], "engines diverged on the temporal stream"
+    assert tmp["drained"] and tmp["final_cores_zero"], (
+        "sliding-window stream failed to drain"
+    )
     return result
 
 

@@ -100,6 +100,7 @@ def main() -> None:
         mesh_scaling_shapes=(
             () if args.quick else ((1, 1), (2, 2), (4, 2), (2, 4))
         ),
+        temporal_arrivals=1000 if args.quick else 3000,
     )
     for eng in cm.STREAM_ENGINES:
         interp = (";interpret_mode=true"
@@ -119,7 +120,27 @@ def main() -> None:
         f"frontier_sparse_vs_host="
         f"{sb['speedup_frontier_sparse_vs_host']:.2f}x;"
         f"vertex_halo_vs_host={sb['speedup_vertex_halo_vs_host']:.2f}x;"
+        f"weighted_vs_host={sb['speedup_weighted_vs_host']:.2f}x;"
         f"agree={sb['engines_agree']}",
+    )
+    # sliding-window expiry: structural removals by age, drains to empty
+    tb = sb["temporal"]
+    for eng in cm.TEMPORAL_ENGINES:
+        _emit(
+            f"temporal/{eng}",
+            1e6 * tb[eng]["seconds"] / tb["n_events"],
+            f"batches_per_s={tb[eng]['batches_per_s']:.2f}",
+        )
+    _emit(
+        "temporal/invariants",
+        0.0,
+        (
+            f"window={tb['window']};stride={tb['stride']};"
+            f"events={tb['n_events']};"
+            f"ins={tb['total_insertions']};rm={tb['total_removals']};"
+            f"drained={tb['drained']};zero={tb['final_cores_zero']};"
+            f"agree={tb['engines_agree']}"
+        ),
     )
     fa = sb.get("frontier_autoplan")
     if fa:

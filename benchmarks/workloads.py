@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.graph.csr import CSRGraph
 from repro.graph.generators import barabasi_albert, erdos_renyi, rmat
-from repro.graph.stream import churn_stream
+from repro.graph.stream import churn_stream, sliding_window_stream
 
 
 def churn_workload(
@@ -39,6 +39,46 @@ def churn_workload(
         churn_stream(g, n_batches, batch_size, p_reinsert=0.6, seed=seed)
     )
     return g, events
+
+
+def temporal_workload(
+    n: int = 1500,
+    arrivals: int = 3000,
+    horizon: int = 30,
+    window: int = 6,
+    stride: int = 3,
+    seed: int = 31,
+):
+    """Sliding-window temporal stream: ``arrivals`` random (u, v, t)
+    rows with timestamps uniform over ``[0, horizon)``, replayed through
+    ``graph/stream.py::sliding_window_stream`` — each step inserts the
+    edges arriving in the new stride and bulk-removes the live edges
+    older than ``window``. Unlike ``churn_workload`` the removals are
+    STRUCTURAL (expiry by age), not sampled, and the stream drains: the
+    final live set is empty, so total insertions == total removals and
+    the final cores are all zero.
+
+    Returns ``(n, edges_with_time, events, max_live)`` where
+    ``max_live`` is the peak live-edge count over the replay (the
+    capacity-planning datum) and every event is a mixed ``EdgeEvent``
+    whose removals the consumer applies first.
+    """
+    rng = np.random.default_rng(seed)
+    ewt = np.stack(
+        [
+            rng.integers(0, n, arrivals),
+            rng.integers(0, n, arrivals),
+            rng.integers(0, horizon, arrivals),
+        ],
+        axis=1,
+    ).astype(np.int64)
+    events = list(sliding_window_stream(ewt, window=window, stride=stride))
+    live = 0
+    max_live = 0
+    for ev in events:  # removals-first, matching apply_batch
+        live += len(ev.edges) - len(ev.removals)
+        max_live = max(max_live, live)
+    return n, ewt, events, max_live
 
 
 def paper_graphs(scale: float = 1.0) -> Dict[str, CSRGraph]:

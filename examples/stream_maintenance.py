@@ -6,6 +6,8 @@ k-order, checkpoints atomically, and auto-resumes after a crash.
 
     PYTHONPATH=src python examples/stream_maintenance.py
     PYTHONPATH=src python examples/stream_maintenance.py --simulate-crash
+    PYTHONPATH=src python examples/stream_maintenance.py --weighted --verify
+    PYTHONPATH=src python examples/stream_maintenance.py --window 6
 """
 import argparse
 import os
@@ -15,9 +17,11 @@ import numpy as np
 
 from repro.core.api import CoreMaintainer
 from repro.core.oracle import bz_from_csr
+from repro.core.weighted import weighted_core_oracle
 from repro.graph.csr import build_csr
 from repro.graph.generators import erdos_renyi
-from repro.graph.stream import mixed_stream, synthetic_stream
+from repro.graph.stream import (mixed_stream, sliding_window_stream,
+                                synthetic_stream)
 
 
 def main():
@@ -57,6 +61,20 @@ def main():
              "to all devices on the edge axis)",
     )
     ap.add_argument(
+        "--weighted", action="store_true",
+        help="maintain WEIGHTED coreness (weighted h-index, Zhou et al. "
+             "WWW'21 — docs/DESIGN.md §4.5): random integer edge "
+             "weights, verified against the weighted peeling oracle "
+             "under --verify; needs a device engine",
+    )
+    ap.add_argument(
+        "--window", type=int, default=None, metavar="W",
+        help="replay a sliding-window TEMPORAL stream instead of the "
+             "synthetic one: timestamped arrivals, each edge expiring W "
+             "steps after its latest arrival (bulk removals by age), "
+             "starting from an empty graph and draining back to empty",
+    )
+    ap.add_argument(
         "--frontier-exchange", default="bitmask",
         choices=("bitmask", "sparse"),
         help="how changed-vertex masks cross the mesh under "
@@ -66,6 +84,10 @@ def main():
              "overflow — docs/DESIGN.md §4.3)",
     )
     args = ap.parse_args()
+    if args.weighted and args.engine == "host":
+        ap.error("--weighted needs a device engine (unified | sharded)")
+    if args.window is not None and args.window < 1:
+        ap.error("--window must be >= 1")
     if args.vertex_sharding in ("range", "halo") and args.engine != "sharded":
         ap.error(f"--vertex-sharding {args.vertex_sharding} needs "
                  "--engine sharded")
@@ -84,7 +106,31 @@ def main():
         if args.vertex_sharding != "halo":
             ap.error("--mesh-shape needs --vertex-sharding halo")
 
-    g = erdos_renyi(args.n, args.m, seed=0)
+    if args.window is not None:
+        # timestamped arrivals over a --batches-step horizon; the window
+        # expiry turns them into mixed insert+removal events (removals
+        # by AGE — the paper's temporal workload) that start from an
+        # empty graph and drain it back to empty
+        srng = np.random.default_rng(42)
+        arrivals = args.batches * args.batch_size
+        ewt = np.stack(
+            [srng.integers(0, args.n, arrivals),
+             srng.integers(0, args.n, arrivals),
+             srng.integers(0, args.batches, arrivals)], axis=1,
+        ).astype(np.int64)
+        events = list(sliding_window_stream(ewt, window=args.window))
+        g = build_csr(args.n, np.zeros((0, 2), np.int64))
+    else:
+        g = erdos_renyi(args.n, args.m, seed=0)
+        stream = mixed_stream if args.mixed else synthetic_stream
+        events = list(stream(g, args.batches, args.batch_size, seed=42))
+    # the weight stream is regenerated from the same seed on resume, so
+    # a restarted run replays identical per-batch insert weights
+    wrng = np.random.default_rng(2)
+    w0 = (wrng.integers(1, 8, g.m).astype(np.int32)
+          if args.weighted else None)
+    ins_w = ([wrng.integers(1, 8, len(ev.edges)).astype(np.int32)
+              for ev in events] if args.weighted else None)
     state_path = args.ckpt
     meta_path = args.ckpt + ".meta"
 
@@ -93,7 +139,8 @@ def main():
         m = CoreMaintainer.load(state_path, engine=args.engine,
                                 vertex_sharding=args.vertex_sharding,
                                 mesh_shape=mesh_shape,
-                                frontier_exchange=args.frontier_exchange)
+                                frontier_exchange=args.frontier_exchange,
+                                weighted=args.weighted)
         start_batch = int(open(meta_path).read().strip()) + 1
         print(f"[resume] restored checkpoint, continuing at batch "
               f"{start_batch}")
@@ -103,6 +150,7 @@ def main():
             vertex_sharding=args.vertex_sharding,
             mesh_shape=mesh_shape,
             frontier_exchange=args.frontier_exchange,
+            weighted=args.weighted, weights=w0,
         )
     if args.engine == "sharded":
         import jax
@@ -110,23 +158,24 @@ def main():
               f"device(s), vertex state {args.vertex_sharding}, "
               f"frontier exchange {args.frontier_exchange}")
 
-    stream = mixed_stream if args.mixed else synthetic_stream
-    events = list(stream(g, args.batches, args.batch_size, seed=42))
     t_all = time.perf_counter()
     edges_done = 0
     for i in range(start_batch, len(events)):
         ev = events[i]
         t0 = time.perf_counter()
         if ev.kind == "mixed":
-            st = m.apply_batch(insert_edges=ev.edges,
-                               remove_edges=ev.removals)
+            st = m.apply_batch(
+                insert_edges=ev.edges, remove_edges=ev.removals,
+                insert_weights=ins_w[i] if args.weighted else None,
+            )
             extra = (f"+{int(st.n_inserted)}/-{int(st.n_removed)} "
                      f"|V*|={int(st.n_promoted) + int(st.n_dropped)} "
                      f"rounds={int(st.insert_rounds) + int(st.remove_rounds)} "
                      f"recycled={int(st.n_recycled)} "
                      f"hwm={int(st.high_water)}")
         elif ev.kind == "insert":
-            st = m.insert_edges(ev.edges)
+            st = m.insert_edges(
+                ev.edges, weights=ins_w[i] if args.weighted else None)
             extra = f"|V*|={int(st.n_promoted)} rounds={int(st.rounds)}"
         else:
             st = m.remove_edges(ev.edges)
@@ -151,13 +200,22 @@ def main():
           f"({edges_done/total:.0f} edges/s)")
 
     if args.verify:
-        # rebuild the final graph on the host and compare with BZ
+        # rebuild the final graph on the host and compare with the oracle
+        items = sorted(m.edge_slot.items())
         live = np.asarray(
-            [[a, b] for (a, b) in m.edge_slot], dtype=np.int64
-        )
-        expect = bz_from_csr(build_csr(m.n, live))
-        assert (m.cores() == expect).all()
-        print("final cores verified against BZ ✓")
+            [[a, b] for (a, b), _ in items], dtype=np.int64
+        ).reshape(-1, 2)
+        if args.weighted:
+            wcol = np.asarray(m.w)
+            lw = np.asarray([wcol[s] for _, s in items], dtype=np.int64)
+            expect = weighted_core_oracle(m.n, live, lw)
+            assert (m.cores() == expect).all()
+            print("final cores verified against the weighted peeling "
+                  "oracle ✓")
+        else:
+            expect = bz_from_csr(build_csr(m.n, live))
+            assert (m.cores() == expect).all()
+            print("final cores verified against BZ ✓")
     # clean checkpoint on success
     for p in (state_path, meta_path):
         if os.path.exists(p):

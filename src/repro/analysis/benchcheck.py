@@ -17,10 +17,13 @@ from typing import List
 # plus the static lax-vs-pallas ``launches_per_round`` section; v4: the
 # 2-axis ``vertex_halo`` row + ``mesh_scaling`` factorization sweep, the
 # explicit ``interpret_mode`` stamp on pallas wall-clock rows, and the
-# ``frontier_autoplan`` before/after overflow section). An artifact with
-# an older/missing stamp predates the current manifests and must be
-# regenerated, not trusted.
-BENCH_SCHEMA = "repro.analysis/bench/v4"
+# ``frontier_autoplan`` before/after overflow section; v5: the
+# ``weighted`` engine row — unit weights, so it must agree with the
+# unweighted engines on the same stream — and the ``temporal``
+# sliding-window expiry section with its drain invariant). An artifact
+# with an older/missing stamp predates the current manifests and must
+# be regenerated, not trusted.
+BENCH_SCHEMA = "repro.analysis/bench/v5"
 
 REGEN_HINT = (
     "regenerate with `PYTHONPATH=src python -m benchmarks.run` (no "
@@ -35,12 +38,18 @@ REQUIRED_KEYS = (
     "frontier_sparse",
     "vertex_halo",
     "pallas",
+    "weighted",
+    "temporal",
     "sharded_scaling",
     "vertex_scaling",
     "frontier_scaling",
     "mesh_scaling",
     "frontier_autoplan",
 )
+
+# engines timed inside the ``temporal`` sliding-window section; each
+# needs a wall-clock row there
+TEMPORAL_ENGINES = ("host", "unified", "sharded", "weighted")
 
 # engine rows whose wall-clock participates in speedup coherence; a row
 # stamped ``interpret_mode: true`` (the pallas backend off-TPU) is
@@ -154,6 +163,52 @@ def check_bench(path: str) -> dict:
                 findings.append(_finding(
                     "frontier_autoplan tuned_cap shrank below the blind "
                     "cap — the planner must grow monotonically"))
+        # the weighted row rides the SAME stream with every weight 1
+        # (weighted coreness degenerates to plain coreness), so its
+        # correctness claim is the shared engines_agree flag above; here
+        # the gate only requires the row to exist and to have actually
+        # been timed. It is deliberately NOT in SPEEDUP_ENGINES: the
+        # bisection stat pass does strictly more work per round than the
+        # order-based path, and the row's purpose is the cross-check +
+        # pricing that overhead, not beating the host baseline
+        wrow = blob.get("weighted")
+        if isinstance(wrow, dict) and not wrow.get("batches_per_s", 0) > 0:
+            findings.append(_finding("weighted.batches_per_s is not > 0"))
+        # temporal sliding-window section: structural expiry-by-age
+        # removals over a drained stream — insertions must balance
+        # removals exactly and every engine must end on all-zero cores
+        tmp = blob.get("temporal")
+        if isinstance(tmp, dict):
+            if tmp.get("engines_agree") is not True:
+                findings.append(_finding(
+                    "temporal engines diverged "
+                    "(temporal.engines_agree is not true)"))
+            if tmp.get("total_insertions") != tmp.get("total_removals"):
+                findings.append(_finding(
+                    "temporal stream did not drain: total_insertions="
+                    f"{tmp.get('total_insertions')!r} != total_removals="
+                    f"{tmp.get('total_removals')!r} — every inserted "
+                    "edge must expire out of the sliding window"))
+            if tmp.get("final_cores_zero") is not True:
+                findings.append(_finding(
+                    "temporal.final_cores_zero is not true — a drained "
+                    "stream must end on the empty graph"))
+            if not (isinstance(tmp.get("window"), int)
+                    and isinstance(tmp.get("stride"), int)
+                    and tmp["window"] >= 1
+                    and 1 <= tmp["stride"] <= tmp["window"]):
+                findings.append(_finding(
+                    f"temporal window/stride malformed (window="
+                    f"{tmp.get('window')!r}, stride={tmp.get('stride')!r}"
+                    "); need 1 <= stride <= window for expiry overlap"))
+            for eng in TEMPORAL_ENGINES:
+                row = tmp.get(eng)
+                if not isinstance(row, dict):
+                    findings.append(_finding(
+                        f"temporal section lacks the {eng!r} engine row"))
+                elif not row.get("batches_per_s", 0) > 0:
+                    findings.append(_finding(
+                        f"temporal.{eng}.batches_per_s is not > 0"))
         # the launch-count section IS the fusion claim: each fixpoint
         # round must dispatch strictly fewer launch-class kernels under
         # the pallas backend than under lax, and the pallas round must

@@ -24,10 +24,13 @@ sync-free set: they are the documented amortized/host/query sync points.
 
 Beyond api.py, the engine-level builders are linted too (LINT_TARGETS):
 ``core/engine.py`` (``batch_program`` / ``apply_batch`` /
-``batch_dedup`` / ``table_lookup``) and ``core/sharded.py``
-(``make_sharded_apply`` including its nested shard_map kernel). Those
-are free functions, so device state is matched by bare parameter name
-(DEVICE_PARAMS) rather than ``self.<field>``.
+``batch_dedup`` / ``table_lookup``), ``core/sharded.py``
+(``make_sharded_apply`` including its nested shard_map kernel), and the
+fixpoint builders in ``core/remove.py`` / ``core/insert.py`` (the Order
+removal/promotion fixpoints, the weighted h-index passes, and their
+halo twins — all traced round bodies). Those are free functions, so
+device state is matched by bare parameter name (DEVICE_PARAMS) rather
+than ``self.<field>``.
 
 Run as ``python -m repro.analysis.hostlint`` (CI) or through
 tests/test_analysis.py.
@@ -49,6 +52,8 @@ _LAUNCH_DIR = os.path.normpath(os.path.join(
 API_PATH = os.path.join(_CORE_DIR, "api.py")
 ENGINE_PATH = os.path.join(_CORE_DIR, "engine.py")
 SHARDED_PATH = os.path.join(_CORE_DIR, "sharded.py")
+REMOVE_PATH = os.path.join(_CORE_DIR, "remove.py")
+INSERT_PATH = os.path.join(_CORE_DIR, "insert.py")
 VERTEX_LAYOUT_PATH = os.path.join(_CORE_DIR, "vertex_layout.py")
 MESH_PATH = os.path.join(_LAUNCH_DIR, "mesh.py")
 
@@ -78,6 +83,24 @@ LINT_TARGETS = {
         "batch_program", "apply_batch", "batch_dedup", "table_lookup",
     }),
     SHARDED_PATH: frozenset({"make_sharded_apply"}),
+    # the fixpoint builders themselves: everything here is (or is inlined
+    # into) traced round bodies, so a host coercion of a device parameter
+    # is a per-round sync — or a ConcretizationTypeError the moment the
+    # builder runs under jit. Covers the unweighted Order fixpoints, the
+    # weighted h-index passes, and their halo twins.
+    REMOVE_PATH: frozenset({
+        "removal_fixpoint", "removal_fixpoint_halo",
+        "weighted_core_fixpoint_pass", "weighted_core_fixpoint_pass_halo",
+        "_weighted_h_index_halo", "remove_batch",
+    }),
+    INSERT_PATH: frozenset({
+        "freelist_alloc", "write_edge_slots",
+        "promotion_fixpoint", "promotion_fixpoint_halo",
+        "_forward_reach", "_forward_reach_halo",
+        "_evict_fixpoint", "_evict_fixpoint_halo",
+        "weighted_promotion_fixpoint", "weighted_promotion_fixpoint_halo",
+        "insert_batch",
+    }),
     # the halo vertex-layout layer: every session method runs INSIDE the
     # per-round shard_map body, so a host coercion there is a sync (or a
     # tracer leak) replayed every fixpoint round
@@ -110,6 +133,14 @@ DEVICE_PARAMS = frozenset({
     # vertex-layout session arguments (owned slices, frontier masks,
     # the bound halo id vector) — device-resident inside shard_map
     "owned", "owned_mask", "halo_ids", "core_own", "label_own",
+    # fixpoint-builder arguments (core/remove.py / core/insert.py): the
+    # halo-gathered working set, the weighted per-slot weight column and
+    # replicated total-batch-weight scalar, and the promotion phase's
+    # per-lane insert state
+    "src_h", "dst_h", "core_h", "label_h",
+    "w", "total_w", "ins_w",
+    "new_src", "new_dst", "new_ok", "iok", "rok",
+    "hi", "dout_same", "u_pos", "v_pos",
 })
 
 # aval metadata readable without a device round trip: `x.shape[0]` on a

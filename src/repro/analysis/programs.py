@@ -6,9 +6,12 @@ sparse exchange, donated batch buffers, a bounded jit-variant lattice).
 This module produces the artifacts the audit rules inspect, without
 executing a single batch:
 
-* ``ENGINE_CONFIGS`` — the seven bit-identical engine configurations
+* ``ENGINE_CONFIGS`` — the nine engine configurations
   (host / unified / sharded / vertex_range / frontier_sparse /
-  vertex_halo / pallas), exactly the matrix
+  vertex_halo / pallas, all bit-identical on unweighted streams, plus
+  the weight-generalized ``weighted`` / ``weighted_sharded`` pair —
+  bit-identical to each other and to ``weighted_core_oracle`` on
+  weighted streams), exactly the matrix
   ``tests/test_churn_streams.py`` proves equivalent. The ``pallas``
   config is the sharded engine with the fused COO stat kernels
   (kernels/coremaint.py): the fusion swaps only LOCAL partials, so its
@@ -54,14 +57,16 @@ from ..compat import shard_map
 from ..core.api import plan_frontier_cap, plan_window
 from ..core.engine import (
     DONATED_STATE_ARGS,
+    WEIGHTED_DONATED_STATE_ARGS,
     apply_batch,
+    apply_batch_weighted,
     build_halo_ids,
     halo_cap_for,
 )
 from ..core.insert import insert_batch, promotion_fixpoint, \
     promotion_fixpoint_halo
 from ..core.remove import remove_batch, removal_fixpoint, \
-    removal_fixpoint_halo
+    removal_fixpoint_halo, weighted_core_fixpoint_pass
 from ..core.sharded import make_sharded_apply
 from ..core.vertex_layout import Traffic, make_layout, record_traffic
 from ..launch.mesh import EDGE_SHARD_AXIS, make_edge_vertex_mesh
@@ -80,6 +85,10 @@ class EngineConfig:
     frontier_cap: int = 0             # pinned sparse cap (sparse only)
     freelist: str = "interleaved"
     kernel_backend: str = "lax"       # "lax" | "pallas" stat kernels
+    weighted: bool = False            # weight-generalized engine (both
+    #                                   phases run the weighted h-index
+    #                                   bisection fixpoint; the slot
+    #                                   table carries a weight column)
     # canonical (d_e, d_v) factorization for vertex_sharding="halo";
     # the audit CLI's --mesh-shape re-traces the same config (and the
     # same committed manifest) under other factorizations
@@ -107,6 +116,8 @@ ENGINE_CONFIGS: Dict[str, EngineConfig] = {
             mesh_shape=(4, 2),
         ),
         EngineConfig("pallas", "sharded", kernel_backend="pallas"),
+        EngineConfig("weighted", "unified", weighted=True),
+        EngineConfig("weighted_sharded", "sharded", weighted=True),
     )
 }
 
@@ -340,6 +351,42 @@ def trace_promotion_round(
     return log, jaxpr
 
 
+def trace_weighted_round(
+    n: int, cap: int, mesh,
+    kernel_backend: str = "lax",
+) -> Tuple[List[Traffic], Any]:
+    """Trace the weighted h-index fixpoint under shard_map — the one
+    round shape of BOTH weighted maintenance phases (removal runs it
+    from the current cores, promotion from ``core + W``; the traced
+    collective structure is identical, so one budget entry covers
+    both). The in-round histogram counts one layout completion per
+    bisection probe: the inner bisection ``while`` nests inside the
+    outer fixpoint ``while``, and both bodies trace exactly once."""
+    axis = EDGE_AXIS
+    layout = make_layout("replicated", n, axis)
+
+    def kernel(src, dst, valid, ew, core):
+        return weighted_core_fixpoint_pass(
+            src, dst, valid, ew, core, n, layout=layout,
+            kernel_backend=kernel_backend,
+        )
+
+    sm = shard_map(
+        kernel, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P()),
+        out_specs=(P(), P(), P()),
+        check_vma=False,
+    )
+    src = jnp.zeros(cap, jnp.int32)
+    dst = jnp.ones(cap, jnp.int32)
+    valid = jnp.zeros(cap, bool)
+    ew = jnp.ones(cap, jnp.int32)
+    core = jnp.zeros(n, jnp.int32)
+    with record_traffic() as log:
+        jaxpr = jax.make_jaxpr(sm)(src, dst, valid, ew, core)
+    return log, jaxpr
+
+
 @dataclasses.dataclass
 class TracedEngine:
     """Everything the audit rules inspect for one engine config."""
@@ -356,18 +403,28 @@ class TracedEngine:
     sizes: Dict[str, int]           # env for budget recv_bytes formulas
 
 
-def _batch_args(params: AuditParams, n_state: int):
+def _batch_args(params: AuditParams, n_state: int,
+                weighted: bool = False):
     b = jnp.zeros(params.lanes, jnp.int32)
     ok = jnp.zeros(params.lanes, bool)
-    return (
+    state = (
         jnp.zeros(params.capacity, jnp.int32),
         jnp.zeros(params.capacity, jnp.int32),
         jnp.zeros(params.capacity, bool),
+    )
+    if weighted:
+        # the weighted engines add the per-slot weight column to the
+        # donated state and a replicated per-lane weight to the batch
+        state += (jnp.ones(params.capacity, jnp.int32),)
+    state += (
         jnp.zeros(n_state, jnp.int32),
         jnp.zeros(n_state, jnp.int64),
         jnp.int32(0),
-        b, b, ok, b, b, ok,
     )
+    if weighted:
+        return state + (b, b, jnp.ones(params.lanes, jnp.int32), ok,
+                        b, b, ok)
+    return state + (b, b, ok, b, b, ok)
 
 
 def trace_engine(name: str,
@@ -466,14 +523,24 @@ def trace_engine(name: str,
         )
         donated["remove_batch"] = ()
     elif cfg.engine == "unified":
-        args = _batch_args(params, n)
-        programs["apply_batch"] = jax.make_jaxpr(
-            lambda *a: apply_batch(*a, n, params.n_levels, window)
-        )(*args)
-        lowered["apply_batch"] = apply_batch.lower(
-            *args, n=n, n_levels=params.n_levels, active_cap=window
-        )
-        donated["apply_batch"] = DONATED_STATE_ARGS
+        args = _batch_args(params, n, weighted=cfg.weighted)
+        if cfg.weighted:
+            programs["apply_batch"] = jax.make_jaxpr(
+                lambda *a: apply_batch_weighted(*a, n, params.n_levels,
+                                                window)
+            )(*args)
+            lowered["apply_batch"] = apply_batch_weighted.lower(
+                *args, n=n, n_levels=params.n_levels, active_cap=window
+            )
+            donated["apply_batch"] = WEIGHTED_DONATED_STATE_ARGS
+        else:
+            programs["apply_batch"] = jax.make_jaxpr(
+                lambda *a: apply_batch(*a, n, params.n_levels, window)
+            )(*args)
+            lowered["apply_batch"] = apply_batch.lower(
+                *args, n=n, n_levels=params.n_levels, active_cap=window
+            )
+            donated["apply_batch"] = DONATED_STATE_ARGS
     else:
         fn = make_sharded_apply(
             mesh, n, params.n_levels, axis=EDGE_AXIS,
@@ -483,24 +550,34 @@ def trace_engine(name: str,
             frontier_exchange=cfg.frontier_exchange,
             frontier_cap=fcap,
             kernel_backend=cfg.kernel_backend,
+            weighted=cfg.weighted,
         )
         n_state = (n_owned * d_v
                    if cfg.vertex_sharding in ("range", "halo") else n)
-        args = _batch_args(params, n_state)
+        args = _batch_args(params, n_state, weighted=cfg.weighted)
         programs["apply_batch"] = jax.make_jaxpr(fn)(*args)
         lowered["apply_batch"] = fn.lower(*args)
-        donated["apply_batch"] = DONATED_STATE_ARGS
-        round_fcap = fcap if cfg.frontier_exchange == "sparse" else None
-        rounds["removal_round"] = trace_removal_round(
-            cfg.vertex_sharding, n, cap, mesh, round_fcap,
-            window=window, lanes=lanes,
-            kernel_backend=cfg.kernel_backend,
-        )
-        rounds["promotion_round"] = trace_promotion_round(
-            cfg.vertex_sharding, n, cap, mesh, round_fcap, lanes,
-            window=window,
-            kernel_backend=cfg.kernel_backend,
-        )
+        donated["apply_batch"] = (WEIGHTED_DONATED_STATE_ARGS
+                                  if cfg.weighted else DONATED_STATE_ARGS)
+        if cfg.weighted:
+            # one round shape serves both weighted phases (the
+            # promotion fixpoint is the same program from core + W)
+            rounds["weighted_round"] = trace_weighted_round(
+                n, cap, mesh, kernel_backend=cfg.kernel_backend,
+            )
+        else:
+            round_fcap = (fcap if cfg.frontier_exchange == "sparse"
+                          else None)
+            rounds["removal_round"] = trace_removal_round(
+                cfg.vertex_sharding, n, cap, mesh, round_fcap,
+                window=window, lanes=lanes,
+                kernel_backend=cfg.kernel_backend,
+            )
+            rounds["promotion_round"] = trace_promotion_round(
+                cfg.vertex_sharding, n, cap, mesh, round_fcap, lanes,
+                window=window,
+                kernel_backend=cfg.kernel_backend,
+            )
 
     n_pad = (n_owned * d_v
              if cfg.vertex_sharding in ("range", "halo") else n)

@@ -81,12 +81,13 @@ import numpy as np
 
 from ..graph.csr import CSRGraph, build_csr
 from .decomposition import peel_decomposition, rank_to_labels
-from .engine import BatchStats, apply_batch
+from .engine import BatchStats, apply_batch, apply_batch_weighted
 from .graph_ops import KERNEL_BACKENDS
 from .insert import InsertStats, insert_batch
 from .oracle import bz_core_decomposition
 from .order import needs_renumber, renumber
-from .remove import RemoveStats, remove_batch
+from .remove import (RemoveStats, remove_batch,
+                     weighted_core_fixpoint_pass)
 from .sharded import make_sharded_apply
 
 EDGE_AXIS = "data"  # mesh axis the sharded engine shards edge slots over
@@ -264,6 +265,13 @@ class CoreMaintainer:
     #                             per batch as a static pow2 bucket
     kernel_backend: str = "lax"  # "lax" | "pallas" per-round stat kernels
     #                              (kernels/coremaint.py; device engines only)
+    weighted: bool = False      # weight-generalized engine: the slot table
+    #                             carries a per-edge integer weight column
+    #                             and both maintenance phases run the
+    #                             weighted h-index bisection fixpoint
+    #                             (docs/DESIGN.md §4.5); device engines only
+    w: Optional[jax.Array] = None  # [capacity] per-slot edge weights
+    #                                (weighted=True only; None -> all-ones)
     validate: bool = True       # raise on out-of-range endpoints (else mask)
     last_insert_stats: Optional[InsertStats] = None
     last_remove_stats: Optional[RemoveStats] = None
@@ -369,6 +377,29 @@ class CoreMaintainer:
                 "('unified' | 'sharded') — the host path runs the seed "
                 "two-program kernels and would silently ignore it"
             )
+        if self.weighted:
+            if self.engine == "host":
+                raise ValueError(
+                    "weighted=True needs a device engine ('unified' | "
+                    "'sharded') — the seed host path runs the unit-count "
+                    "order-maintenance kernels and has no weight column"
+                )
+            if self.w is None:
+                # all-ones weight column: the weighted engine on unit
+                # weights computes exactly the classic coreness
+                self.w = jnp.ones(self.capacity, dtype=jnp.int32)
+            else:
+                self.w = jnp.asarray(self.w, dtype=jnp.int32)
+                if self.w.shape != (self.capacity,):
+                    raise ValueError(
+                        f"w has shape {self.w.shape}, expected the slot "
+                        f"table shape ({self.capacity},)"
+                    )
+        elif self.w is not None:
+            raise ValueError(
+                "w= (per-slot edge weights) needs weighted=True — the "
+                "unweighted engines would silently ignore the column"
+            )
         _require_x64()
         if self.live_ub < 0 or self.hwm_ub < 0:
             # exact initial bounds from the slot table (construction is
@@ -459,6 +490,8 @@ class CoreMaintainer:
         self.src = jax.device_put(jnp.asarray(self.src), esh)
         self.dst = jax.device_put(jnp.asarray(self.dst), esh)
         self.valid = jax.device_put(jnp.asarray(self.valid), esh)
+        if self.weighted:
+            self.w = jax.device_put(jnp.asarray(self.w), esh)
         self.core = jax.device_put(jnp.asarray(self.core), vsh)
         self.label = jax.device_put(jnp.asarray(self.label), vsh)
         self.n_edges = jax.device_put(
@@ -481,6 +514,7 @@ class CoreMaintainer:
                 frontier_exchange=self.frontier_exchange,
                 frontier_cap=frontier_cap,
                 kernel_backend=self.kernel_backend,
+                weighted=self.weighted,
             )
             self._sharded_fns[key] = fn
         return fn
@@ -555,14 +589,31 @@ class CoreMaintainer:
         frontier_exchange: str = "bitmask",
         frontier_cap: int = 0,
         kernel_backend: str = "lax",
+        weighted: bool = False,
+        weights=None,
         validate: bool = True,
     ) -> "CoreMaintainer":
+        """Build a maintainer from a static graph.
+
+        ``weighted=True`` seeds the weight-generalized engine:
+        ``weights`` aligns row-for-row with ``g.edge_array()`` (omitted
+        = all ones), and the initial cores are the exact weighted
+        coreness — computed on device by the same decrease-only
+        weighted h-index fixpoint the engines run, started from the
+        weighted-degree upper bound (``init`` is bypassed; the
+        unweighted decompositions do not apply). Initial k-order labels
+        are the ``(core, vertex id)`` lexicographic ranks — weighted
+        maintenance freezes labels through the fixpoints and renumbers
+        once per batch, so any deterministic unique assignment agrees
+        across every engine configuration."""
         _require_x64()  # before any label math that would truncate quietly
         edges = g.edge_array()
         m = edges.shape[0]
         capacity = capacity or max(16, 2 * m)
         if capacity <= m:
             raise ValueError("capacity must exceed edge count")
+        if weights is not None and not weighted:
+            raise ValueError("weights= needs weighted=True")
         src = np.zeros(capacity, dtype=np.int32)
         dst = np.zeros(capacity, dtype=np.int32)
         val = np.zeros(capacity, dtype=bool)
@@ -573,6 +624,63 @@ class CoreMaintainer:
             (int(a), int(b)): i for i, (a, b) in enumerate(edges)
         }
         n_levels = g.n + 2
+        if weighted:
+            if weights is None:
+                wv = np.ones(m, dtype=np.int64)
+            else:
+                wv = np.asarray(weights, dtype=np.int64).reshape(-1)
+                if wv.shape[0] != m:
+                    raise ValueError(
+                        f"weights have length {wv.shape[0]} but the "
+                        f"graph has {m} edges"
+                    )
+                if wv.size and (wv < 1).any():
+                    raise ValueError(
+                        "edge weights must be positive integers"
+                    )
+            wcol = np.zeros(capacity, dtype=np.int32)
+            wcol[:m] = wv.astype(np.int32)
+            # weighted-degree upper bound -> exact weighted cores via
+            # the engines' own decrease-only fixpoint (lax; backend
+            # choice cannot change the integer result)
+            deg_w = np.zeros(g.n, dtype=np.int64)
+            np.add.at(deg_w, edges[:, 0], wv)
+            np.add.at(deg_w, edges[:, 1], wv)
+            core, _, _ = weighted_core_fixpoint_pass(
+                jnp.asarray(src), jnp.asarray(dst), jnp.asarray(val),
+                jnp.asarray(wcol), jnp.asarray(deg_w.astype(np.int32)),
+                g.n,
+            )
+            core_np = np.asarray(core)
+            order = np.lexsort((np.arange(g.n), core_np))
+            rank = np.zeros(g.n, dtype=np.int32)
+            rank[order] = np.arange(g.n, dtype=np.int32)
+            label = rank_to_labels(jnp.asarray(rank))
+            return cls(
+                n=g.n,
+                capacity=capacity,
+                src=jnp.asarray(src),
+                dst=jnp.asarray(dst),
+                valid=jnp.asarray(val),
+                n_edges=jnp.asarray(m, dtype=jnp.int32),
+                core=core,
+                label=label,
+                n_levels=n_levels,
+                engine=engine,
+                mesh=mesh,
+                vertex_sharding=vertex_sharding,
+                mesh_shape=mesh_shape,
+                freelist=freelist,
+                frontier_exchange=frontier_exchange,
+                frontier_cap=frontier_cap,
+                kernel_backend=kernel_backend,
+                weighted=True,
+                w=jnp.asarray(wcol),
+                validate=validate,
+                slot_cache=edge_slot,
+                live_ub=m,
+                hwm_ub=m,
+            )
         if init == "host-bz":
             adj = [set(g.neighbors(v).tolist()) for v in range(g.n)]
             core_np, order = bz_core_decomposition(g.n, adj)
@@ -651,14 +759,31 @@ class CoreMaintainer:
         return len(self.edge_slot)
 
     # -- validation ----------------------------------------------------------
-    def _validated(self, edges, what: str) -> np.ndarray:
+    def _validated(self, edges, what: str, weights=None):
         """Normalize an edge batch and enforce endpoint bounds.
 
         With ``validate`` (the default) an out-of-range endpoint raises;
         otherwise the offending rows are masked out before they can reach
         the slot table or the stat scatters (whose index clamping would
-        silently alias them onto vertex n-1)."""
+        silently alias them onto vertex n-1). When ``weights`` is given
+        it must align row-for-row with ``edges``; weights always
+        validate strictly (positive integers) and masked rows drop
+        their weight in lockstep. Returns ``edges`` alone, or
+        ``(edges, weights)`` when weights were passed."""
         edges = _as_edge_array(edges)
+        if weights is not None:
+            weights = np.asarray(weights, dtype=np.int64).reshape(-1)
+            if weights.shape[0] != edges.shape[0]:
+                raise ValueError(
+                    f"{what} weights have length {weights.shape[0]} but "
+                    f"the edge batch has {edges.shape[0]} rows"
+                )
+            if weights.size and (weights < 1).any():
+                bad_w = weights[weights < 1][0]
+                raise ValueError(
+                    f"{what} edge weights must be positive integers, "
+                    f"got {int(bad_w)}"
+                )
         if edges.size:
             bad = ((edges < 0) | (edges >= self.n)).any(axis=1)
             if bad.any():
@@ -669,6 +794,10 @@ class CoreMaintainer:
                         f"n={self.n} (pass validate=False to mask instead)"
                     )
                 edges = edges[~bad]
+                if weights is not None:
+                    weights = weights[~bad]
+        if weights is not None:
+            return edges, weights
         return edges
 
     # -- edits ----------------------------------------------------------------
@@ -676,19 +805,38 @@ class CoreMaintainer:
         self,
         insert_edges=None,
         remove_edges=None,
+        insert_weights=None,
     ) -> BatchStats:
         """Apply one mixed batch (removals first, then insertions) in a
         single compiled device program — no host dedup, no per-batch
         device->host syncs. Under ``engine="host"`` the batch is served by
         the seed two-call path instead (stats composed from both calls);
         ``engine="sharded"`` runs the same program with the slot table
-        sharded across the mesh."""
+        sharded across the mesh.
+
+        ``insert_weights`` (weighted maintainers only) aligns
+        row-for-row with ``insert_edges``; omitted means weight 1 per
+        edge. Duplicate rows keep the FIRST occurrence's weight, and
+        inserting an already-live edge is a no-op that keeps the stored
+        weight — remove + insert updates a weight."""
         _require_x64()
+        if insert_weights is not None and not self.weighted:
+            raise ValueError(
+                "insert_weights= needs weighted=True — the unweighted "
+                "engines would silently drop the weights"
+            )
         # validate BOTH lists before any engine touches state, so a
         # rejected batch is rejected atomically (the host path applies
         # removals first and must not commit them before the insert list
         # has passed validation)
-        ins = self._validated(insert_edges, "insert")
+        if self.weighted:
+            ins_np = _as_edge_array(insert_edges)
+            if insert_weights is None:
+                insert_weights = np.ones(ins_np.shape[0], dtype=np.int64)
+            ins, ins_wts = self._validated(insert_edges, "insert",
+                                           weights=insert_weights)
+        else:
+            ins = self._validated(insert_edges, "insert")
         rm = self._validated(remove_edges, "remove")
         if self.engine == "host":
             n_live0 = self.live_edges
@@ -730,20 +878,41 @@ class CoreMaintainer:
         rv = _pad_pow2(rm[:, 1], 0)
         rok = np.zeros(len(ru), dtype=bool)
         rok[: rm.shape[0]] = True
-        args = (
-            self.src,
-            self.dst,
-            self.valid,
-            self.core,
-            self.label,
-            self.n_edges,
-            jnp.asarray(iu),
-            jnp.asarray(iv),
-            jnp.asarray(iok),
-            jnp.asarray(ru),
-            jnp.asarray(rv),
-            jnp.asarray(rok),
-        )
+        if self.weighted:
+            # padded lanes carry weight 1, but iok=False keeps them out
+            # of the slot writes and the total-weight promotion bound
+            iw = _pad_pow2(ins_wts.astype(np.int32), 1)
+            args = (
+                self.src,
+                self.dst,
+                self.valid,
+                self.w,
+                self.core,
+                self.label,
+                self.n_edges,
+                jnp.asarray(iu),
+                jnp.asarray(iv),
+                jnp.asarray(iw),
+                jnp.asarray(iok),
+                jnp.asarray(ru),
+                jnp.asarray(rv),
+                jnp.asarray(rok),
+            )
+        else:
+            args = (
+                self.src,
+                self.dst,
+                self.valid,
+                self.core,
+                self.label,
+                self.n_edges,
+                jnp.asarray(iu),
+                jnp.asarray(iv),
+                jnp.asarray(iok),
+                jnp.asarray(ru),
+                jnp.asarray(rv),
+                jnp.asarray(rok),
+            )
         # static pow2 bound on the per-shard slot high-water mark incl.
         # this batch: every edge pass runs over this per-shard slot
         # prefix only, and (because the free-list allocator fills the
@@ -772,18 +941,34 @@ class CoreMaintainer:
                 # off the padded batch size (0 = exchange off)
                 fcap = self._frontier_bucket(max(len(iu), len(ru)))
                 out = self._get_sharded_fn(window, fcap)(*args)
+            elif self.weighted:
+                out = apply_batch_weighted(
+                    *args, self.n, self.n_levels, window,
+                    kernel_backend=self.kernel_backend)
             else:
                 out = apply_batch(*args, self.n, self.n_levels, window,
                                   kernel_backend=self.kernel_backend)
-        (
-            self.src,
-            self.dst,
-            self.valid,
-            self.core,
-            self.label,
-            self.n_edges,
-            stats,
-        ) = out
+        if self.weighted:
+            (
+                self.src,
+                self.dst,
+                self.valid,
+                self.w,
+                self.core,
+                self.label,
+                self.n_edges,
+                stats,
+            ) = out
+        else:
+            (
+                self.src,
+                self.dst,
+                self.valid,
+                self.core,
+                self.label,
+                self.n_edges,
+                stats,
+            ) = out
         # monotone sync-free bounds: each insert can raise the densest
         # shard's high-water mark by at most one (holes fill first), and
         # the live count by at most one; removals only help. The exact
@@ -799,10 +984,15 @@ class CoreMaintainer:
             self._frontier_obs.append(stats.max_frontier)
         return stats
 
-    def insert_edges(self, edges: np.ndarray) -> InsertStats:
+    def insert_edges(self, edges: np.ndarray,
+                     weights: Optional[np.ndarray] = None) -> InsertStats:
         if self.engine == "host":
+            if weights is not None:
+                raise ValueError(
+                    "weights= needs weighted=True (a device engine)"
+                )
             return self._insert_edges_host(edges)
-        st = self.apply_batch(insert_edges=edges)
+        st = self.apply_batch(insert_edges=edges, insert_weights=weights)
         self.last_insert_stats = InsertStats(
             rounds=st.insert_rounds,
             n_promoted=st.n_promoted,
@@ -981,6 +1171,11 @@ class CoreMaintainer:
         self.src = jnp.asarray(new_src)
         self.dst = jnp.asarray(new_dst)
         self.valid = jnp.asarray(new_val)
+        if self.weighted:
+            wcol = np.asarray(self.w)
+            new_w = np.zeros(new_cap, dtype=np.int32)
+            new_w[tgt] = wcol[live]
+            self.w = jnp.asarray(new_w)
         self.n_edges = jnp.asarray(m, dtype=jnp.int32)
         self.capacity = new_cap
         self.live_ub = m
@@ -1021,6 +1216,8 @@ class CoreMaintainer:
         self.src = ext(self.src, 0)
         self.dst = ext(self.dst, 0)
         self.valid = ext(self.valid, False)
+        if self.weighted:
+            self.w = ext(self.w, 0)
         self.capacity = new_cap
 
     # -- persistence -------------------------------------------------------------
@@ -1032,9 +1229,10 @@ class CoreMaintainer:
         planning bounds from it, shard-count independent). Range-sharded
         vertex state is saved UNPADDED (``[:n]``), so the checkpoint is
         also vertex-shard-count independent: a state saved range-sharded
-        over 8 devices reloads replicated on 1 and vice versa."""
-        np.savez_compressed(
-            path,
+        over 8 devices reloads replicated on 1 and vice versa.
+        Weighted maintainers add the per-slot weight column ``w``
+        (aligned with ``src``/``dst``/``valid``)."""
+        payload = dict(
             n=self.n,
             capacity=self.capacity,
             src=np.asarray(self.src),
@@ -1044,6 +1242,9 @@ class CoreMaintainer:
             core=self.cores(),
             label=self.labels(),
         )
+        if self.weighted:
+            payload["w"] = np.asarray(self.w)
+        np.savez_compressed(path, **payload)
 
     @classmethod
     def load(
@@ -1057,9 +1258,16 @@ class CoreMaintainer:
         frontier_exchange: str = "bitmask",
         frontier_cap: int = 0,
         kernel_backend: str = "lax",
+        weighted: bool = False,
         validate: bool = True,
     ) -> "CoreMaintainer":
         z = np.load(path)
+        w = None
+        if weighted:
+            # checkpoints from an unweighted maintainer carry no weight
+            # column; loading one weighted adopts unit weights (exactly
+            # the classic-coreness specialization)
+            w = jnp.asarray(z["w"]) if "w" in z.files else None
         return cls(
             n=int(z["n"]),
             capacity=int(z["capacity"]),
@@ -1078,6 +1286,8 @@ class CoreMaintainer:
             frontier_exchange=frontier_exchange,
             frontier_cap=frontier_cap,
             kernel_backend=kernel_backend,
+            weighted=weighted,
+            w=w,
             validate=validate,
             slot_cache=None,  # lazily rebuilt from the live table
             # live_ub / hwm_ub default to -1: __post_init__ recomputes

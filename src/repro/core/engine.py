@@ -45,9 +45,20 @@ import jax
 import jax.numpy as jnp
 
 from . import graph_ops as G
-from .insert import freelist_alloc, promotion_fixpoint, promotion_fixpoint_halo
+from .insert import (
+    freelist_alloc,
+    promotion_fixpoint,
+    promotion_fixpoint_halo,
+    weighted_promotion_fixpoint,
+    weighted_promotion_fixpoint_halo,
+)
 from .order import maybe_renumber, maybe_renumber_ring
-from .remove import removal_fixpoint, removal_fixpoint_halo
+from .remove import (
+    removal_fixpoint,
+    removal_fixpoint_halo,
+    weighted_core_fixpoint_pass,
+    weighted_core_fixpoint_pass_halo,
+)
 from .vertex_layout import (
     HaloShardedVertices,
     ReplicatedVertices,
@@ -64,6 +75,10 @@ Array = jax.Array
 # (core/sharded.py), and the ground truth the donation-verifier audit
 # rule (repro.analysis) checks the lowered computations against.
 DONATED_STATE_ARGS = (0, 1, 2, 3, 4, 5)
+
+# weighted twin: the slot table carries a weight column at position 3
+# (src, dst, valid, w, core, label, n_edges), all donated
+WEIGHTED_DONATED_STATE_ARGS = (0, 1, 2, 3, 4, 5, 6)
 
 
 class BatchStats(NamedTuple):
@@ -158,12 +173,28 @@ def batch_program(
     layout: VertexLayout | None = None,
     freelist: str = "interleaved",
     kernel_backend: str = "lax",
-) -> Tuple[Array, Array, Array, Array, Array, Array, BatchStats]:
+    w: Array | None = None,
+    ins_w: Array | None = None,
+):
     """The ONE mixed-batch program body, shared verbatim by the unified
     engine (``axis=None``: the table arrays are the global slot table)
     and the sharded engines (``axis`` = mesh axis: the table arrays are
     this device's shard_map-local shard). Sharing the body is what
     guarantees the engines cannot drift.
+
+    ``w`` (the slot table's weight column) and ``ins_w`` (per-lane
+    insert weights) switch the program into WEIGHTED mode, statically:
+    with ``w=None`` (the default) no weight array exists anywhere in the
+    traced program, so the unweighted jaxpr — and with it the committed
+    collective/memory/donation manifests — stays byte-identical to the
+    pre-weighted engine. With ``w`` both fixpoint phases run the
+    decrease-only weighted h-index fixpoint (removal from the current
+    cores, promotion from ``core + total batch weight`` —
+    remove.weighted_core_fixpoint_pass / docs/DESIGN.md §4.5), labels
+    stay frozen through the fixpoints, and ONE forced bucket-free
+    renumber per batch re-canonicalizes them whenever any core moved.
+    The weighted return is the 8-tuple ``(src, dst, valid, w, core,
+    label, n_edges, stats)``.
 
     The axis parameter changes exactly three things:
 
@@ -221,10 +252,17 @@ def batch_program(
     n_removed = allsum(jnp.sum(rm_mask, dtype=jnp.int32))
 
     core_pre_rm = core
-    core, label, rm_rounds, hi, dout_same, rm_fmax = removal_fixpoint(
-        src, dst, valid, core, label, n, n_levels, layout=layout,
-        kernel_backend=kernel_backend,
-    )
+    if w is not None:
+        core, rm_rounds, rm_fmax = weighted_core_fixpoint_pass(
+            src, dst, valid, w, core, n, layout=layout,
+            kernel_backend=kernel_backend,
+        )
+        hi = dout_same = layout.zeros()
+    else:
+        core, label, rm_rounds, hi, dout_same, rm_fmax = removal_fixpoint(
+            src, dst, valid, core, label, n, n_levels, layout=layout,
+            kernel_backend=kernel_backend,
+        )
     n_dropped = jnp.sum(core != core_pre_rm, dtype=jnp.int32)
 
     # ---- 2. insert dedup + membership against the post-removal table ----
@@ -249,33 +287,58 @@ def batch_program(
     src = src.at[lpos].set(ilo.astype(src.dtype), mode="drop")
     dst = dst.at[lpos].set(ihi.astype(dst.dtype), mode="drop")
     valid = valid.at[lpos].set(True, mode="drop")
+    if w is not None:
+        # the weight column rides the same allocation: dedup's stable
+        # argsort keeps the FIRST occurrence of an in-batch duplicate,
+        # so that lane's weight is the one written; re-inserting a live
+        # edge was masked by the membership test above (old weight kept)
+        w = w.at[lpos].set(ins_w.astype(w.dtype), mode="drop")
     n_inserted = jnp.sum(iok, dtype=jnp.int32)
     n_recycled = allsum(jnp.sum(lpos < hwm0, dtype=jnp.int32))
     # n_edges is the LIVE edge count (not a bump pointer): removals and
     # insertions both land in it, so it tracks the paper's workload size
     n_edges = n_edges - n_removed + n_inserted
 
-    # O(batch) delta keeps the shared (hi, dout_same) statistics exact for
-    # the table with the new edges — same per-edge predicate as the full
-    # passes (graph_ops.hi_dout_indicators); the batch is replicated under
-    # sharding, so the delta needs no collective (a range-sharded layout
-    # scatters each row into its owner's slice and drops the rest OOB)
-    hi_u, hi_v, do_u, do_v = G.hi_dout_indicators(core, label, ilo, ihi, iok)
-    hi = layout.add_at(hi, ilo, hi_u.astype(jnp.int32))
-    hi = layout.add_at(hi, ihi, hi_v.astype(jnp.int32))
-    dout_same = layout.add_at(dout_same, ilo, do_u.astype(jnp.int32))
-    dout_same = layout.add_at(dout_same, ihi, do_v.astype(jnp.int32))
-
     core_pre_ins = core
-    core, label, ins_rounds, v_plus, ins_fmax = promotion_fixpoint(
-        src, dst, valid, core, label, ilo, ihi, iok,
-        hi, dout_same, n, n_levels, layout=layout,
-        kernel_backend=kernel_backend,
-    )
+    if w is not None:
+        # total inserted batch weight: iok is a replicated verdict under
+        # sharding (freelist_alloc narrows it from all-gathered counts),
+        # so the sum needs no collective
+        total_w = jnp.sum(jnp.where(iok, ins_w, 0), dtype=jnp.int32)
+        core, ins_rounds, ins_fmax = weighted_promotion_fixpoint(
+            src, dst, valid, w, core, total_w, n, layout=layout,
+            kernel_backend=kernel_backend,
+        )
+        v_plus = core != core_pre_ins
+    else:
+        # O(batch) delta keeps the shared (hi, dout_same) statistics
+        # exact for the table with the new edges — same per-edge
+        # predicate as the full passes (graph_ops.hi_dout_indicators);
+        # the batch is replicated under sharding, so the delta needs no
+        # collective (a range-sharded layout scatters each row into its
+        # owner's slice and drops the rest OOB)
+        hi_u, hi_v, do_u, do_v = G.hi_dout_indicators(
+            core, label, ilo, ihi, iok
+        )
+        hi = layout.add_at(hi, ilo, hi_u.astype(jnp.int32))
+        hi = layout.add_at(hi, ihi, hi_v.astype(jnp.int32))
+        dout_same = layout.add_at(dout_same, ilo, do_u.astype(jnp.int32))
+        dout_same = layout.add_at(dout_same, ihi, do_v.astype(jnp.int32))
+
+        core, label, ins_rounds, v_plus, ins_fmax = promotion_fixpoint(
+            src, dst, valid, core, label, ilo, ihi, iok,
+            hi, dout_same, n, n_levels, layout=layout,
+            kernel_backend=kernel_backend,
+        )
     n_promoted = jnp.sum(core != core_pre_ins, dtype=jnp.int32)
 
     # ---- 4. in-program renumber gate (no host sync) ----------------------
-    label, renumbered = maybe_renumber(core, label)
+    # weighted mode froze the labels through both fixpoints (no bucketed
+    # place_block — weighted levels are unbounded in maxW), so it forces
+    # ONE bucket-free relabel whenever any core moved; force=None keeps
+    # the unweighted gate byte-identical
+    force = ((n_dropped > 0) | (n_promoted > 0)) if w is not None else None
+    label, renumbered = maybe_renumber(core, label, force=force)
 
     stats = BatchStats(
         n_inserted=n_inserted,
@@ -297,6 +360,8 @@ def batch_program(
         # refresh; overflow rounds exist only in the halo program below
         n_overflow=jnp.int32(0),
     )
+    if w is not None:
+        return src, dst, valid, w, core, label, n_edges, stats
     return src, dst, valid, core, label, n_edges, stats
 
 
@@ -366,7 +431,9 @@ def batch_program_halo(
     layout: HaloShardedVertices,
     freelist: str = "interleaved",
     kernel_backend: str = "lax",
-) -> Tuple[Array, Array, Array, Array, Array, Array, BatchStats]:
+    w: Array | None = None,
+    ins_w: Array | None = None,
+):
     """``batch_program`` for halo-sharded vertex state — the same four
     phases over the same shard-local slot table, with ``core``/``label``
     as OWNED ``[n_owned]`` slices and every edge pass indexing a bounded
@@ -409,16 +476,26 @@ def batch_program_halo(
     halo_ids = build_halo_ids(layout, src, dst, ins_u, ins_v, rm_u, rm_v, n)
     session = layout.bind(halo_ids)
     core_h = session.gather_values(core)
-    label_h = session.gather_values(label)
+    # weighted mode freezes labels through both fixpoints — no edge pass
+    # ever reads a halo label, so the label regather is skipped entirely
+    label_h = None if w is not None else session.gather_values(label)
     src_h = session.locate(src)
     dst_h = session.locate(dst)
 
     core_pre_rm = core
-    (core, label, core_h, label_h, rm_rounds, hi, dout_same, rm_fmax,
-     rm_ovf) = removal_fixpoint_halo(
-        src_h, dst_h, valid, core, label, core_h, label_h, session,
-        n_levels, kernel_backend=kernel_backend,
-    )
+    if w is not None:
+        core, core_h, rm_rounds, rm_fmax = weighted_core_fixpoint_pass_halo(
+            src_h, dst_h, valid, w, core, core_h, session,
+            kernel_backend=kernel_backend,
+        )
+        hi = dout_same = session.zeros()
+        rm_ovf = jnp.int32(0)
+    else:
+        (core, label, core_h, label_h, rm_rounds, hi, dout_same, rm_fmax,
+         rm_ovf) = removal_fixpoint_halo(
+            src_h, dst_h, valid, core, label, core_h, label_h, session,
+            n_levels, kernel_backend=kernel_backend,
+        )
     n_dropped = vsum(jnp.sum(core != core_pre_rm, dtype=jnp.int32))
 
     # ---- 2. insert dedup + membership against the post-removal table ----
@@ -434,6 +511,8 @@ def batch_program_halo(
     src = src.at[lpos].set(ilo.astype(src.dtype), mode="drop")
     dst = dst.at[lpos].set(ihi.astype(dst.dtype), mode="drop")
     valid = valid.at[lpos].set(True, mode="drop")
+    if w is not None:
+        w = w.at[lpos].set(ins_w.astype(w.dtype), mode="drop")
     n_inserted = jnp.sum(iok, dtype=jnp.int32)
     n_recycled = allsum(jnp.sum(lpos < hwm0, dtype=jnp.int32))
     n_edges = n_edges - n_removed + n_inserted
@@ -443,32 +522,44 @@ def batch_program_halo(
     # compute, no new gather
     src_h = session.locate(src)
     dst_h = session.locate(dst)
-    u_pos = session.locate(ilo)
-    v_pos = session.locate(ihi)
-
-    # O(batch) delta on the shared (hi, dout_same): the per-edge
-    # predicate reads lane endpoint values from the halo (replicated
-    # verdicts), the scatter lands in each owner's slice and drops OOB
-    hi_u, hi_v, do_u, do_v = G.hi_dout_indicators(
-        core_h, label_h, u_pos, v_pos, iok
-    )
-    hi = layout.add_at(hi, ilo, hi_u.astype(jnp.int32))
-    hi = layout.add_at(hi, ihi, hi_v.astype(jnp.int32))
-    dout_same = layout.add_at(dout_same, ilo, do_u.astype(jnp.int32))
-    dout_same = layout.add_at(dout_same, ihi, do_v.astype(jnp.int32))
 
     core_pre_ins = core
-    (core, label, core_h, label_h, ins_rounds, v_plus, ins_fmax,
-     ins_ovf) = promotion_fixpoint_halo(
-        src_h, dst_h, valid, core, label, core_h, label_h,
-        ilo, ihi, u_pos, v_pos, iok, hi, dout_same, session, n_levels,
-        kernel_backend=kernel_backend,
-    )
+    if w is not None:
+        total_w = jnp.sum(jnp.where(iok, ins_w, 0), dtype=jnp.int32)
+        (core, core_h, ins_rounds,
+         ins_fmax) = weighted_promotion_fixpoint_halo(
+            src_h, dst_h, valid, w, core, core_h, total_w, session,
+            kernel_backend=kernel_backend,
+        )
+        v_plus = core != core_pre_ins
+        ins_ovf = jnp.int32(0)
+    else:
+        u_pos = session.locate(ilo)
+        v_pos = session.locate(ihi)
+
+        # O(batch) delta on the shared (hi, dout_same): the per-edge
+        # predicate reads lane endpoint values from the halo (replicated
+        # verdicts), the scatter lands in each owner's slice and drops OOB
+        hi_u, hi_v, do_u, do_v = G.hi_dout_indicators(
+            core_h, label_h, u_pos, v_pos, iok
+        )
+        hi = layout.add_at(hi, ilo, hi_u.astype(jnp.int32))
+        hi = layout.add_at(hi, ihi, hi_v.astype(jnp.int32))
+        dout_same = layout.add_at(dout_same, ilo, do_u.astype(jnp.int32))
+        dout_same = layout.add_at(dout_same, ihi, do_v.astype(jnp.int32))
+
+        (core, label, core_h, label_h, ins_rounds, v_plus, ins_fmax,
+         ins_ovf) = promotion_fixpoint_halo(
+            src_h, dst_h, valid, core, label, core_h, label_h,
+            ilo, ihi, u_pos, v_pos, iok, hi, dout_same, session, n_levels,
+            kernel_backend=kernel_backend,
+        )
     n_promoted = vsum(jnp.sum(core != core_pre_ins, dtype=jnp.int32))
 
     # ---- 4. in-program renumber gate (ring relabel over owner axis) ------
+    force = ((n_dropped > 0) | (n_promoted > 0)) if w is not None else None
     label, renumbered = maybe_renumber_ring(
-        core, label, layout.axis, layout.n_shards, note=_note
+        core, label, layout.axis, layout.n_shards, note=_note, force=force
     )
 
     stats = BatchStats(
@@ -490,6 +581,8 @@ def batch_program_halo(
         # the local sum IS the global round count
         n_overflow=rm_ovf + ins_ovf,
     )
+    if w is not None:
+        return src, dst, valid, w, core, label, n_edges, stats
     return src, dst, valid, core, label, n_edges, stats
 
 
@@ -544,3 +637,48 @@ def apply_batch(
     dst = jnp.concatenate([dst, full_dst[active_cap:]])
     valid = jnp.concatenate([valid, full_valid[active_cap:]])
     return src, dst, valid, core, label, n_edges, stats
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n", "n_levels", "active_cap", "kernel_backend"),
+    donate_argnums=WEIGHTED_DONATED_STATE_ARGS,
+)
+def apply_batch_weighted(
+    src: Array,
+    dst: Array,
+    valid: Array,
+    w: Array,
+    core: Array,
+    label: Array,
+    n_edges: Array,
+    ins_u: Array,
+    ins_v: Array,
+    ins_w: Array,
+    ins_ok: Array,
+    rm_u: Array,
+    rm_v: Array,
+    rm_ok: Array,
+    n: int,
+    n_levels: int,
+    active_cap: int,
+    kernel_backend: str = "lax",
+):
+    """``apply_batch`` with the slot table's weight column: the same
+    active-window slice/splice with ``w`` riding alongside the other
+    three columns, and the batch's per-lane insert weights threaded to
+    the weighted program body. Returns ``(src, dst, valid, w, core,
+    label, n_edges, stats)``."""
+    full_src, full_dst, full_valid, full_w = src, dst, valid, w
+    src, dst, valid, w, core, label, n_edges, stats = batch_program(
+        src[:active_cap], dst[:active_cap], valid[:active_cap],
+        core, label, n_edges,
+        ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok,
+        n, n_levels, kernel_backend=kernel_backend,
+        w=w[:active_cap], ins_w=ins_w,
+    )
+    src = jnp.concatenate([src, full_src[active_cap:]])
+    dst = jnp.concatenate([dst, full_dst[active_cap:]])
+    valid = jnp.concatenate([valid, full_valid[active_cap:]])
+    w = jnp.concatenate([w, full_w[active_cap:]])
+    return src, dst, valid, w, core, label, n_edges, stats

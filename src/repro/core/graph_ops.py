@@ -283,6 +283,64 @@ def din_and_expand(
     return din, din > 0
 
 
+def weighted_support(
+    src: Array, dst: Array, valid: Array, w: Array, core: Array,
+    thresh: Array, n: int, layout: Optional[VertexLayout] = None,
+    backend: str = "lax",
+) -> Array:
+    """Weighted generalization of ``count_ge``: per-vertex SUM of incident
+    edge weights to neighbors u with ``core[u] >= thresh[v]`` (the inner
+    statistic of the weighted h-index bisection; with unit weights and
+    ``thresh == core`` this IS mcd). The weighted column rides the exact
+    same two-scatter + layout-completion schedule as the unit stats, so
+    the sharded collective budget is unchanged per pass."""
+    if backend == "pallas":
+        out = coremaint.coo_stat(
+            src, dst, valid, core,
+            jnp.zeros(core.shape[0], jnp.int64), n, stat="wsum",
+            aux=thresh, edge_w=w,
+        )
+        return _complete(out, layout)[:, 0]
+    wi = w.astype(jnp.int32)
+    to_src = jnp.where(valid & (core[dst] >= thresh[src]), wi, 0)
+    to_dst = jnp.where(valid & (core[src] >= thresh[dst]), wi, 0)
+    return _seg2(to_src, to_dst, src, dst, n, layout)
+
+
+def weighted_h_index(
+    src: Array, dst: Array, valid: Array, w: Array, core: Array,
+    upper: Array, n: int, layout: Optional[VertexLayout] = None,
+    backend: str = "lax",
+) -> Array:
+    """Per-vertex weighted h-index by lockstep bisection:
+    ``H_w(v) = max{h <= upper[v] : sum of weights to nbrs with
+    core >= h is >= h}`` (Zhou et al., WWW'21). The feasible set is a
+    prefix (the support sum is non-increasing in h), so bisection over
+    ``[0, upper]`` needs O(log maxW) masked rounds, each ONE weighted
+    support pass over the edge window. The invariant is lo-feasible
+    (``lo = 0`` trivially so); converged lanes re-test ``mid == lo``
+    and stay fixed, so the while_loop runs until the SLOWEST lane
+    converges with every lane stable. Replicated/plain layouts only —
+    the halo twin lives in core/remove.py next to its fixpoint."""
+    upper = jnp.maximum(upper.astype(jnp.int32), 0)
+    lo = jnp.zeros_like(upper)
+
+    def cond(state):
+        lo_, hi_ = state
+        return jnp.any(lo_ < hi_)
+
+    def body(state):
+        lo_, hi_ = state
+        mid = (lo_ + hi_ + 1) // 2
+        s = weighted_support(src, dst, valid, w, core, mid, n,
+                             layout, backend)
+        ok = s >= mid
+        return jnp.where(ok, mid, lo_), jnp.where(ok, hi_, mid - 1)
+
+    lo, _ = jax.lax.while_loop(cond, body, (lo, upper))
+    return lo
+
+
 def expand_forward(
     src: Array,
     dst: Array,

@@ -33,6 +33,10 @@ import jax.numpy as jnp
 from . import graph_ops as G
 from ..kernels import coremaint
 from .order import place_block, place_block_ring
+from .remove import (
+    weighted_core_fixpoint_pass,
+    weighted_core_fixpoint_pass_halo,
+)
 from .vertex_layout import (
     HaloSession,
     ReplicatedVertices,
@@ -620,6 +624,54 @@ def _evict_fixpoint(
          jnp.int32(0)),
     )
     return cand, evict_round, fmax
+
+
+def weighted_promotion_fixpoint(
+    src: Array,
+    dst: Array,
+    valid: Array,
+    w: Array,
+    core: Array,
+    total_w: Array,
+    n: int,
+    layout: VertexLayout | None = None,
+    kernel_backend: str = "lax",
+) -> Tuple[Array, Array, Array]:
+    """Weighted promotion phase. The Order machinery's forward/evict
+    passes have no weighted analogue of the +1-per-round theorem, so the
+    promotion phase is the SAME decrease-only h-index fixpoint as the
+    removal phase, started from the sound upper bound ``core +
+    total_w``: a batch of total inserted weight W can raise any vertex
+    by at most W — including vertices with NO inserted edge incident
+    (a new path can close a cycle through them), which is why the
+    per-vertex incident-weight bound is unsound (docs/DESIGN.md §4.5).
+    Returns ``(core, rounds, max_frontier)``."""
+    return weighted_core_fixpoint_pass(
+        src, dst, valid, w, core + total_w, n, layout=layout,
+        kernel_backend=kernel_backend,
+    )
+
+
+def weighted_promotion_fixpoint_halo(
+    src_h: Array,
+    dst_h: Array,
+    valid: Array,
+    w: Array,
+    core_own: Array,
+    core_h: Array,
+    total_w: Array,
+    session: HaloSession,
+    kernel_backend: str = "lax",
+):
+    """``weighted_promotion_fixpoint`` on a halo working set: the upper
+    bound ``+ total_w`` is replicated, so the halo image stays exact by
+    the same local add (sentinel rows drift to ``total_w`` — harmless,
+    no valid edge references them). Returns ``(core_own, core_h, rounds,
+    max_frontier)``."""
+    return weighted_core_fixpoint_pass_halo(
+        src_h, dst_h, valid, w, core_own + total_w, core_h + total_w,
+        session, kernel_backend=kernel_backend,
+    )
 
 
 @partial(jax.jit, static_argnames=("n", "n_levels"))

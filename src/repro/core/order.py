@@ -252,11 +252,14 @@ def renumber_ring(core: Array, label: Array, axis: str, n_shards: int,
 
 
 def maybe_renumber_ring(core: Array, label: Array, axis: str,
-                        n_shards: int, note=None) -> Tuple[Array, Array]:
+                        n_shards: int, note=None,
+                        force: Array | None = None) -> Tuple[Array, Array]:
     """``maybe_renumber`` over owned slices: the headroom check completes
     with one pmin + one pmax over the owner axis (replicated verdict, so
     every device takes the same cond arm); the relabel itself is the
-    ring renumber, traced inside the cond."""
+    ring renumber, traced inside the cond. ``force`` (a replicated bool)
+    ORs into the verdict — the weighted engine relabels whenever cores
+    moved, since its fixpoints freeze labels instead of placing blocks."""
     lim = jnp.int64(1) << 61
     if note is not None:
         note("pmin_scalar", 8)
@@ -264,6 +267,8 @@ def maybe_renumber_ring(core: Array, label: Array, axis: str,
     lo = jax.lax.pmin(jnp.min(label), axis)
     hi = jax.lax.pmax(jnp.max(label), axis)
     need = (lo < -lim) | (hi > lim)
+    if force is not None:
+        need = need | force
     new_label = jax.lax.cond(
         need,
         lambda c, l: renumber_ring(c, l, axis, n_shards, note=note),
@@ -291,15 +296,21 @@ def needs_renumber(label: Array) -> Array:
     return (jnp.min(label) < -lim) | (jnp.max(label) > lim)
 
 
-def maybe_renumber(core: Array, label: Array) -> Tuple[Array, Array]:
+def maybe_renumber(core: Array, label: Array,
+                   force: Array | None = None) -> Tuple[Array, Array]:
     """Device-side renumber gate: relabel iff the label space is out of
     headroom. Returns ``(label, did_renumber)``.
 
     Folding the gate into the edit program means the per-batch
     ``needs_renumber`` check costs nothing on the host — no dedicated
     device->host sync, and the relabel itself runs in the same compiled
-    program when (rarely) triggered."""
+    program when (rarely) triggered. ``force`` ORs into the verdict (the
+    weighted engine's label-freezing fixpoints relabel whenever any core
+    moved); ``force=None`` leaves the traced program byte-identical to
+    the pre-weighted gate."""
     need = needs_renumber(label)
+    if force is not None:
+        need = need | force
     new_label = jax.lax.cond(
         need, lambda c, l: renumber(c, l), lambda c, l: l, core, label
     )

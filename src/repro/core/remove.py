@@ -214,6 +214,140 @@ def removal_fixpoint_halo(
             fmax, n_ovf)
 
 
+def weighted_core_fixpoint_pass(
+    src: Array,
+    dst: Array,
+    valid: Array,
+    w: Array,
+    core: Array,
+    n: int,
+    layout: VertexLayout | None = None,
+    kernel_backend: str = "lax",
+) -> Tuple[Array, Array, Array]:
+    """Decrease-only weighted h-index fixpoint (Zhou et al., WWW'21):
+    per round ``core <- min(core, H_w(core))`` where ``H_w`` is the
+    per-vertex weighted h-index bisection (graph_ops.weighted_h_index),
+    until no vertex moves. Converges to the exact weighted cores from
+    ANY state upper-bounding them — both engine phases use it: removal
+    starts from the current cores, promotion from ``core + W`` (W the
+    batch's total inserted weight — docs/DESIGN.md §4.5 derives why the
+    per-vertex incident bound is NOT sound).
+
+    Labels are FROZEN throughout: the weighted fixpoint has no per-level
+    append order to maintain (levels are unbounded in maxW, so the
+    bucketed ``place_block`` does not apply); the engine commits ONE
+    bucket-free renumber per batch instead. Returns ``(core, rounds,
+    max_frontier)``. Replicated/plain layouts only — the halo twin is
+    ``weighted_core_fixpoint_pass_halo``."""
+    if layout is None:
+        layout = ReplicatedVertices(n)
+
+    def cond(state):
+        return state[1]
+
+    def body(state):
+        core, _, rounds, fmax = state
+        h = G.weighted_h_index(src, dst, valid, w, core, core, n,
+                               layout, backend=kernel_backend)
+        new_core = jnp.minimum(core, h)
+        changed = new_core < core
+        fmax = jnp.maximum(fmax, layout.frontier_peak(changed))
+        return new_core, jnp.any(changed), rounds + 1, fmax
+
+    core, _, rounds, fmax = jax.lax.while_loop(
+        cond, body,
+        (core, jnp.bool_(True), jnp.int32(0), jnp.int32(0)),
+    )
+    return core, rounds, fmax
+
+
+def _weighted_h_index_halo(src_h, dst_h, valid, w, core_own, core_h,
+                           session: HaloSession,
+                           kernel_backend: str = "lax"):
+    """Lockstep owned+halo weighted h-index bisection. ``(lo, hi)`` live
+    in BOTH domains: the owned pair is authoritative, the halo pair is
+    its exact image (the per-step ``ok`` verdict crosses the mesh as a
+    dense int32 ``gather_values`` — bisection masks flip for ~half the
+    vertices per step, so the sparse frontier path would overflow every
+    step; dense is the right exchange here). Continuation is carried in
+    the loop STATE (one ``any_owned`` psum per step) so the while cond
+    stays collective-free and every shard runs the same trip count.
+    Returns ``(lo_own, lo_halo)`` — the h-index and its halo image."""
+    hcap = session.halo_cap
+    lo_o = jnp.zeros_like(core_own)
+    hi_o = jnp.maximum(core_own, 0)
+    lo_h = jnp.zeros_like(core_h)
+    hi_h = jnp.maximum(core_h, 0)
+
+    def cond(state):
+        return state[4]
+
+    def body(state):
+        lo_o, hi_o, lo_h, hi_h, _ = state
+        mid_o = (lo_o + hi_o + 1) // 2
+        mid_h = (lo_h + hi_h + 1) // 2
+        s = G.weighted_support(src_h, dst_h, valid, w, core_h, mid_h,
+                               hcap, session, backend=kernel_backend)
+        ok_o = s >= mid_o
+        ok_h = session.gather_values(ok_o.astype(jnp.int32)) > 0
+        lo_o = jnp.where(ok_o, mid_o, lo_o)
+        hi_o = jnp.where(ok_o, hi_o, mid_o - 1)
+        lo_h = jnp.where(ok_h, mid_h, lo_h)
+        hi_h = jnp.where(ok_h, hi_h, mid_h - 1)
+        cont = session.any_owned(lo_o < hi_o)
+        return lo_o, hi_o, lo_h, hi_h, cont
+
+    cont0 = session.any_owned(lo_o < hi_o)
+    lo_o, _, lo_h, _, _ = jax.lax.while_loop(
+        cond, body, (lo_o, hi_o, lo_h, hi_h, cont0)
+    )
+    return lo_o, lo_h
+
+
+def weighted_core_fixpoint_pass_halo(
+    src_h: Array,
+    dst_h: Array,
+    valid: Array,
+    w: Array,
+    core_own: Array,
+    core_h: Array,
+    session: HaloSession,
+    kernel_backend: str = "lax",
+):
+    """``weighted_core_fixpoint_pass`` on a halo working set. The halo
+    core image stays current WITHOUT ``refresh_values``: each round's
+    commit is ``min`` against the bisection result, whose halo copy
+    (``lo_h``) is already the exact image of the owned one — so the halo
+    update is the same local ``min`` (sentinel rows hold 0 and stay 0;
+    no valid edge references them). Labels are frozen (see the plain
+    twin); the engine runs one ring renumber per batch afterwards.
+    Returns ``(core_own, core_h, rounds, max_frontier)`` with
+    ``max_frontier`` the LOCAL running per-round owned change count
+    (completed by the engine's batch-end pmax)."""
+
+    def cond(state):
+        return state[2]
+
+    def body(state):
+        core_own, core_h, _, rounds, fmax = state
+        lo_o, lo_h = _weighted_h_index_halo(
+            src_h, dst_h, valid, w, core_own, core_h, session,
+            kernel_backend=kernel_backend,
+        )
+        new_o = jnp.minimum(core_own, lo_o)
+        new_h = jnp.minimum(core_h, lo_h)
+        changed = new_o < core_own
+        fmax = jnp.maximum(fmax, session.frontier_peak(changed))
+        cont = session.any_owned(changed)
+        return new_o, new_h, cont, rounds + 1, fmax
+
+    core_own, core_h, _, rounds, fmax = jax.lax.while_loop(
+        cond, body,
+        (core_own, core_h, jnp.bool_(True), jnp.int32(0), jnp.int32(0)),
+    )
+    return core_own, core_h, rounds, fmax
+
+
 @partial(jax.jit, static_argnames=("n", "n_levels"))
 def remove_batch(
     src: Array,

@@ -53,7 +53,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
-from .engine import DONATED_STATE_ARGS, batch_program, batch_program_halo
+from .engine import (DONATED_STATE_ARGS, WEIGHTED_DONATED_STATE_ARGS,
+                     batch_program, batch_program_halo)
 from .vertex_layout import make_layout
 
 Array = jax.Array
@@ -66,7 +67,8 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
                        freelist: str = "interleaved",
                        frontier_exchange: str = "bitmask",
                        frontier_cap: int = 0,
-                       kernel_backend: str = "lax"):
+                       kernel_backend: str = "lax",
+                       weighted: bool = False):
     """Build the jitted sharded mixed-batch engine over ``mesh``.
 
     The returned function has the same signature and semantics as
@@ -121,6 +123,22 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
     replaces only the LOCAL partial-statistic computation — the layout
     completion collectives are identical — so the mesh collective
     schedule (and the committed budget manifests) are shared with lax.
+
+    ``weighted`` builds the weight-generalized engine instead: the slot
+    table carries a fourth sharded column ``w`` (per-slot edge weight,
+    riding the same espec/donation treatment as ``src``/``dst``/
+    ``valid``), the batch gains a replicated ``ins_w`` lane array, and
+    both maintenance phases run the weighted h-index bisection fixpoint
+    (core/remove.py::weighted_core_fixpoint_pass and its halo twin) —
+    the weighted partial sums complete through the SAME layout
+    collectives as the unit-count statistics, so no new collective
+    primitives appear. The returned function's signature becomes
+    ``(src, dst, valid, w, core, label, n_edges, ins_u, ins_v, ins_w,
+    ins_ok, rm_u, rm_v, rm_ok) -> (src, dst, valid, w, core, label,
+    n_edges, stats)``. With ``weighted=False`` (the default) no weight
+    array is threaded anywhere, so the traced program — and the
+    committed collective/budget manifests — stay byte-identical to the
+    pre-weighted engine.
 
     ``local_active`` is the per-shard high-water window — the sharded
     analogue of the unified engine's ``active_cap``. Slicing a SHARDED
@@ -255,8 +273,56 @@ def make_sharded_apply(mesh: Mesh, n: int, n_levels: int,
         valid = jnp.concatenate([valid, full_valid[w:]])
         return src, dst, valid, core, label, n_edges, stats
 
+    def _kernel_weighted(src, dst, valid, ew, core, label, n_edges,
+                         ins_u, ins_v, ins_w, ins_ok, rm_u, rm_v, rm_ok):
+        # weighted twin: the weight column ``ew`` is sliced/spliced in
+        # lockstep with the other slot columns and threaded into the
+        # shared program body as its ``w=`` argument
+        _check_window(src.shape[0])
+        win = src.shape[0] if local_active is None else local_active
+        full_src, full_dst, full_valid, full_ew = src, dst, valid, ew
+        if layout is None:
+            src, dst, valid, ew, core, label, n_edges, stats = (
+                batch_program(
+                    src[:win], dst[:win], valid[:win], core, label,
+                    n_edges, ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok,
+                    n, n_levels, axis=axis, layout=None,
+                    freelist=freelist, kernel_backend=kernel_backend,
+                    w=ew[:win], ins_w=ins_w,
+                )
+            )
+        else:
+            src, dst, valid, ew, core, label, n_edges, stats = (
+                batch_program_halo(
+                    src[:win], dst[:win], valid[:win], core, label,
+                    n_edges, ins_u, ins_v, ins_ok, rm_u, rm_v, rm_ok,
+                    n, n_levels, table_axis=table_axis, layout=layout,
+                    freelist=freelist, kernel_backend=kernel_backend,
+                    w=ew[:win], ins_w=ins_w,
+                )
+            )
+        src = jnp.concatenate([src, full_src[win:]])
+        dst = jnp.concatenate([dst, full_dst[win:]])
+        valid = jnp.concatenate([valid, full_valid[win:]])
+        ew = jnp.concatenate([ew, full_ew[win:]])
+        return src, dst, valid, ew, core, label, n_edges, stats
+
     espec = P(all_axes if len(all_axes) > 1 else axis)
     vspec = P() if layout is None else P(axis)
+    if weighted:
+        shardmapped = shard_map(
+            _kernel_weighted,
+            mesh=mesh,
+            in_specs=(
+                espec, espec, espec, espec,       # src, dst, valid, w
+                vspec, vspec, P(),                # core, label, n_edges
+                P(), P(), P(), P(), P(), P(), P(),  # batch (replicated)
+            ),
+            out_specs=(espec, espec, espec, espec, vspec, vspec, P(), P()),
+            check_vma=False,
+        )
+        return jax.jit(shardmapped,
+                       donate_argnums=WEIGHTED_DONATED_STATE_ARGS)
     shardmapped = shard_map(
         _kernel,
         mesh=mesh,

@@ -1,5 +1,18 @@
-"""Weighted-graph core maintenance — the paper's §6 future work, built on
-the same bulk-synchronous machinery (beyond-paper extension).
+"""Weighted-coreness ORACLE and reference kernels (paper §6 future work).
+
+The PRODUCTION weighted engine lives in the engine matrix now:
+``CoreMaintainer(weighted=True)`` threads a per-slot weight column
+through ``core/engine.py::batch_program`` (and its halo twin), runs
+both maintenance phases through the shared decrease-only weighted
+h-index fixpoint (``core/remove.py::weighted_core_fixpoint_pass`` /
+``core/insert.py::weighted_promotion_fixpoint``, statistics via
+``core/graph_ops.py::weighted_support`` on either kernel backend), and
+is audited by the committed ``weighted`` / ``weighted_sharded`` budget
+manifests. This module is what that engine is PINNED against: the
+numpy peeling oracle (``weighted_core_oracle``), a standalone
+single-device fixpoint (``weighted_core_fixpoint``), and the small
+``WeightedCoreMaintainer`` reference harness
+(tests/test_weighted_core.py, tests/test_churn_streams.py).
 
 Weighted coreness (Zhou et al., WWW'21): the weighted degree of v is the
 sum of incident edge weights; the weighted k-core is the maximal subgraph
@@ -15,7 +28,9 @@ exact weighted core numbers (same monotone argument as the unweighted
 mcd fixpoint — the fixpoint set {v: c(v) >= k} induces a subgraph of
 weighted degree >= k, and values at the true core never drop). Upper
 bounds: the weighted degree (decomposition), the current cores
-(removals), current cores + incident inserted weight (insertions).
+(removals), current cores + TOTAL batch inserted weight (insertions —
+docs/DESIGN.md §4.5 derives why the per-vertex incident bound is not
+sound).
 
 H_w is computed data-parallel with a per-vertex bisection: O(log maxW)
 masked segment-sums per round — every edge and every vertex of every

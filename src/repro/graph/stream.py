@@ -189,14 +189,135 @@ def churn_stream(
         yield EdgeEvent(ins, "mixed", t, removals=rm)
 
 
+def _validated_temporal(edges_with_time) -> np.ndarray:
+    """Normalize a temporal edge list to an int64 [m, 3] array, failing
+    loudly on the malformed inputs that used to slip through (a [m, 2]
+    list silently replayed vertex ids as timestamps; float timestamps
+    truncated)."""
+    arr = np.asarray(edges_with_time)
+    if arr.ndim != 2 or arr.shape[1] != 3:
+        raise ValueError(
+            f"temporal edge list must have shape [m, 3] (u, v, t), got "
+            f"{arr.shape}"
+        )
+    if not np.issubdtype(arr.dtype, np.integer):
+        raise ValueError(
+            f"temporal edge list must have an integer dtype (u, v, t), "
+            f"got {arr.dtype} — cast timestamps explicitly rather than "
+            "letting them truncate silently"
+        )
+    return arr.astype(np.int64)
+
+
 def temporal_replay(
     edges_with_time: np.ndarray, batch_size: int
 ) -> Iterator[EdgeEvent]:
     """Replay a [m, 3] (u, v, t) temporal edge list in timestamp order as
-    insertion batches (KONECT-style temporal graphs)."""
-    order = np.argsort(edges_with_time[:, 2], kind="stable")
-    ordered = edges_with_time[order]
+    insertion batches (KONECT-style temporal graphs).
+
+    Ordering guarantee: the sort is STABLE, so rows sharing a timestamp
+    replay in input order — a given edge list always produces the same
+    batches. That guarantee cuts both ways: when the input is NOT
+    already time-sorted and a run of equal timestamps straddles a batch
+    boundary, which of the tied edges land in the earlier batch is an
+    artifact of input file order rather than of time, so this replay
+    refuses (``ValueError``) instead of silently committing one of the
+    m! equally-valid batchings. Pre-sort the list (any tie order you
+    pick is then YOUR deterministic choice) or use a ``batch_size``
+    that keeps ties together."""
+    arr = _validated_temporal(edges_with_time)
+    if batch_size < 1:
+        raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+    t = arr[:, 2]
+    presorted = bool(np.all(t[:-1] <= t[1:]))
+    order = np.argsort(t, kind="stable")
+    ordered = arr[order]
+    ts = ordered[:, 2]
+    if not presorted and len(ordered) > batch_size:
+        bounds = np.arange(batch_size, len(ordered), batch_size)
+        cross = bounds[ts[bounds - 1] == ts[bounds]]
+        if cross.size:
+            raise ValueError(
+                "temporal_replay: unsorted input has equal-timestamp "
+                f"ties (t={int(ts[cross[0]])}) crossing a batch "
+                "boundary — the stable sort keeps INPUT order within a "
+                "timestamp, so the batch split would be an artifact of "
+                "file order, not time; pre-sort the edge list or pick a "
+                "batch_size that keeps ties in one batch"
+            )
     for i in range(0, len(ordered), batch_size):
         chunk = ordered[i : i + batch_size]
         yield EdgeEvent(chunk[:, :2].astype(np.int64), "insert",
                         int(chunk[-1, 2]))
+
+
+def sliding_window_stream(
+    edges_with_time: np.ndarray,
+    window: int,
+    stride: Optional[int] = None,
+) -> Iterator[EdgeEvent]:
+    """Sliding-window expiry over a [m, 3] (u, v, t) temporal edge list
+    — the workload where REMOVALS are structural, not sampled: each
+    step advances time by ``stride`` and yields one mixed event whose
+    insertions are the edges arriving in the new stride and whose
+    removals are the live edges older than ``window`` (bulk expiry by
+    age, the Li et al. dynamic-graph evaluation pattern).
+
+    Semantics (matching ``CoreMaintainer.apply_batch``'s
+    removals-first order):
+
+    * the live set is keyed on the undirected pair; a re-arrival of a
+      live edge REFRESHES its age (the event does not re-insert it —
+      the engine would no-op the duplicate anyway) and a re-arrival of
+      an edge expiring in the same step round-trips through one event
+      (removal + insertion, the same-batch recycling path);
+    * self-loops are dropped; in-step duplicate pairs insert once and
+      age by their LATEST arrival;
+    * events with neither arrivals nor expiries are elided; the stream
+      drains until every edge has expired, so the final live set is
+      empty and Σ removals == Σ insertions.
+
+    Timestamps only gate WHICH step an edge joins, so unlike
+    ``temporal_replay`` the equal-timestamp tie order never changes the
+    output — the input needs no pre-sorting (the stable sort plus
+    per-step set semantics make the events input-order independent up
+    to in-step insertion order)."""
+    arr = _validated_temporal(edges_with_time)
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    if stride is None:
+        stride = window
+    if stride < 1:
+        raise ValueError(f"stride must be >= 1, got {stride}")
+    order = np.argsort(arr[:, 2], kind="stable")
+    ordered = arr[order]
+    m = len(ordered)
+    if m == 0:
+        return
+    live: dict = {}  # (u, v) -> latest arrival time
+    i = 0
+    hi = int(ordered[0, 2]) + stride  # step covers arrivals with t < hi
+    while i < m or live:
+        cutoff = hi - window
+        removals = [e for e, ta in live.items() if ta <= cutoff]
+        for e in removals:
+            del live[e]
+        inserts: list = []
+        while i < m and int(ordered[i, 2]) < hi:
+            u, v, t = (int(x) for x in ordered[i])
+            i += 1
+            if u == v:
+                continue
+            key = (min(u, v), max(u, v))
+            if key not in live and key not in inserts:
+                inserts.append(key)
+            live[key] = max(live.get(key, t), t)
+        if inserts or removals:
+            yield EdgeEvent(
+                np.asarray(inserts, dtype=np.int64).reshape(-1, 2),
+                "mixed",
+                hi,
+                removals=np.asarray(
+                    removals, dtype=np.int64).reshape(-1, 2),
+            )
+        hi += stride

@@ -58,6 +58,7 @@ _STAT_COLS = {
     "mcd": 1,
     "din": 1,
     "same_in": 1,
+    "wsum": 1,
 }
 
 
@@ -141,6 +142,38 @@ def _stat_kernel(src_ref, dst_ref, valid_ref, core_ref, label_ref, aux_ref,
         out_ref[...] = out_ref[...] + partial
 
 
+def _wsum_kernel(src_ref, dst_ref, valid_ref, w_ref, core_ref, thresh_ref,
+                 out_ref, *, block_n: int):
+    """Weighted support sum — the "wsum" stat. Unlike ``_stat_kernel``
+    the aux vector carries INTEGER per-vertex thresholds (the bisection
+    mids), not a boolean mask, and each edge contributes its weight
+    instead of a unit count — hence the dedicated kernel body (the
+    shared gather helper folds aux to bool)."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    src = src_ref[...]
+    dst = dst_ref[...]
+    valid = valid_ref[...] != 0
+    w = w_ref[...]
+    core = core_ref[...]
+    thresh = thresh_ref[...]
+    cs = jnp.take(core, src, axis=0, fill_value=0)
+    cd = jnp.take(core, dst, axis=0, fill_value=0)
+    ts = jnp.take(thresh, src, axis=0, fill_value=0)
+    td = jnp.take(thresh, dst, axis=0, fill_value=0)
+    to_src = jnp.where(valid & (cd >= ts), w, 0)[:, None].astype(jnp.int32)
+    to_dst = jnp.where(valid & (cs >= td), w, 0)[:, None].astype(jnp.int32)
+    partial = _accumulate(src, dst, to_src, to_dst, i * block_n, block_n)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + partial
+
+
 def _pad_inputs(src, dst, valid, aux, n, block_e):
     e = src.shape[0]
     e_pad = -e % block_e
@@ -162,6 +195,7 @@ def coo_stat(
     n: int,
     stat: str = "mcd_hi_dout",
     aux: Optional[Array] = None,
+    edge_w: Optional[Array] = None,
     block_n: int = 256,
     block_e: int = 256,
     interpret: Optional[bool] = None,
@@ -173,8 +207,12 @@ def coo_stat(
     sharded callers psum / reduce_scatter the result unchanged and the
     collective schedule is identical to the lax backend's.
 
-    ``aux`` is the stat-dependent per-vertex mask (``rp`` for "din", the
-    candidate mask for "same_in"); ignored by the other stats.
+    ``aux`` is the stat-dependent per-vertex input: a mask (``rp`` for
+    "din", the candidate mask for "same_in") or the integer per-vertex
+    thresholds for "wsum"; ignored by the other stats. ``edge_w`` is the
+    per-slot weight column, consumed only by "wsum" (each edge scatters
+    its weight where the endpoint core clears the other endpoint's
+    threshold — the weighted h-index bisection's inner statistic).
     """
     ncols = _STAT_COLS[stat]  # raises KeyError loudly on an unknown stat
     if label.dtype != jnp.int64:
@@ -187,6 +225,35 @@ def coo_stat(
         return jnp.zeros((n, ncols), jnp.int32)
     if interpret is None:
         interpret = default_interpret()
+    if stat == "wsum":
+        if edge_w is None or aux is None:
+            raise ValueError(
+                "stat='wsum' needs edge_w (per-slot weights) and aux "
+                "(per-vertex integer thresholds)"
+            )
+        e_pad = -src.shape[0] % block_e
+        src_p = jnp.pad(src, (0, e_pad))
+        dst_p = jnp.pad(dst, (0, e_pad))
+        valid_p = jnp.pad(valid.astype(jnp.int32), (0, e_pad))
+        w_p = jnp.pad(edge_w.astype(jnp.int32), (0, e_pad))
+        np_ = n + (-n % block_n)
+        grid = (np_ // block_n, src_p.shape[0] // block_e)
+        out = pl.pallas_call(
+            functools.partial(_wsum_kernel, block_n=block_n),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_e,), lambda i, j: (j,)),
+                pl.BlockSpec((block_e,), lambda i, j: (j,)),
+                pl.BlockSpec((block_e,), lambda i, j: (j,)),
+                pl.BlockSpec((block_e,), lambda i, j: (j,)),
+                pl.BlockSpec((n,), lambda i, j: (0,)),
+                pl.BlockSpec((n,), lambda i, j: (0,)),
+            ],
+            out_specs=pl.BlockSpec((block_n, 1), lambda i, j: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((np_, 1), jnp.int32),
+            interpret=interpret,
+        )(src_p, dst_p, valid_p, w_p, core, aux.astype(jnp.int32))
+        return out[:n]
     src_p, dst_p, valid_p, aux_p = _pad_inputs(
         src, dst, valid, aux, n, block_e
     )

@@ -356,11 +356,55 @@ def test_hostlint_real_api_is_clean():
 
 def test_hostlint_all_targets_clean():
     """The full lint surface — api.py plus the engine-level builders in
-    core/engine.py and core/sharded.py — is sync-free."""
+    core/engine.py, core/sharded.py, and the fixpoint builders in
+    core/remove.py / core/insert.py — is sync-free."""
     from repro.analysis.hostlint import LINT_TARGETS
 
     for path in LINT_TARGETS:
         assert lint_file(path) == [], path
+
+
+def test_hostlint_covers_fixpoint_builders():
+    """Regression: the remove/insert fixpoint builders (including the
+    weighted h-index passes and the halo twins) stay in the lint
+    surface, and a host coercion of a weighted device parameter (the
+    weight column, the halo working set) fires by bare name."""
+    import os
+
+    from repro.analysis.hostlint import (
+        DEVICE_PARAMS,
+        INSERT_PATH,
+        LINT_TARGETS,
+        REMOVE_PATH,
+    )
+
+    assert {"removal_fixpoint", "weighted_core_fixpoint_pass",
+            "weighted_core_fixpoint_pass_halo"} \
+        <= LINT_TARGETS[os.path.normpath(REMOVE_PATH)]
+    assert {"promotion_fixpoint", "weighted_promotion_fixpoint",
+            "weighted_promotion_fixpoint_halo", "freelist_alloc"} \
+        <= LINT_TARGETS[os.path.normpath(INSERT_PATH)]
+    assert {"w", "total_w", "src_h", "core_h"} <= DEVICE_PARAMS
+
+
+def test_hostlint_weighted_param_coercion_fires(tmp_path):
+    p = tmp_path / "remove_fixture.py"
+    p.write_text(textwrap.dedent(
+        """
+        import numpy as np
+
+        def weighted_core_fixpoint_pass(src, dst, valid, w, core, n):
+            maxw = int(w)                 # device column: sync
+            cap = int(w.shape[0])         # static aval metadata: fine
+            tw = np.asarray(total_w)      # sync: ok  (reviewed)
+            return core
+        """
+    ))
+    finds = lint_file(
+        str(p), funcs=frozenset({"weighted_core_fixpoint_pass"})
+    )
+    [f] = finds
+    assert "int(...)" in f.message
 
 
 def test_hostlint_bare_device_param_fires(tmp_path):
@@ -516,6 +560,61 @@ def test_benchcheck_v4_sections(tmp_path):
     }))
     msgs = [f["message"] for f in check_bench(str(p))["findings"]]
     assert not any("overflow" in m for m in msgs)
+
+
+def test_benchcheck_v5_sections(tmp_path):
+    """The v5 coherence rules: the weighted row must have been timed,
+    and the temporal sliding-window section must drain (insertions ==
+    removals, all-zero final cores), agree across engines, carry a sane
+    window/stride pair, and time every temporal engine."""
+    from repro.analysis.benchcheck import BENCH_SCHEMA
+
+    base = {
+        "schema": BENCH_SCHEMA,
+        "engines_agree": True,
+        "churn": {"engines_agree": True},
+    }
+    p = tmp_path / "bench.json"
+    p.write_text(json.dumps({
+        **base,
+        "weighted": {"batches_per_s": 0.0},
+        "temporal": {
+            "window": 6, "stride": 9,  # stride > window: gap, flagged
+            "engines_agree": False,
+            "total_insertions": 500, "total_removals": 480,
+            "final_cores_zero": False,
+            "host": {"batches_per_s": 2.0},
+            # unified row missing entirely; sharded present but untimed
+            "sharded": {"batches_per_s": 0.0},
+            "weighted": {"batches_per_s": 1.0},
+        },
+    }))
+    msgs = [f["message"] for f in check_bench(str(p))["findings"]]
+    assert any("weighted.batches_per_s is not > 0" in m for m in msgs)
+    assert any("temporal engines diverged" in m for m in msgs)
+    assert any("did not drain" in m for m in msgs)
+    assert any("final_cores_zero" in m for m in msgs)
+    assert any("window/stride malformed" in m for m in msgs)
+    assert any("lacks the 'unified' engine row" in m for m in msgs)
+    assert any("temporal.sharded.batches_per_s is not > 0" in m
+               for m in msgs)
+    # a coherent v5 artifact raises none of the new findings
+    p.write_text(json.dumps({
+        **base,
+        "weighted": {"batches_per_s": 4.0},
+        "temporal": {
+            "window": 6, "stride": 3,
+            "engines_agree": True,
+            "total_insertions": 500, "total_removals": 500,
+            "final_cores_zero": True,
+            "host": {"batches_per_s": 2.0},
+            "unified": {"batches_per_s": 3.0},
+            "sharded": {"batches_per_s": 1.0},
+            "weighted": {"batches_per_s": 1.5},
+        },
+    }))
+    msgs = [f["message"] for f in check_bench(str(p))["findings"]]
+    assert not any("temporal" in m or "weighted" in m for m in msgs)
 
 
 def test_benchcheck_missing_artifact_one_actionable_finding(tmp_path):

@@ -28,7 +28,13 @@ The claims under test (docs/DESIGN.md §4.1–§4.2):
   per-shard high-water marks, all carried by the ``valid`` mask)
   restores an equivalent maintainer on 1 and 8 forced host devices;
 * a batch that must defrag AND grow places the sharded buffers exactly
-  once (regression: the old compact-then-grow path placed them twice).
+  once (regression: the old compact-then-grow path placed them twice);
+* the weighted h-index configs ride the same dirty stream: on the unit
+  weights ``apply_batch`` defaults to they match every unweighted
+  config's cores, and under RANDOM integer weights both weighted
+  configs stay pinned to ``weighted_core_oracle`` (first-occurrence
+  duplicate weights, live re-insert no-ops, same-batch remove+insert
+  roundtrips committing the new weight) on 1 and 8 forced devices.
 """
 import os
 import subprocess
@@ -46,6 +52,7 @@ except ImportError:
 
 from repro.core.api import CoreMaintainer
 from repro.core.oracle import OrderCoreMaintainer, bz_from_csr
+from repro.core.weighted import weighted_core_oracle
 from repro.graph.csr import build_csr
 from repro.graph.generators import erdos_renyi
 from repro.graph.stream import churn_stream
@@ -71,7 +78,20 @@ CONFIGS = {
     # mode off-TPU, so this runs (and must stay bit-identical) everywhere
     "pallas": dict(engine="unified", kernel_backend="pallas"),
     "pallas_sharded": dict(engine="sharded", kernel_backend="pallas"),
+    # the weighted h-index engine: on the unit weights apply_batch
+    # defaults to, weighted coreness degenerates to plain coreness, so
+    # these rows ride the SAME dirty stream and must match every other
+    # config's CORES. Labels are compared only among the weighted
+    # configs: weighted maintenance freezes labels through the fixpoints
+    # and renumbers once per batch, a deliberately different (equally
+    # valid) k-order schedule than the order-based engines'.
+    "weighted": dict(engine="unified", weighted=True),
+    "weighted_sharded": dict(engine="sharded", weighted=True),
 }
+
+# configs whose labels follow the weighted renumber-once-per-batch
+# schedule rather than the order-based one
+WEIGHTED_CONFIGS = ("weighted", "weighted_sharded")
 
 
 def _norm(edges) -> list:
@@ -136,7 +156,13 @@ def _run_churn_differential(m0, graph_seed, stream_seed, n_batches,
             if e == "unified":
                 continue
             np.testing.assert_array_equal(u.cores(), ms[e].cores(), e)
-            np.testing.assert_array_equal(u.labels(), ms[e].labels(), e)
+            if e not in WEIGHTED_CONFIGS:
+                np.testing.assert_array_equal(u.labels(), ms[e].labels(), e)
+        # the weighted configs' labels follow their own (shared)
+        # renumber-once-per-batch schedule — identical to each other
+        np.testing.assert_array_equal(
+            ms["weighted"].labels(), ms["weighted_sharded"].labels()
+        )
         for e, st_ in stats.items():
             assert int(st_.n_inserted) == len(inserted), e
             assert int(st_.n_removed) == len(removed), e
@@ -147,7 +173,8 @@ def _run_churn_differential(m0, graph_seed, stream_seed, n_batches,
         # both free-list rankings allocate the identical live set (slot
         # POSITIONS may differ across shards; the keys may not)
         for e in ("sharded", "vertex_range", "freelist_hier",
-                  "frontier_sparse", "vertex_halo", "pallas_sharded"):
+                  "frontier_sparse", "vertex_halo", "pallas_sharded",
+                  "weighted", "weighted_sharded"):
             assert ms[e].edge_slot.keys() == u.edge_slot.keys(), e
     # balanced stream + generous initial capacity: nothing may grow
     for e, m in ms.items():
@@ -191,6 +218,153 @@ if HAVE_HYPOTHESIS:
     )
     def test_churn_engines_bit_identical_fuzz(params):
         _run_churn_differential(*params)
+
+
+def _weighted_oracle_state(n, live):
+    """Exact weighted cores of a (lo, hi) -> weight live-set mirror."""
+    if not live:
+        return np.zeros(n, dtype=np.int64)
+    edges = np.asarray(sorted(live), dtype=np.int64)
+    weights = np.asarray([live[tuple(e)] for e in edges], dtype=np.int64)
+    return weighted_core_oracle(n, edges, weights)
+
+
+def _run_weighted_churn_differential(m0, graph_seed, stream_seed,
+                                     n_batches, batch_size, max_w):
+    """The weighted twin of ``_run_churn_differential``: both weighted
+    engine configs see the same dirty churn stream with RANDOM integer
+    weights on every insert list; after every event their cores match
+    the numpy peeling oracle on a host-side live-set mirror that pins
+    the engine's weight semantics — removals first, first occurrence
+    of an in-batch duplicate wins, re-inserting a live edge keeps the
+    stored weight, and remove+re-insert in ONE batch lands the new
+    weight (the same-batch roundtrip path)."""
+    n = 24
+    g = erdos_renyi(n, m0, seed=graph_seed)
+    rng = np.random.default_rng(stream_seed + 1)
+    w0 = rng.integers(1, max_w + 1, g.m)
+    cap = 4 * g.m + 64
+    ms = {
+        e: CoreMaintainer.from_graph(g, capacity=cap, weights=w0,
+                                     **CONFIGS[e])
+        for e in WEIGHTED_CONFIGS
+    }
+    live = {e: int(w) for e, w in zip(_norm(g.edge_array()), w0)}
+    np.testing.assert_array_equal(
+        ms["weighted"].cores(), _weighted_oracle_state(n, live)
+    )
+    for ev in churn_stream(g, n_batches, batch_size, seed=stream_seed):
+        iw = rng.integers(1, max_w + 1, len(ev.edges))
+        stats = {
+            e: m.apply_batch(insert_edges=ev.edges,
+                             remove_edges=ev.removals,
+                             insert_weights=iw)
+            for e, m in ms.items()
+        }
+        # host mirror of the engine's batch semantics: removals first,
+        # then insertions in order with duplicate/live rows skipped (so
+        # the first occurrence's weight sticks and a same-batch
+        # remove+insert roundtrip commits the new weight)
+        removed = 0
+        for e in _norm(ev.removals):
+            if live.pop(e, None) is not None:
+                removed += 1
+        inserted = 0
+        for e, w in zip(_norm(ev.edges), iw):
+            if e[0] != e[1] and e not in live:
+                live[e] = int(w)
+                inserted += 1
+        expect = _weighted_oracle_state(n, live)
+        u = ms["weighted"]
+        np.testing.assert_array_equal(u.cores(), expect)
+        np.testing.assert_array_equal(
+            u.cores(), ms["weighted_sharded"].cores()
+        )
+        np.testing.assert_array_equal(
+            u.labels(), ms["weighted_sharded"].labels()
+        )
+        for e, st_ in stats.items():
+            assert int(st_.n_inserted) == inserted, e
+            assert int(st_.n_removed) == removed, e
+        assert ms["weighted_sharded"].edge_slot.keys() == \
+            u.edge_slot.keys()
+        # the stored weight column mirrors the live map exactly
+        wcol = np.asarray(u.w)
+        for e, slot in u.edge_slot.items():
+            assert int(wcol[slot]) == live[e], e
+
+
+@pytest.mark.parametrize(
+    "params",
+    [
+        # (m0, graph_seed, stream_seed, n_batches, batch_size, max_w)
+        (60, 0, 1, 4, 12, 7),   # mixed traffic, spread weights
+        (45, 7, 3, 3, 8, 1),    # all-unit weights == unweighted cores
+        (90, 2, 9, 3, 16, 13),  # denser graph, heavier weights
+    ],
+)
+def test_weighted_churn_engines_match_oracle(params):
+    _run_weighted_churn_differential(*params)
+
+
+def test_weighted_duplicate_and_same_batch_roundtrip():
+    """Pin the weight-commit rules one at a time (against the oracle,
+    on both weighted configs): in-batch duplicates keep the FIRST
+    occurrence's weight, re-inserting a live edge is a no-op that keeps
+    the stored weight, and remove + re-insert in the SAME batch (the
+    slot-recycling roundtrip) commits the NEW weight."""
+    n = 8
+    e0 = np.asarray([[0, 1], [1, 2], [2, 0], [3, 4]], dtype=np.int64)
+    w0 = np.asarray([2, 3, 4, 5], dtype=np.int64)
+    for config in WEIGHTED_CONFIGS:
+        g = build_csr(n, e0)
+        m = CoreMaintainer.from_graph(
+            g, capacity=64, weights=w0, **CONFIGS[config]
+        )
+        # weights align with g.edge_array() (build_csr normalizes and
+        # sorts), so mirror from the canonical row order
+        live = {e: int(w) for e, w in zip(_norm(g.edge_array()), w0)}
+        # in-batch duplicate: first occurrence wins
+        m.apply_batch(insert_edges=[[4, 5], [4, 5]], insert_weights=[6, 9])
+        live[(4, 5)] = 6
+        # re-insert of a live edge: no-op, stored weight kept
+        m.apply_batch(insert_edges=[[0, 1]], insert_weights=[9])
+        # same-batch remove + re-insert: the NEW weight lands
+        m.apply_batch(insert_edges=[[1, 2]], remove_edges=[[1, 2]],
+                      insert_weights=[7])
+        live[(1, 2)] = 7
+        wcol = np.asarray(m.w)
+        for e, slot in m.edge_slot.items():
+            assert int(wcol[slot]) == live[e], (config, e)
+        np.testing.assert_array_equal(
+            m.cores(), _weighted_oracle_state(n, live), config
+        )
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def weighted_churn_params(draw):
+        # same shape discipline as churn_params (fixed n, pow2 lane
+        # buckets shared across examples); weights draw from three
+        # regimes — unit (degenerates to plain coreness), narrow, wide
+        m0 = draw(st.integers(min_value=40, max_value=90))
+        graph_seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        stream_seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        n_batches = draw(st.integers(min_value=2, max_value=3))
+        batch_size = draw(st.sampled_from([8, 12, 16]))
+        max_w = draw(st.sampled_from([1, 5, 13]))
+        return m0, graph_seed, stream_seed, n_batches, batch_size, max_w
+
+    @given(weighted_churn_params())
+    @settings(
+        max_examples=6,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large],
+    )
+    def test_weighted_churn_engines_match_oracle_fuzz(params):
+        _run_weighted_churn_differential(*params)
 
 
 @pytest.mark.parametrize("config", tuple(CONFIGS))
@@ -357,8 +531,14 @@ def test_save_load_after_recycling_roundtrip(tmp_path):
     np.testing.assert_array_equal(m.cores(), expect)
     for e, m2 in loaded.items():
         np.testing.assert_array_equal(m.cores(), m2.cores(), e)
-        np.testing.assert_array_equal(m.labels(), m2.labels(), e)
+        if e not in WEIGHTED_CONFIGS:
+            np.testing.assert_array_equal(m.labels(), m2.labels(), e)
         assert m2.live_edges == len(live), e
+    # the weighted reloads (unit weights recovered from the unweighted
+    # checkpoint) share the renumber-once-per-batch label schedule
+    np.testing.assert_array_equal(
+        loaded["weighted"].labels(), loaded["weighted_sharded"].labels()
+    )
 
 
 def test_compact_then_grow_places_sharded_buffers_once():
@@ -573,6 +753,126 @@ _ROUNDTRIP_8DEV = textwrap.dedent(
     print("churn-roundtrip-8dev OK")
     """
 )
+
+
+_WEIGHTED_8DEV = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+
+    import repro  # enables x64
+    from repro.core.api import CoreMaintainer
+    from repro.core.weighted import weighted_core_oracle
+    from repro.graph.csr import build_csr
+    from repro.graph.generators import erdos_renyi
+    from repro.graph.stream import churn_stream
+
+    assert len(jax.devices()) == 8, jax.devices()
+    n = 40
+    g = erdos_renyi(n, 150, seed=4)
+    rng = np.random.default_rng(11)
+    w0 = rng.integers(1, 9, g.m)
+    cap = 4 * g.m + 64
+    mk = dict(capacity=cap, weighted=True, weights=w0)
+    engines = {
+        "unified": CoreMaintainer.from_graph(g, **mk),
+        "pallas": CoreMaintainer.from_graph(g, kernel_backend="pallas",
+                                            **mk),
+        "sharded": CoreMaintainer.from_graph(g, engine="sharded", **mk),
+        "range_sparse": CoreMaintainer.from_graph(
+            g, engine="sharded", vertex_sharding="range",
+            frontier_exchange="sparse", frontier_cap=8, **mk),
+        "halo_2x4": CoreMaintainer.from_graph(
+            g, engine="sharded", vertex_sharding="halo",
+            mesh_shape=(2, 4), **mk),
+    }
+
+    def norm(edges):
+        return [(int(min(a, b)), int(max(a, b))) for a, b in edges]
+
+    def oracle_state(live):
+        if not live:
+            return np.zeros(n, dtype=np.int64)
+        e = np.asarray(sorted(live), dtype=np.int64)
+        w = np.asarray([live[tuple(r)] for r in e], dtype=np.int64)
+        return weighted_core_oracle(n, e, w)
+
+    live = {e: int(w) for e, w in zip(norm(g.edge_array()), w0)}
+    events = list(churn_stream(g, 6, 16, seed=8))
+    for ev in events[:4]:
+        iw = rng.integers(1, 9, len(ev.edges))
+        for m in engines.values():
+            m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals,
+                          insert_weights=iw)
+        for e in norm(ev.removals):
+            live.pop(e, None)
+        for e, w in zip(norm(ev.edges), iw):
+            if e[0] != e[1] and e not in live:
+                live[e] = int(w)
+        expect = oracle_state(live)
+        ref = engines["unified"]
+        np.testing.assert_array_equal(ref.cores(), expect)
+        for name, m in engines.items():
+            np.testing.assert_array_equal(ref.cores(), m.cores(),
+                                          err_msg=name)
+            np.testing.assert_array_equal(ref.labels(), m.labels(),
+                                          err_msg=name)
+    # save FROM the sharded weighted table mid-churn (holes present),
+    # reload under both engines: the weight column rides the checkpoint
+    p = "/tmp/weighted_churn_8dev.npz"
+    engines["sharded"].save(p)
+    engines["reload_unified"] = CoreMaintainer.load(p, weighted=True)
+    engines["reload_sharded"] = CoreMaintainer.load(p, weighted=True,
+                                                    engine="sharded")
+    for ev in events[4:]:
+        iw = rng.integers(1, 9, len(ev.edges))
+        for m in engines.values():
+            m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals,
+                          insert_weights=iw)
+        for e in norm(ev.removals):
+            live.pop(e, None)
+        for e, w in zip(norm(ev.edges), iw):
+            if e[0] != e[1] and e not in live:
+                live[e] = int(w)
+    expect = oracle_state(live)
+    ref = engines["unified"]
+    np.testing.assert_array_equal(ref.cores(), expect)
+    for name, m in engines.items():
+        np.testing.assert_array_equal(ref.cores(), m.cores(), err_msg=name)
+        np.testing.assert_array_equal(ref.labels(), m.labels(),
+                                      err_msg=name)
+        wcol = np.asarray(m.w)
+        for e, slot in m.edge_slot.items():
+            assert int(wcol[slot]) == live[e], (name, e)
+    print("weighted-churn-8dev OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_weighted_churn_oracle_8dev(tmp_path):
+    """8 forced host devices: the weighted engine matrix (unified lax +
+    pallas, sharded replicated, range+sparse, 2x4 halo) under random
+    integer weights stays pinned to the peeling oracle — cores AND
+    labels — through dirty churn and a mid-churn save/load whose
+    checkpoint carries the weight column."""
+    script = tmp_path / "weighted8.py"
+    script.write_text(_WEIGHTED_8DEV)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    out = subprocess.run(
+        [sys.executable, str(script)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "weighted-churn-8dev OK" in out.stdout
 
 
 @pytest.mark.slow

@@ -1,0 +1,188 @@
+"""Regression tests for the temporal stream layer (graph/stream.py):
+``temporal_replay`` input validation + the equal-timestamp tie-crossing
+refusal, and ``sliding_window_stream`` expiry semantics (refresh,
+same-step roundtrip, drain invariant, tie-order independence) — plus an
+end-to-end replay through ``CoreMaintainer.apply_batch`` pinned to the
+BZ oracle on the live set after every step.
+"""
+import numpy as np
+import pytest
+
+from repro.core.api import CoreMaintainer
+from repro.core.oracle import bz_from_csr
+from repro.graph.csr import build_csr
+from repro.graph.stream import sliding_window_stream, temporal_replay
+
+
+# -- temporal_replay: validation --------------------------------------------
+
+def test_temporal_replay_rejects_mx2_shape():
+    """A [m, 2] edge list used to slip through with vertex ids replayed
+    as timestamps; it must be refused up front."""
+    edges = np.asarray([[0, 1], [1, 2]], dtype=np.int64)
+    with pytest.raises(ValueError, match=r"shape \[m, 3\]"):
+        list(temporal_replay(edges, batch_size=2))
+
+
+def test_temporal_replay_rejects_float_timestamps():
+    ewt = np.asarray([[0, 1, 0.5], [1, 2, 1.5]])
+    with pytest.raises(ValueError, match="integer dtype"):
+        list(temporal_replay(ewt, batch_size=2))
+
+
+def test_temporal_replay_rejects_bad_batch_size():
+    ewt = np.asarray([[0, 1, 0]], dtype=np.int64)
+    with pytest.raises(ValueError, match="batch_size"):
+        list(temporal_replay(ewt, batch_size=0))
+
+
+def test_sliding_window_rejects_malformed_input():
+    with pytest.raises(ValueError, match=r"shape \[m, 3\]"):
+        list(sliding_window_stream(np.zeros((3, 2), np.int64), window=2))
+    with pytest.raises(ValueError, match="integer dtype"):
+        list(sliding_window_stream(np.zeros((3, 3)), window=2))
+    ewt = np.asarray([[0, 1, 0]], dtype=np.int64)
+    with pytest.raises(ValueError, match="window"):
+        list(sliding_window_stream(ewt, window=0))
+    with pytest.raises(ValueError, match="stride"):
+        list(sliding_window_stream(ewt, window=2, stride=0))
+
+
+# -- temporal_replay: stable sort + tie-crossing refusal --------------------
+
+_TIED = np.asarray(
+    [[0, 1, 5], [2, 3, 1], [4, 5, 1], [6, 7, 1]], dtype=np.int64
+)  # unsorted; three rows tied at t=1
+
+
+def test_temporal_replay_refuses_tie_crossing_batch_boundary():
+    """Unsorted input + a t=1 tie straddling the batch_size=2 boundary:
+    which tied edge lands in the earlier batch would be an artifact of
+    file order, so the replay refuses and names the timestamp."""
+    with pytest.raises(ValueError, match="equal-timestamp"):
+        list(temporal_replay(_TIED, batch_size=2))
+    with pytest.raises(ValueError, match="t=1"):
+        list(temporal_replay(_TIED, batch_size=2))
+
+
+def test_temporal_replay_allows_ties_kept_in_one_batch():
+    """The same unsorted input is fine when the batch size keeps the
+    tied run together — and the stable sort replays the tied rows in
+    input order."""
+    events = list(temporal_replay(_TIED, batch_size=3))
+    assert [ev.t for ev in events] == [1, 5]
+    np.testing.assert_array_equal(
+        events[0].edges, [[2, 3], [4, 5], [6, 7]]  # input order kept
+    )
+    np.testing.assert_array_equal(events[1].edges, [[0, 1]])
+    assert all(ev.kind == "insert" for ev in events)
+
+
+def test_temporal_replay_presorted_ties_may_cross():
+    """Pre-sorted input is the caller's OWN deterministic tie order, so
+    a tie crossing a batch boundary is allowed — and the stable sort
+    guarantees the batches reproduce the input order exactly."""
+    presorted = _TIED[np.argsort(_TIED[:, 2], kind="stable")]
+    events = list(temporal_replay(presorted, batch_size=2))
+    assert [len(ev.edges) for ev in events] == [2, 2]
+    np.testing.assert_array_equal(events[0].edges, [[2, 3], [4, 5]])
+    np.testing.assert_array_equal(events[1].edges, [[6, 7], [0, 1]])
+
+
+# -- sliding_window_stream: expiry semantics --------------------------------
+
+def _drain_totals(events):
+    ins = sum(len(ev.edges) for ev in events)
+    rm = sum(len(ev.removals) for ev in events)
+    return ins, rm
+
+
+def test_sliding_window_same_step_roundtrip():
+    """An edge expiring in the same step its re-arrival lands round-trips
+    through ONE mixed event (removal + insertion — the engine's
+    same-batch slot-recycling path), and the stream drains."""
+    ewt = np.asarray([[0, 1, 0], [0, 1, 3]], dtype=np.int64)
+    events = list(sliding_window_stream(ewt, window=2, stride=2))
+    assert [ev.t for ev in events] == [2, 4, 6]
+    assert all(ev.kind == "mixed" for ev in events)
+    # t=4: the t=0 arrival expired AND the t=3 arrival re-inserts
+    assert len(events[1].edges) == len(events[1].removals) == 1
+    ins, rm = _drain_totals(events)
+    assert ins == rm == 2
+
+
+def test_sliding_window_rearrival_refreshes_age():
+    """A re-arrival of a LIVE edge does not re-insert it — it refreshes
+    the age, pushing expiry out to the latest arrival + window."""
+    ewt = np.asarray([[0, 1, 0], [0, 1, 1]], dtype=np.int64)
+    events = list(sliding_window_stream(ewt, window=3, stride=1))
+    ins, rm = _drain_totals(events)
+    assert ins == rm == 1  # one logical edge: one insert, one expiry
+    assert events[-1].t == 4  # expiry keyed off the t=1 refresh, not t=0
+
+
+def test_sliding_window_drops_self_loops_and_dedups_in_step():
+    ewt = np.asarray(
+        [[2, 2, 0], [0, 1, 0], [1, 0, 1], [3, 4, 1]], dtype=np.int64
+    )
+    events = list(sliding_window_stream(ewt, window=4, stride=4))
+    # one step of arrivals: (0,1) once (the t=1 duplicate refreshes it),
+    # (3,4) once, the self-loop never
+    assert sorted(map(tuple, events[0].edges)) == [(0, 1), (3, 4)]
+    ins, rm = _drain_totals(events)
+    assert ins == rm == 2
+
+
+def test_sliding_window_tie_order_independent():
+    """Timestamps only gate which step an edge joins, so shuffling the
+    input rows (including equal-timestamp ties) cannot change the event
+    sequence — unlike temporal_replay there is nothing to refuse."""
+    rng = np.random.default_rng(3)
+    ewt = np.stack(
+        [rng.integers(0, 20, 120), rng.integers(0, 20, 120),
+         rng.integers(0, 12, 120)], axis=1,
+    ).astype(np.int64)
+    ref = list(sliding_window_stream(ewt, window=4, stride=2))
+    shuffled = ewt[rng.permutation(len(ewt))]
+    got = list(sliding_window_stream(shuffled, window=4, stride=2))
+    assert [ev.t for ev in got] == [ev.t for ev in ref]
+    for a, b in zip(got, ref):
+        assert sorted(map(tuple, a.edges)) == sorted(map(tuple, b.edges))
+        assert sorted(map(tuple, a.removals)) == \
+            sorted(map(tuple, b.removals))
+
+
+def test_sliding_window_empty_input_yields_nothing():
+    assert list(sliding_window_stream(np.zeros((0, 3), np.int64),
+                                      window=2)) == []
+
+
+def test_sliding_window_drains_through_engine():
+    """End-to-end: replay a random temporal stream through the unified
+    engine (removals first — apply_batch's order), checking cores
+    against BZ on a live-set mirror after every event; after the last
+    event the graph is empty and every core is zero."""
+    n = 16
+    rng = np.random.default_rng(7)
+    ewt = np.stack(
+        [rng.integers(0, n, 150), rng.integers(0, n, 150),
+         rng.integers(0, 10, 150)], axis=1,
+    ).astype(np.int64)
+    events = list(sliding_window_stream(ewt, window=3, stride=1))
+    m = CoreMaintainer.from_graph(
+        build_csr(n, np.zeros((0, 2), np.int64)), capacity=512
+    )
+    live = set()
+    for ev in events:
+        m.apply_batch(insert_edges=ev.edges, remove_edges=ev.removals)
+        for e in map(tuple, ev.removals):
+            live.discard(e)
+        for e in map(tuple, ev.edges):
+            live.add(e)
+        expect = bz_from_csr(
+            build_csr(n, np.asarray(sorted(live), dtype=np.int64))
+        )
+        np.testing.assert_array_equal(m.cores(), expect)
+    assert not live
+    assert m.live_edges == 0
+    assert not m.cores().any()
